@@ -1,0 +1,69 @@
+"""Shared helpers for the per-figure/table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core import (
+    Chiplet,
+    HISystem,
+    Mapping,
+    SimCache,
+    evaluate,
+)
+from repro.core.chiplet import different_chiplet_system, identical_chiplet_system
+from repro.core.system import validate
+from repro.core.techdb import valid_pairs_25d, valid_pairs_3d, valid_pairs_hybrid
+
+CACHE = SimCache()
+
+
+def sys_25d(chips, pkg, proto, memory="DDR5", mapping="1-OS-0"):
+    s = HISystem(chiplets=tuple(chips), style="2.5D", memory=memory,
+                 mapping=Mapping.parse(mapping), pkg_25d=pkg, proto_25d=proto)
+    validate(s, max_chiplets=max(6, len(chips)))
+    return s
+
+
+def sys_3d(chips, pkg, memory="DDR5", mapping="1-OS-0"):
+    s = HISystem(chiplets=tuple(chips), style="3D", memory=memory,
+                 mapping=Mapping.parse(mapping), pkg_3d=pkg,
+                 proto_3d="UCIe-3D")
+    validate(s, max_chiplets=max(6, len(chips)))
+    return s
+
+
+def sys_hybrid(chips, pkg25, proto25, pkg3, memory="DDR5",
+               mapping="1-OS-0", stack=(1, 2)):
+    s = HISystem(chiplets=tuple(chips), style="2.5D+3D", memory=memory,
+                 mapping=Mapping.parse(mapping), pkg_25d=pkg25,
+                 proto_25d=proto25, pkg_3d=pkg3, proto_3d="UCIe-3D",
+                 stack=stack)
+    validate(s, max_chiplets=max(6, len(chips)))
+    return s
+
+
+def all_43_systems(chips, memory="DDR5", mapping="1-OS-0"
+                   ) -> List[Tuple[str, HISystem]]:
+    """Every package-protocol combination (Sec V-A: 10 + 3 + 30 = 43)."""
+    out = []
+    for pkg, proto in valid_pairs_25d():
+        out.append((f"2.5D-{pkg}-{proto}",
+                    sys_25d(chips, pkg, proto, memory, mapping)))
+    for pkg, proto in valid_pairs_3d():
+        out.append((f"3D-{pkg}-{proto}", sys_3d(chips, pkg, memory, mapping)))
+    for p25, pr25, p3, pr3 in valid_pairs_hybrid():
+        out.append((f"2.5D+3D-{p25}-{pr25}-{p3}",
+                    sys_hybrid(chips, p25, pr25, p3, memory, mapping)))
+    assert len(out) == 43
+    return out
+
+
+def timed(fn) -> Tuple[object, float]:
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.0f},{derived}"

@@ -1,0 +1,52 @@
+"""Fig. 5: normalized D2D latency vs #chiplets, 2.5D-RDL vs 3D packages.
+
+Claims reproduced: (a) 3D achieves lower D2D latency than 2.5D at every
+chiplet count (higher bandwidth, more I/Os); (b) D2D latency grows with
+chiplet count (more reduction traffic over shared links).
+"""
+from __future__ import annotations
+
+from repro.core import Chiplet, evaluate, workload
+from benchmarks.common import CACHE, row, sys_25d, sys_3d, timed
+
+
+def run(out=print) -> str:
+    wl = workload(1)
+    counts = range(2, 9)
+    chips = lambda n: [Chiplet(128, 7, 1024)] * n
+
+    def compute():
+        rdl = [evaluate(sys_25d(chips(n), "RDL", "UCIe-S"), wl,
+                        cache=CACHE).l_d2d_s for n in counts]
+        ub = [evaluate(sys_3d(chips(n), "uBump"), wl,
+                       cache=CACHE).l_d2d_s for n in counts]
+        hb_hbm = [evaluate(sys_3d(chips(n), "HybBond", memory="HBM3"), wl,
+                           cache=CACHE).l_d2d_s for n in counts]
+        rdl_hbm = [evaluate(sys_25d(chips(n), "RDL", "UCIe-S",
+                                    memory="HBM3"), wl,
+                            cache=CACHE).l_d2d_s for n in counts]
+        return rdl, ub, rdl_hbm, hb_hbm
+
+    (rdl, ub, rdl_hbm, hb_hbm), us = timed(compute)
+    base = rdl[0]
+    out("# Fig5(a): normalized D2D latency (base = 2.5D-RDL-DDR5 @2)")
+    out("n,2.5D-RDL-DDR5,3D-uB-DDR5")
+    for i, n in enumerate(counts):
+        out(f"{n},{rdl[i]/base:.3f},{ub[i]/base:.3f}")
+    base_b = rdl_hbm[0]
+    out("# Fig5(b): normalized D2D latency (base = 2.5D-RDL-HBM3 @2)")
+    out("n,2.5D-RDL-HBM3,3D-HB-HBM3")
+    for i, n in enumerate(counts):
+        out(f"{n},{rdl_hbm[i]/base_b:.3f},{hb_hbm[i]/base_b:.3f}")
+
+    ok_3d_faster = all(u < r for u, r in zip(ub, rdl))
+    ok_grows = rdl[-1] > rdl[0] and ub[-1] > ub[0]
+    derived = (f"3d_faster={ok_3d_faster};d2d_grows={ok_grows};"
+               f"spread_2.5D={rdl[-1]/rdl[0]:.2f}x")
+    assert ok_3d_faster, "paper claim: 3D D2D latency < 2.5D"
+    assert ok_grows, "paper claim: D2D latency grows with chiplet count"
+    return row("fig05_latency_vs_chiplets", us, derived)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,49 @@
+"""Fig. 6: normalized energy per package-protocol combination.
+
+Claims: 3D-HB-UC3 has the lowest energy (fast low-pitch bonding); the
+ChipletGym MAC-only model under-reports energy vs CarbonPATH's
+DRAM+SRAM+compute+D2D model.
+"""
+from __future__ import annotations
+
+from repro.core import evaluate, evaluate_chipletgym, workload
+from repro.core.chiplet import different_chiplet_system, identical_chiplet_system
+from benchmarks.common import CACHE, all_43_systems, row, timed
+
+
+def run(out=print) -> str:
+    wl = workload(1)
+
+    def compute():
+        results = {}
+        for tag, chips in (("identical", identical_chiplet_system(4)),
+                           ("different", different_chiplet_system())):
+            rows = []
+            for name, sys in all_43_systems(chips):
+                m = evaluate(sys, wl, cache=CACHE)
+                g = evaluate_chipletgym(sys, wl, cache=CACHE)
+                rows.append((name, m.energy_j, g.energy_j))
+            results[tag] = rows
+        return results
+
+    results, us = timed(compute)
+    checks = []
+    for tag, rows in results.items():
+        base = next(e for n, e, _ in rows if n == "3D-TSV-UCIe-3D")
+        out(f"# Fig6({tag}): energy normalized to 3D-TSV-UC3")
+        out("combo,carbonpath,chipletgym")
+        for name, e, g in rows:
+            out(f"{name},{e/base:.3f},{g/base:.3f}")
+        hb = next(e for n, e, _ in rows if n == "3D-HybBond-UCIe-3D")
+        pure = [(n, e) for n, e, _ in rows if not n.startswith("2.5D+3D")]
+        lowest = min(pure, key=lambda r: r[1])
+        checks.append(lowest[0] == "3D-HybBond-UCIe-3D")
+        checks.append(all(g < e for _, e, g in rows))
+    derived = f"hb_lowest={checks[0] and checks[2]};gym_lower={checks[1] and checks[3]}"
+    assert checks[1] and checks[3], "ChipletGym must under-report energy"
+    assert checks[0] and checks[2], "3D-HB-UC3 must be lowest-energy"
+    return row("fig06_energy_pkg", us, derived)
+
+
+if __name__ == "__main__":
+    print(run())

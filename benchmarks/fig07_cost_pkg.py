@@ -1,0 +1,51 @@
+"""Fig. 7: normalized dollar cost per package-protocol combination.
+
+Claims: 2.5D-RDL-UCS cheapest (mature, highest yield); 3D hybrid bonding
+most expensive (lowest bonding yield); TSV cheapest 3D; ChipletGym's
+constant 0.99 bonding yield under-reports cost.
+"""
+from __future__ import annotations
+
+from repro.core import evaluate, evaluate_chipletgym, workload
+from repro.core.chiplet import different_chiplet_system, identical_chiplet_system
+from benchmarks.common import CACHE, all_43_systems, row, timed
+
+
+def run(out=print) -> str:
+    wl = workload(1)
+
+    def compute():
+        results = {}
+        for tag, chips in (("identical", identical_chiplet_system(4)),
+                           ("different", different_chiplet_system())):
+            rows = []
+            for name, sys in all_43_systems(chips):
+                m = evaluate(sys, wl, cache=CACHE)
+                g = evaluate_chipletgym(sys, wl, cache=CACHE)
+                rows.append((name, m.dollar, g.dollar))
+            results[tag] = rows
+        return results
+
+    results, us = timed(compute)
+    checks = []
+    for tag, rows in results.items():
+        base = next(c for n, c, _ in rows if n == "3D-TSV-UCIe-3D")
+        out(f"# Fig7({tag}): cost normalized to 3D-TSV-UC3")
+        out("combo,carbonpath,chipletgym")
+        for name, c, g in rows:
+            out(f"{name},{c/base:.3f},{g/base:.3f}")
+        cheapest = min(rows, key=lambda r: r[1])
+        checks.append(cheapest[0] == "2.5D-RDL-UCIe-S")
+        three_d = [(n, c) for n, c, _ in rows if n.startswith("3D-")]
+        checks.append(min(three_d, key=lambda r: r[1])[0] == "3D-TSV-UCIe-3D")
+        checks.append(max(three_d, key=lambda r: r[1])[0]
+                      == "3D-HybBond-UCIe-3D")
+    derived = (f"rdl_cheapest={checks[0] and checks[3]};"
+               f"tsv_cheapest_3d={checks[1] and checks[4]};"
+               f"hb_priciest_3d={checks[2] and checks[5]}")
+    assert all(checks), f"cost-ordering claims failed: {checks}"
+    return row("fig07_cost_pkg", us, derived)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,51 @@
+"""Fig. 8: latency vs dollar-cost scatter over all 43 pairs.
+
+Claims: 3D/hybrid occupy the low-latency (higher-cost) region; 2.5D the
+low-cost side; ~10x latency spread between min and max points.
+"""
+from __future__ import annotations
+
+from repro.core import evaluate, workload
+from repro.core.chiplet import different_chiplet_system
+from benchmarks.common import CACHE, all_43_systems, row, timed
+
+
+def run(out=print) -> str:
+    wl = workload(1)
+
+    def compute():
+        rows = []
+        for name, sys in all_43_systems(different_chiplet_system()):
+            m = evaluate(sys, wl, cache=CACHE)
+            rows.append((name, m.latency_s, m.dollar))
+        return rows
+
+    rows, us = timed(compute)
+    base_l = next(l for n, l, _ in rows if n == "2.5D-RDL-UCIe-S")
+    base_c = next(c for n, _, c in rows if n == "2.5D-RDL-UCIe-S")
+    out("# Fig8: latency vs cost, normalized to 2.5D-RDL-UCS")
+    out("combo,latency,cost")
+    for name, l, c in rows:
+        out(f"{name},{l/base_l:.3f},{c/base_c:.3f}")
+
+    lats = [l for _, l, _ in rows]
+    spread = max(lats) / min(lats)
+    lat_25d = [l for n, l, _ in rows if n.startswith("2.5D-")]
+    lat_3d = [l for n, l, _ in rows if n.startswith("3D-")]
+    cost_25d = [c for n, _, c in rows if n.startswith("2.5D-")]
+    cost_3d = [c for n, _, c in rows if n.startswith("3D-")]
+    ok_3d_fast = (sum(lat_3d) / len(lat_3d)) < (sum(lat_25d) / len(lat_25d))
+    ok_3d_costly = (sum(cost_3d) / len(cost_3d)) > (sum(cost_25d)
+                                                    / len(cost_25d))
+    derived = (f"latency_spread={spread:.1f}x;3d_faster_avg={ok_3d_fast};"
+               f"3d_pricier_avg={ok_3d_costly}")
+    # The paper reports ~10x; the spread is calibration-dependent (it
+    # grows with the D2D share of total latency). We assert the direction
+    # and record the magnitude (see EXPERIMENTS.md for the discussion).
+    assert spread > 1.5, f"packaging must matter: got {spread:.1f}x"
+    assert ok_3d_fast and ok_3d_costly
+    return row("fig08_latency_cost_scatter", us, derived)
+
+
+if __name__ == "__main__":
+    print(run())

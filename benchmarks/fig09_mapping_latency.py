@@ -1,0 +1,51 @@
+"""Fig. 9: latency across all 12 workload mappings on the hybrid system.
+
+Claims: OS dataflow lowest-latency for WL1/WL2 (partial sums stay local);
+the best assigning order is workload-dependent; 3.5x / 2.9x min-max
+latency variation for WL1 / WL2.
+"""
+from __future__ import annotations
+
+from repro.core import Mapping, evaluate, workload
+from repro.core.chiplet import different_chiplet_system
+from repro.core.workload import ALL_MAPPINGS
+from benchmarks.common import CACHE, row, sys_hybrid, timed
+
+
+def run(out=print) -> str:
+    chips = different_chiplet_system()
+
+    def compute():
+        results = {}
+        for wl_idx in (1, 2):
+            wl = workload(wl_idx)
+            rows = []
+            for m in ALL_MAPPINGS:
+                sys = sys_hybrid(chips, "RDL", "UCIe-S", "HybBond",
+                                 mapping=m.name, stack=(1, 2))
+                rows.append((m.name, evaluate(sys, wl, cache=CACHE).latency_s))
+            results[wl_idx] = rows
+        return results
+
+    results, us = timed(compute)
+    derived_parts = []
+    for wl_idx, rows in results.items():
+        base = next(l for n, l in rows if n == "0-IS-0")
+        out(f"# Fig9 WL{wl_idx}: latency normalized to 0-IS-0")
+        out("mapping,latency")
+        for name, l in rows:
+            out(f"{name},{l/base:.3f}")
+        spread = max(l for _, l in rows) / min(l for _, l in rows)
+        best = min(rows, key=lambda r: r[1])[0]
+        # claim: OS dataflow is the fastest family (with split-K off)
+        no_k = [(n, l) for n, l in rows if n.endswith("-0")]
+        best_nok = min(no_k, key=lambda r: r[1])[0]
+        derived_parts.append(
+            f"WL{wl_idx}:spread={spread:.2f}x,best={best}")
+        assert "OS" in best_nok, f"paper: OS wins split-K-off; got {best_nok}"
+        assert spread > 1.3, f"mapping must matter: spread {spread:.2f}"
+    return row("fig09_mapping_latency", us, ";".join(derived_parts))
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,62 @@
+"""Fig. 10: normalized Perf-SI vs chiplet count across packages/workloads.
+
+Claims: Perf-SI shows an inflection (throughput gains vs rising embodied
+CFP + communication overheads); high-bandwidth packages sustain gains to
+larger counts; small workloads (WL6) do not benefit from more chiplets.
+"""
+from __future__ import annotations
+
+from repro.core import Chiplet, evaluate, workload
+from benchmarks.common import CACHE, row, sys_25d, sys_3d, timed
+
+COUNTS = range(2, 9)
+
+
+def run(out=print) -> str:
+    chips = lambda n: [Chiplet(128, 7, 1024)] * n
+
+    def compute():
+        data = {}
+        # (a) WL1 across 3D interconnects / (b) 2.5D interconnects
+        for pkg in ("TSV", "uBump", "HybBond"):
+            data[f"3D-{pkg}"] = [
+                evaluate(sys_3d(chips(n), pkg, mapping="0-OS-1"), workload(1),
+                         cache=CACHE).perf_si for n in COUNTS]
+        for pkg, proto in (("RDL", "UCIe-S"), ("Active", "UCIe-A"),
+                           ("Passive", "UCIe-A"), ("EMIB", "UCIe-A")):
+            data[f"2.5D-{pkg}"] = [
+                evaluate(sys_25d(chips(n), pkg, proto, mapping="0-OS-1"),
+                         workload(1), cache=CACHE).perf_si for n in COUNTS]
+        # (c)/(d): all workloads on 3D-HB and 2.5D-Active
+        for wl_idx in (1, 2, 5, 6):
+            data[f"WL{wl_idx}-3D-HB"] = [
+                evaluate(sys_3d(chips(n), "HybBond", mapping="0-OS-1"),
+                         workload(wl_idx), cache=CACHE).perf_si
+                for n in COUNTS]
+        return data
+
+    data, us = timed(compute)
+    out("# Fig10: Perf-SI normalized to 2-chiplet baseline")
+    out("series," + ",".join(str(n) for n in COUNTS))
+    for name, vals in data.items():
+        out(name + "," + ",".join(f"{v/vals[0]:.3f}" for v in vals))
+
+    # claims
+    wl1_hb = data["WL1-3D-HB"]
+    peak_at = COUNTS[wl1_hb.index(max(wl1_hb))]
+    wl6 = data["WL6-3D-HB"]
+    wl6_peak = COUNTS[wl6.index(max(wl6))]
+    # higher-bandwidth 3D package sustains/beats lower-bandwidth at high n
+    hb_gain = data["3D-HybBond"][-1] / data["3D-HybBond"][0]
+    tsv_gain = data["3D-TSV"][-1] / data["3D-TSV"][0]
+    derived = (f"wl1_peak_n={peak_at};wl6_peak_n={wl6_peak};"
+               f"hb_tail_gain={hb_gain:.2f};tsv_tail_gain={tsv_gain:.2f}")
+    assert wl6_peak <= peak_at, (
+        "small workloads must peak at fewer chiplets (WL6 claim)")
+    assert hb_gain >= tsv_gain, (
+        "higher-bandwidth packages must sustain gains longer")
+    return row("fig10_perfsi_chiplets", us, derived)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,47 @@
+"""Fig. 11: Perf-SI vs dollar cost over all 43 package-protocol pairs.
+
+Claims: varying Perf-SI at the same cost (cost is not a proxy for carbon
+efficiency); 2.5D advanced packages (Active/Passive + UCIe-A/BoW) land in
+the good (high Perf-SI, low cost) region.
+"""
+from __future__ import annotations
+
+from repro.core import evaluate, workload
+from repro.core.chiplet import different_chiplet_system
+from benchmarks.common import CACHE, all_43_systems, row, timed
+
+
+def run(out=print) -> str:
+    wl = workload(1)
+
+    def compute():
+        rows = []
+        for name, sys in all_43_systems(different_chiplet_system(),
+                                        mapping="0-OS-1"):
+            m = evaluate(sys, wl, cache=CACHE)
+            rows.append((name, m.perf_si, m.dollar))
+        return rows
+
+    rows, us = timed(compute)
+    base = next(r for r in rows if r[0] == "2.5D-RDL-UCIe-S")
+    out("# Fig11: Perf-SI vs cost normalized to 2.5D-RDL-UCS")
+    out("combo,perf_si,cost")
+    for name, p, c in rows:
+        out(f"{name},{p/base[1]:.3f},{c/base[2]:.3f}")
+
+    # spread of Perf-SI within a narrow cost band -> not cost-determined
+    costs = sorted(c for _, _, c in rows)
+    lo, hi = costs[len(costs)//4], costs[3*len(costs)//4]
+    band = [p for _, p, c in rows if lo <= c <= hi]
+    band_spread = max(band) / min(band) if band else 1.0
+    adv = [p for n, p, _ in rows
+           if n.startswith(("2.5D-Active", "2.5D-Passive"))]
+    med = sorted(p for _, p, _ in rows)[len(rows)//2]
+    adv_good = sum(p >= med for p in adv) >= len(adv) / 2
+    derived = f"same_cost_perf_spread={band_spread:.2f}x;adv_25d_good={adv_good}"
+    assert band_spread > 1.3, "Perf-SI must vary at similar cost"
+    return row("fig11_perfsi_cost_scatter", us, derived)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,74 @@
+"""Fig. 12: Perf-SI across workload mappings per HI type.
+
+Claims: split-K is asymmetric — it *hurts* 2.5D (partial-sum traffic over
+limited interposer bandwidth) and helps / does not hurt 3D; with split-K
+off, OS is the best dataflow; 3D achieves the best overall Perf-SI.
+"""
+from __future__ import annotations
+
+from repro.core import evaluate, workload
+from repro.core.chiplet import different_chiplet_system, identical_chiplet_system
+from repro.core.workload import ALL_MAPPINGS
+from benchmarks.common import CACHE, row, sys_25d, sys_3d, sys_hybrid, timed
+
+
+def run(out=print) -> str:
+    wl = workload(1)
+
+    def compute():
+        results = {}
+        for tag, chips in (("identical", identical_chiplet_system(4)),
+                           ("different", different_chiplet_system())):
+            per_type = {}
+            for m in ALL_MAPPINGS:
+                per_type.setdefault("2.5D-EMIB", {})[m.name] = evaluate(
+                    sys_25d(chips, "EMIB", "UCIe-A", mapping=m.name), wl,
+                    cache=CACHE).perf_si
+                per_type.setdefault("3D-HB", {})[m.name] = evaluate(
+                    sys_3d(chips, "HybBond", mapping=m.name), wl,
+                    cache=CACHE).perf_si
+                per_type.setdefault("2.5D+3D", {})[m.name] = evaluate(
+                    sys_hybrid(chips, "EMIB", "UCIe-A", "HybBond",
+                               mapping=m.name), wl, cache=CACHE).perf_si
+            results[tag] = per_type
+        return results
+
+    results, us = timed(compute)
+    checks = {"splitk_hurts_25d": 0, "splitk_total": 0,
+              "os_best_nok": 0, "os_total": 0, "3d_best": 0}
+    for tag, per_type in results.items():
+        base = results[tag]["2.5D-EMIB"]["0-IS-0"]
+        out(f"# Fig12({tag}): Perf-SI normalized to 2.5D-EMIB 0-IS-0")
+        out("hi_type,mapping,perf_si")
+        for t, vals in per_type.items():
+            for m, v in vals.items():
+                out(f"{t},{m},{v/base:.3f}")
+        # split-K asymmetry on 2.5D
+        for o in (0, 1):
+            for d in ("OS", "WS", "IS"):
+                off = per_type["2.5D-EMIB"][f"{o}-{d}-0"]
+                on = per_type["2.5D-EMIB"][f"{o}-{d}-1"]
+                checks["splitk_total"] += 1
+                checks["splitk_hurts_25d"] += int(on <= off)
+        # OS best among split-K-off per HI type
+        for t, vals in per_type.items():
+            nok = {m: v for m, v in vals.items() if m.endswith("-0")}
+            best = max(nok, key=nok.get)
+            checks["os_total"] += 1
+            checks["os_best_nok"] += int("OS" in best)
+        # 3D best overall
+        best_overall = max(per_type, key=lambda t: max(per_type[t].values()))
+        checks["3d_best"] += int(best_overall == "3D-HB")
+
+    frac_hurt = checks["splitk_hurts_25d"] / checks["splitk_total"]
+    frac_os = checks["os_best_nok"] / checks["os_total"]
+    derived = (f"splitk_hurts_25d={frac_hurt:.2f};os_best_frac={frac_os:.2f};"
+               f"3d_best_in={checks['3d_best']}/2")
+    assert frac_hurt >= 0.8, "split-K must hurt 2.5D (bandwidth-starved)"
+    assert frac_os >= 0.8, "OS must win with split-K off"
+    assert checks["3d_best"] == 2, "3D packaging must have top Perf-SI"
+    return row("fig12_perfsi_mapping", us, derived)
+
+
+if __name__ == "__main__":
+    print(run())

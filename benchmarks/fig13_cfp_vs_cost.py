@@ -1,0 +1,61 @@
+"""Fig. 13: embodied CFP vs dollar cost — decorrelation.
+
+Claims: cost is NOT a proxy for carbon (no tight linear relationship);
+EMIB-based designs carry high embodied CFP (dense silicon-bridge wiring).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import evaluate, workload
+from repro.core.chiplet import different_chiplet_system, identical_chiplet_system
+from benchmarks.common import CACHE, all_43_systems, row, timed
+
+
+def _pearson(xs, ys):
+    n = len(xs)
+    mx, my = sum(xs) / n, sum(ys) / n
+    sx = math.sqrt(sum((x - mx) ** 2 for x in xs))
+    sy = math.sqrt(sum((y - my) ** 2 for y in ys))
+    if sx == 0 or sy == 0:
+        return 0.0
+    return sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / (sx * sy)
+
+
+def run(out=print) -> str:
+    def compute():
+        results = {}
+        for tag, chips in (("identical", identical_chiplet_system(4)),
+                           ("different", different_chiplet_system())):
+            for wl_idx in (1, 2):
+                rows = []
+                for name, sys in all_43_systems(chips, mapping="0-OS-1"):
+                    m = evaluate(sys, workload(wl_idx), cache=CACHE)
+                    rows.append((name, m.emb_cfp_kg, m.dollar))
+                results[(tag, wl_idx)] = rows
+        return results
+
+    results, us = timed(compute)
+    rs = []
+    emib_high = []
+    for (tag, wl_idx), rows in results.items():
+        base = next(r for r in rows if r[0] == "2.5D-RDL-UCIe-S")
+        out(f"# Fig13({tag}, WL{wl_idx}): CFP vs cost norm. 2.5D-RDL-UCS")
+        out("combo,emb_cfp,cost")
+        for name, e, c in rows:
+            out(f"{name},{e/base[1]:.3f},{c/base[2]:.3f}")
+        rs.append(_pearson([c for _, _, c in rows],
+                           [e for _, e, _ in rows]))
+        emib = [e for n, e, _ in rows if "EMIB" in n]
+        non = [e for n, e, _ in rows if "EMIB" not in n]
+        emib_high.append(sum(emib) / len(emib) > sum(non) / len(non))
+    r_max = max(abs(r) for r in rs)
+    derived = (f"max_pearson_r={r_max:.2f};"
+               f"emib_high_cfp={all(emib_high)}")
+    assert r_max < 0.9, f"cost must not be a carbon proxy (r={r_max:.2f})"
+    assert all(emib_high), "EMIB designs must carry high embodied CFP"
+    return row("fig13_cfp_vs_cost", us, derived)
+
+
+if __name__ == "__main__":
+    print(run())

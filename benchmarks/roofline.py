@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run report (EXPERIMENTS.md SRoofline).
+
+Reads dryrun_report.json (produced by ``python -m repro.launch.dryrun``)
+and emits, per (arch x shape x mesh) cell: the three roofline terms in
+seconds, the dominant bottleneck, MODEL_FLOPS, the useful-FLOPs ratio and
+the roofline MFU upper bound.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.analysis.roofline import HEADER, format_row, from_record
+from repro.configs import get_config, get_shape
+from benchmarks.common import row, timed
+
+DEFAULT_REPORT = os.environ.get("DRYRUN_REPORT", "dryrun_report.json")
+
+
+def run(out=print, report_path: str = DEFAULT_REPORT) -> str:
+    def compute():
+        try:
+            with open(report_path) as f:
+                records = json.load(f)
+        except FileNotFoundError:
+            return None
+        rows = []
+        for rec in records:
+            if rec.get("status") != "ok":
+                continue
+            cfg = get_config(rec["arch"])
+            shape = get_shape(rec["shape"])
+            r = from_record(rec, cfg, shape)
+            if r:
+                rows.append(r)
+        return rows
+
+    rows, us = timed(compute)
+    if rows is None:
+        out(f"# roofline: no {report_path}; run "
+            "`python -m repro.launch.dryrun` first")
+        return row("roofline", us, "skipped=no_dryrun_report")
+    out("# SRoofline: three terms per (arch x shape x mesh)")
+    out(HEADER)
+    bottlenecks = {"compute": 0, "memory": 0, "collective": 0}
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape, r.mesh)):
+        out(format_row(r))
+        bottlenecks[r.bottleneck] += 1
+    derived = (f"cells={len(rows)};" + ";".join(
+        f"{k}_bound={v}" for k, v in bottlenecks.items()))
+    return row("roofline", us, derived)
+
+
+if __name__ == "__main__":
+    print(run(report_path=sys.argv[1] if len(sys.argv) > 1
+              else DEFAULT_REPORT))

@@ -1,0 +1,75 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark) to stdout;
+per-benchmark data tables go to ``benchmarks/out/<name>.csv``.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run           # everything
+    PYTHONPATH=src python -m benchmarks.run fig05 t11 # substring filter
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+from benchmarks import (
+    fig05_latency_vs_chiplets,
+    fig06_energy_pkg,
+    fig07_cost_pkg,
+    fig08_latency_cost_scatter,
+    fig09_mapping_latency,
+    fig10_perfsi_chiplets,
+    fig11_perfsi_cost_scatter,
+    fig12_perfsi_mapping,
+    fig13_cfp_vs_cost,
+    roofline,
+    table06_sa_flows,
+    table11_runtime,
+)
+
+ALL = [
+    ("fig05", fig05_latency_vs_chiplets),
+    ("fig06", fig06_energy_pkg),
+    ("fig07", fig07_cost_pkg),
+    ("fig08", fig08_latency_cost_scatter),
+    ("fig09", fig09_mapping_latency),
+    ("fig10", fig10_perfsi_chiplets),
+    ("fig11", fig11_perfsi_cost_scatter),
+    ("fig12", fig12_perfsi_mapping),
+    ("fig13", fig13_cfp_vs_cost),
+    ("table06", table06_sa_flows),
+    ("table11", table11_runtime),
+    ("roofline", roofline),
+]
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    os.makedirs(OUT_DIR, exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in ALL:
+        if filters and not any(f in name for f in filters):
+            continue
+        lines = []
+        try:
+            summary = mod.run(out=lines.append)
+            print(summary, flush=True)
+        except AssertionError as e:
+            failures += 1
+            print(f"{name},0,ASSERT_FAIL:{e}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name},0,ERROR:{type(e).__name__}", flush=True)
+        with open(os.path.join(OUT_DIR, f"{name}.csv"), "w") as f:
+            f.write("\n".join(lines) + "\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

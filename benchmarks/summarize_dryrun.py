@@ -1,0 +1,102 @@
+"""Render dryrun_report.json into the EXPERIMENTS.md summary tables.
+
+    PYTHONPATH=src python -m benchmarks.summarize_dryrun [report] [--patch]
+
+Prints two markdown tables (dry-run memory/collectives + roofline terms);
+with --patch, splices them into EXPERIMENTS.md at the
+<!-- DRYRUN_SUMMARY --> / <!-- ROOFLINE_SUMMARY --> markers.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.analysis.roofline import from_record
+from repro.configs import get_config, get_shape
+
+
+def gib(x):
+    return f"{(x or 0)/2**30:.2f}"
+
+
+def dryrun_table(records) -> str:
+    lines = [
+        "| arch | shape | mesh | params+opt GiB/dev | temp GiB/dev | "
+        "all-gather | all-reduce | reduce-scatter | all-to-all | "
+        "compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"],
+                                            r["mesh"])):
+        if r["status"] == "skipped":
+            continue
+        if r["status"] == "error":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR: {r['error'][:60]} | | | | | | |")
+            continue
+        c = r.get("collectives", {})
+        mesh = "single" if "single" in r["mesh"] else "multi"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | "
+            f"{gib(r.get('argument_size_in_bytes'))} | "
+            f"{gib(r.get('temp_size_in_bytes'))} | "
+            f"{gib(c.get('all-gather'))} | {gib(c.get('all-reduce'))} | "
+            f"{gib(c.get('reduce-scatter'))} | {gib(c.get('all-to-all'))} | "
+            f"{r.get('compile_s', 0):.0f} |")
+    skips = [r for r in records if r["status"] == "skipped"]
+    if skips:
+        lines.append("")
+        lines.append(f"Skipped cells ({len(skips)}): " + "; ".join(
+            f"{r['arch']}×{r['shape']}×"
+            f"{'single' if 'single' in r['mesh'] else 'multi'}"
+            for r in sorted(skips, key=lambda r: (r['arch'], r['shape']))))
+    return "\n".join(lines)
+
+
+def roofline_table(records) -> str:
+    lines = [
+        "| arch | shape | mesh | t_compute | t_memory | t_collective | "
+        "bottleneck | useful frac | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(records, key=lambda x: (x["arch"], x["shape"],
+                                            x["mesh"])):
+        if r["status"] != "ok":
+            continue
+        rl = from_record(r, get_config(r["arch"]), get_shape(r["shape"]))
+        mesh = "single" if "single" in r["mesh"] else "multi"
+        lines.append(
+            f"| {rl.arch} | {rl.shape} | {mesh} | {rl.t_compute:.2e} | "
+            f"{rl.t_memory:.2e} | {rl.t_collective:.2e} | "
+            f"**{rl.bottleneck}** | {rl.useful_flops_fraction:.2f} | "
+            f"{rl.mfu_upper_bound:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 and not sys.argv[1].startswith(
+        "--") else "dryrun_report.json"
+    with open(path) as f:
+        records = json.load(f)
+    dt = dryrun_table(records)
+    rt = roofline_table(records)
+    if "--patch" in sys.argv:
+        with open("EXPERIMENTS.md") as f:
+            doc = f.read()
+        doc = doc.replace("<!-- DRYRUN_SUMMARY -->",
+                          "<!-- DRYRUN_SUMMARY -->\n\n" + dt, 1) \
+            if "<!-- DRYRUN_SUMMARY -->\n\n|" not in doc else doc
+        doc = doc.replace("<!-- ROOFLINE_SUMMARY -->",
+                          "<!-- ROOFLINE_SUMMARY -->\n\n" + rt, 1) \
+            if "<!-- ROOFLINE_SUMMARY -->\n\n|" not in doc else doc
+        with open("EXPERIMENTS.md", "w") as f:
+            f.write(doc)
+        print("EXPERIMENTS.md patched")
+    else:
+        print(dt)
+        print()
+        print(rt)
+
+
+if __name__ == "__main__":
+    main()

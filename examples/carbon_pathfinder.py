@@ -1,0 +1,29 @@
+"""Beyond-paper: CarbonPATH's methodology applied to TPU-pod planning.
+
+    PYTHONPATH=src python examples/carbon_pathfinder.py
+
+Anneals (chip count, TP width, microbatch, remat, int8 gradient
+compression) for three assigned architectures under two objectives —
+pure speed vs carbon-weighted — and prints how the chosen plan shifts,
+mirroring the paper's T1-vs-T3 template analysis at pod scale.
+"""
+from repro.analysis.tpu_pathfinder import evaluate_plan, pathfind
+from repro.configs import get_config
+
+for arch in ("smollm-135m", "qwen3-8b", "deepseek-v2-236b"):
+    cfg = get_config(arch)
+    fast, m_fast = pathfind(cfg, global_batch=256, seq=4096,
+                            carbon_weight=0.0, seed=1)
+    green, m_green = pathfind(cfg, global_batch=256, seq=4096,
+                              carbon_weight=0.9, seed=1)
+    print(f"\n{arch}:")
+    print(f"  speed-first : {fast.describe()}")
+    print(f"     step {m_fast.step_time_s*1e3:8.2f} ms   "
+          f"CFP/step {m_fast.total_cfp*1e3:.3f} g")
+    print(f"  carbon-aware: {green.describe()}")
+    print(f"     step {m_green.step_time_s*1e3:8.2f} ms   "
+          f"CFP/step {m_green.total_cfp*1e3:.3f} g")
+    if m_green.total_cfp < m_fast.total_cfp:
+        saved = (1 - m_green.total_cfp / m_fast.total_cfp) * 100
+        slower = (m_green.step_time_s / m_fast.step_time_s - 1) * 100
+        print(f"  -> {saved:.0f}% CFP saved for {slower:.0f}% slower steps")

@@ -1,0 +1,42 @@
+"""Quickstart: CarbonPATH's public API in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Evaluate one HI system's PPAC + CFP on a paper workload.
+2. Anneal a carbon-aware design for the same workload (fast schedule).
+"""
+from repro.core import (
+    HISystem, Mapping, SAConfig, SimCache, TEMPLATES,
+    anneal, evaluate, fit_normalizer, workload,
+)
+from repro.core.chiplet import different_chiplet_system
+
+wl = workload(1)                       # GPT-2 MLP GEMM (512 x 768 x 3072)
+
+# -- 1. evaluate a hand-picked system --------------------------------------
+sys = HISystem(
+    chiplets=different_chiplet_system(),          # 64/96/128/192 @ 7nm
+    style="2.5D", memory="DDR5",
+    mapping=Mapping.parse("1-OS-0"),              # order-dataflow-splitK
+    pkg_25d="RDL", proto_25d="UCIe-S",
+)
+m = evaluate(sys, wl)
+print(f"[evaluate] {sys.describe()}  mapping={sys.mapping.name}")
+print(f"  latency {m.latency_s*1e6:8.2f} us   energy {m.energy_j*1e3:6.3f} mJ")
+print(f"  area    {m.area_mm2:8.1f} mm2  cost   {m.dollar:6.2f} $")
+print(f"  CFP     {m.emb_cfp_kg:.2f} kg embodied + {m.ope_cfp_kg:.2f} kg "
+      f"operational   Perf-SI {m.perf_si:.3e}")
+
+# -- 2. let the SA engine design one (carbon-aware template T1) ------------
+cache = SimCache()
+norm = fit_normalizer(wl, samples=1500, cache=cache)
+cfg = SAConfig(t_initial=400, t_final=0.01, cooling=0.93, moves_per_temp=25)
+res = anneal(wl, TEMPLATES["T1"], config=cfg, norm=norm, cache=cache)
+b = res.best
+print(f"\n[anneal T1] best system after {res.evaluations} evaluations:")
+print(f"  {b.describe()}  chiplets={[c.name for c in b.chiplets]} "
+      f"mapping={b.mapping.name}")
+print(f"  latency {res.best_metrics.latency_s*1e6:.2f} us  "
+      f"CFP {res.best_metrics.total_cfp:.2f} kg  "
+      f"cost {res.best_metrics.dollar:.2f} $")
+print(f"  sim-cache: {cache.hits} hits / {cache.misses} misses")

@@ -1,0 +1,14 @@
+"""Serving example: batched prefill + greedy decode on the sharded cache.
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b   # O(1) state
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "smollm-135m"]
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    raise SystemExit(main(argv))

@@ -1,0 +1,28 @@
+"""End-to-end training example: fault-tolerant sharded LM training.
+
+    PYTHONPATH=src python examples/train_lm.py             # CPU-reduced
+    PYTHONPATH=src python examples/train_lm.py --full      # real scale
+
+Drives launch/train.py: deterministic pipeline, remat'd sharded
+train_step, AdamW, checkpoints, failure injection (2% of steps fault and
+restart from the last checkpoint — the loss curve is identical to a
+fault-free run), straggler monitoring.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    full = "--full" in sys.argv
+    args = [
+        "--arch", "smollm-135m",
+        "--steps", "200" if full else "120",
+        "--batch", "16" if full else "8",
+        "--seq", "512" if full else "128",
+        "--fail-rate", "0.02",
+        "--ckpt-every", "20",
+        "--ckpt-dir", "/tmp/repro_example_ckpt",
+    ]
+    if not full:
+        args.append("--reduced")
+    raise SystemExit(main(args))

@@ -1,0 +1,1 @@
+from repro.analysis.hlo import collective_bytes, COLLECTIVE_KINDS

@@ -1,0 +1,58 @@
+"""Depth variants for cost extrapolation.
+
+XLA's HloCostAnalysis visits a while-loop body once, so a lax.scan over L
+layers reports ~1 layer of FLOPs. The dry-run therefore compiles each cell
+at two reduced depths (d1 < d2, in the arch's natural repeat unit) and
+linearly extrapolates FLOPs / bytes / collective-bytes to the full depth —
+exact for scanned stacks, since every unit is the identical computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.configs.base import ModelConfig
+
+
+def depth_variants(cfg: ModelConfig) -> Tuple[ModelConfig, int,
+                                              ModelConfig, int, int]:
+    """Returns (cfg_d1, d1, cfg_d2, d2, full_units).
+
+    Units are scan steps: layers for uniform stacks, (dense, moe) groups
+    for llama4, (rglru, rglru, local) groups for recurrentgemma, moe
+    layers for deepseek (its single leading dense layer is held constant).
+    """
+    if cfg.family == "moe" and cfg.moe_every > 1:           # llama4 groups
+        unit = cfg.moe_every
+        full = cfg.n_layers // unit
+        c1 = dataclasses.replace(cfg, n_layers=1 * unit,
+                                 unroll_layers=True)
+        c2 = dataclasses.replace(cfg, n_layers=2 * unit,
+                                 unroll_layers=True)
+        return c1, 1, c2, 2, full
+    if cfg.family == "moe" and cfg.first_dense:             # deepseek
+        fd = cfg.first_dense
+        full = cfg.n_layers - fd
+        c1 = dataclasses.replace(cfg, n_layers=fd + 1, unroll_layers=True)
+        c2 = dataclasses.replace(cfg, n_layers=fd + 2, unroll_layers=True)
+        return c1, 1, c2, 2, full
+    if cfg.family == "hybrid":                              # rg groups+tail
+        pat = len(cfg.block_pattern)
+        tail = cfg.n_layers - (cfg.n_layers // pat) * pat
+        full = cfg.n_layers // pat
+        c1 = dataclasses.replace(cfg, n_layers=1 * pat + tail,
+                                 unroll_layers=True)
+        c2 = dataclasses.replace(cfg, n_layers=2 * pat + tail,
+                                 unroll_layers=True)
+        return c1, 1, c2, 2, full
+    full = cfg.n_layers
+    c1 = dataclasses.replace(cfg, n_layers=1, unroll_layers=True)
+    c2 = dataclasses.replace(cfg, n_layers=2, unroll_layers=True)
+    return c1, 1, c2, 2, full
+
+
+def extrapolate(v1: float, v2: float, d1: int, d2: int, full: int) -> float:
+    """Linear in depth: f(d) = a + b*d, clamped non-negative (a noisy
+    negative slope on a tiny term must not extrapolate below zero)."""
+    b = (v2 - v1) / (d2 - d1)
+    return max(0.0, v2 + b * (full - d2))

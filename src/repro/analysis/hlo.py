@@ -1,0 +1,75 @@
+"""HLO analysis: collective-bytes extraction from compiled/lowered text.
+
+``cost_analysis()`` reports FLOPs and bytes but not collective traffic, so
+the roofline's collective term comes from parsing the (stable)HLO text:
+sum the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g.  %x = bf16[2,4096,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+# tuple-result collectives:  (bf16[..], bf16[..]) all-to-all(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)[^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Bytes moved per collective kind (result-shape convention), plus
+    op counts as ``<kind>_count``. '-start' ops are counted; their '-done'
+    halves are not (avoids double counting async pairs)."""
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVE_KINDS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async completion: bytes counted at -start
+        stripped = line.strip()
+        m = _OP_RE.search(stripped)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+            continue
+        m = _TUPLE_RE.search(stripped)
+        if m:
+            shapes, kind = m.groups()
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(shapes))
+            out[kind] += total
+            counts[kind] += 1
+    result: Dict[str, float] = {}
+    for k in COLLECTIVE_KINDS:
+        if counts[k]:
+            result[k] = out[k]
+            result[k + "_count"] = counts[k]
+    result["total"] = sum(out.values())
+    return result

@@ -1,0 +1,116 @@
+"""Three-term roofline analysis from the compiled dry-run.
+
+    compute term    = HLO_FLOPs   / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips x HBM_bw)
+    collective term = coll_bytes  / (chips x link_bw)
+
+Hardware constants target TPU v5e-class chips: 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s per ICI link (x4 links usable per chip on a 2D torus ring;
+we charge the per-chip ICI budget at 2 links active per collective phase,
+a conservative ring-all-reduce assumption).
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` with one caveat
+handled by the dry-run: XLA visits while-loop (lax.scan) bodies ONCE, so
+the dry-run compiles each cell at two depths and linearly extrapolates to
+the full layer count (exact for scanned stacks — every layer is the same
+computation). Collective bytes are parsed from the compiled HLO text and
+extrapolated identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_LINK_BW = 50e9           # bytes/s per link
+ICI_LINKS_ACTIVE = 2         # conservative concurrent links per chip
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float               # per-device HLO FLOPs
+    bytes_hbm: float           # per-device HLO bytes accessed
+    bytes_coll: float          # per-device collective bytes
+    model_flops: float         # 6*N(active)*D useful FLOPs (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_coll / (ICI_LINK_BW * ICI_LINKS_ACTIVE)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Roofline step-time lower bound (max of the three terms —
+        perfect overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs_global — how much compiled compute is
+        useful (catches remat/attention-waste/dispatch overhead)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """Model FLOPs utilization at the roofline bound: useful FLOPs /
+        (chips x peak x step_time_lb)."""
+        t = self.step_time_lb
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE) for training; forward-only
+    (2*N*D) for prefill; per-token 2*N_active for decode."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch
+
+
+def from_record(rec: Dict, cfg, shape) -> Optional[Roofline]:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if "multi" in rec["mesh"] else 256
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], chips=chips,
+        flops=rec["flops"],
+        bytes_hbm=rec["bytes_accessed"],
+        bytes_coll=rec.get("collectives", {}).get("total", 0.0),
+        model_flops=model_flops_for(cfg, shape),
+    )
+
+
+def format_row(r: Roofline) -> str:
+    return (f"{r.arch},{r.shape},{r.mesh},{r.t_compute:.3e},"
+            f"{r.t_memory:.3e},{r.t_collective:.3e},{r.bottleneck},"
+            f"{r.model_flops:.3e},{r.useful_flops_fraction:.3f},"
+            f"{r.mfu_upper_bound:.3f}")
+
+
+HEADER = ("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+          "bottleneck,model_flops,useful_frac,mfu_bound")

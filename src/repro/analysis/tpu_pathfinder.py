@@ -1,0 +1,147 @@
+"""TPU carbon pathfinder — the paper's insight applied to the pod (beyond
+paper).
+
+CarbonPATH's core move is treating (mapping x architecture x packaging) as
+one annealable design vector with carbon as a first-class objective. At
+pod scale the isomorphic vector is:
+
+    chips          <-> chiplets         (how much silicon to light up)
+    mesh factoring <-> interconnect topology (DP/TP axis split)
+    microbatch     <-> tile sizes       (Algorithm 1's t_M)
+    remat          <-> dataflow         (recompute vs hold, OS vs WS)
+    grad comp.     <-> protocol choice  (bytes per transferred bit)
+
+The evaluator is the same three-term roofline used in SRoofline (compute /
+HBM / collective), and the carbon model is ECO-CHIP-style: embodied CFP of
+the chips amortized per run + operational CFP from chip power x step time.
+The same SA engine as the paper core anneals the plan; ``launch/train.py
+--pathfind`` consumes the result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, Tuple
+
+from repro.analysis.roofline import HBM_BW, ICI_LINK_BW, PEAK_FLOPS
+from repro.configs.base import ModelConfig
+
+CHIP_POWER_W = 170.0            # TDP-class per chip
+CHIP_EMBODIED_KG = 150.0        # embodied CFP per accelerator package
+CHIP_LIFETIME_S = 4 * 365.25 * 86400 * 0.6   # 4y at 60% duty
+CARBON_INTENSITY = 0.475 / 3.6e6             # kg per J
+DCN_BW = 6.25e9                 # bytes/s per chip cross-pod
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    chips: int                  # total chips (power of 2)
+    tp: int                     # model-parallel width (divides chips)
+    microbatch: int             # per-device batch
+    remat: bool
+    compress_grads: bool        # int8 cross-pod gradient all-reduce
+
+    @property
+    def dp(self) -> int:
+        return self.chips // self.tp
+
+    def describe(self) -> str:
+        return (f"chips={self.chips} dp={self.dp} tp={self.tp} "
+                f"mb={self.microbatch} remat={int(self.remat)} "
+                f"int8grads={int(self.compress_grads)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanMetrics:
+    step_time_s: float
+    energy_j: float
+    emb_cfp_kg: float           # amortized per step
+    ope_cfp_kg: float           # per step
+    hbm_ok: bool
+
+    @property
+    def total_cfp(self) -> float:
+        return self.emb_cfp_kg + self.ope_cfp_kg
+
+
+def evaluate_plan(plan: Plan, cfg: ModelConfig, global_batch: int,
+                  seq: int) -> PlanMetrics:
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    tokens = global_batch * seq
+    # compute term (remat multiplies backward recompute)
+    flops = (8.0 if plan.remat else 6.0) * n_active * tokens
+    t_compute = flops / (plan.chips * PEAK_FLOPS * 0.5)  # 50% kernel eff.
+    # memory term: params + activations traffic per chip
+    param_bytes = 2 * n_total / plan.chips * 3          # read + moments
+    act_bytes = tokens / plan.dp * cfg.d_model * 2 * cfg.n_layers
+    act_bytes *= (1.0 if plan.remat else 2.0)
+    t_mem = (param_bytes + act_bytes) / HBM_BW
+    # collective term: TP all-reduces + DP gradient reduce
+    tp_bytes = 0.0
+    if plan.tp > 1:
+        tp_bytes = 4 * cfg.n_layers * (tokens / plan.dp) * cfg.d_model * 2
+    grad_bytes = 2 * n_active / plan.tp
+    if plan.compress_grads:
+        grad_bytes /= 4.0                                # int8 + scales
+    t_coll = tp_bytes / (plan.chips / plan.dp * ICI_LINK_BW * 2)
+    t_coll += grad_bytes / DCN_BW if plan.dp > 1 else 0.0
+    step = max(t_compute, t_mem) + t_coll                # comms not hidden
+    # HBM capacity check: params+moments+activations must fit 16 GB
+    act_resident = (tokens / plan.dp / plan.tp * cfg.d_model * 2
+                    * (1 if plan.remat else cfg.n_layers))
+    hbm = 16e9 >= (2 + 8) * n_total / plan.chips + act_resident
+    energy = plan.chips * CHIP_POWER_W * step
+    ope = energy * CARBON_INTENSITY
+    emb = plan.chips * CHIP_EMBODIED_KG * (step / CHIP_LIFETIME_S)
+    return PlanMetrics(step, energy, emb, ope, hbm)
+
+
+def pathfind(cfg: ModelConfig, global_batch: int, seq: int,
+             *, carbon_weight: float = 0.5, iters: int = 4000,
+             seed: int = 0, verbose: bool = False) -> Tuple[Plan, PlanMetrics]:
+    """Anneal (chips, tp, microbatch, remat, compression) minimizing
+    step_time + carbon_weight * normalized CFP, rejecting OOM plans."""
+    rng = random.Random(seed)
+    chips_opts = [2 ** i for i in range(4, 14)]          # 16..8192
+    tp_opts = [1, 2, 4, 8, 16, 32]
+
+    def random_plan() -> Plan:
+        chips = rng.choice(chips_opts)
+        tp = rng.choice([t for t in tp_opts if t <= chips])
+        mb = rng.choice([1, 2, 4, 8])
+        return Plan(chips, tp, mb, rng.random() < 0.5, rng.random() < 0.5)
+
+    def cost(p: Plan) -> float:
+        m = evaluate_plan(p, cfg, global_batch, seq)
+        if not m.hbm_ok:
+            return float("inf")
+        # normalize: seconds plus kg scaled into comparable units
+        return m.step_time_s * (1 - carbon_weight) + \
+            carbon_weight * m.total_cfp * 50.0
+
+    cur = random_plan()
+    while math.isinf(cost(cur)):
+        cur = random_plan()
+    cur_c = cost(cur)
+    best, best_c = cur, cur_c
+    t = 1.0
+    for i in range(iters):
+        cand = random_plan() if rng.random() < 0.3 else dataclasses.replace(
+            cur,
+            tp=rng.choice([x for x in tp_opts if x <= cur.chips]),
+            remat=rng.random() < 0.5,
+            compress_grads=rng.random() < 0.5)
+        c = cost(cand)
+        if c < cur_c or rng.random() < math.exp(-(c - cur_c)
+                                                / max(t, 1e-9)):
+            cur, cur_c = cand, c
+            if c < best_c:
+                best, best_c = cand, c
+        t *= 0.999
+    metrics = evaluate_plan(best, cfg, global_batch, seq)
+    if verbose:
+        print(f"[pathfind] {best.describe()} step={metrics.step_time_s:.4f}s"
+              f" cfp/step={metrics.total_cfp*1e3:.3f}g")
+    return best, metrics

@@ -1,0 +1,37 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, ShapeCell, applicable, get_shape
+
+_MODULES: Dict[str, str] = {
+    "smollm-135m": "repro.configs.smollm_135m",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "yi-6b": "repro.configs.yi_6b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+}
+
+ARCH_NAMES: Tuple[str, ...] = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+__all__ = ["ModelConfig", "ShapeCell", "SHAPES", "ARCH_NAMES",
+           "get_config", "all_configs", "get_shape", "applicable"]

@@ -1,0 +1,185 @@
+"""Architecture configuration schema.
+
+One :class:`ModelConfig` per assigned architecture lives in
+``repro/configs/<id>.py``; ``repro.configs.get_config(name)`` resolves
+them, and ``.reduced()`` produces the family-preserving small variant the
+CPU smoke tests instantiate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                  # 0 for attention-free (rwkv)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None  # defaults to d_model // n_heads
+
+    # dense-attention extras
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+
+    # MLA (DeepSeek-V2)
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    moe_every: int = 1            # 1 = every layer, 2 = interleaved (llama4)
+    first_dense: int = 0          # leading dense layers (deepseek)
+    dense_d_ff: int = 0           # d_ff of those dense layers
+    capacity_factor: float = 1.25
+
+    # hybrid / recurrent (recurrentgemma, rwkv)
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rglru", "rglru", "local")
+    local_window: int = 2048
+    rg_conv_width: int = 4
+    rg_lru_width: Optional[int] = None    # defaults to d_model
+
+    # structure
+    encoder_only: bool = False            # hubert: bidirectional, no decode
+    frontend: Optional[str] = None        # None | "audio" | "vision"
+    frontend_prefix: int = 0              # prefix embeddings length (vlm)
+    tie_embeddings: bool = False
+
+    # runtime
+    max_seq: int = 1_048_576
+    sub_quadratic: bool = False           # can run long_500k decode
+    unroll_layers: bool = False           # python-loop layers (cost probes)
+
+    def __post_init__(self):
+        if self.d_head is None and self.n_heads:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    # -- derived sizes -------------------------------------------------------
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    def param_count(self) -> int:
+        """Analytical parameter count (excludes biases/norms ~<0.1%)."""
+        d = self.d_model
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family == "ssm":
+            # rwkv6 time-mix: 5 projections d^2 + ddlerp lora (5-way, r=32)
+            # + decay lora (2r) + mixes/bonus; channel mix: 2 d*ff + r-gate
+            lora = 32
+            per_layer = (5 * d * d + 10 * lora * d + 4 * lora * d
+                         + 9 * d) + (2 * d * self.d_ff + d * d + 2 * d)
+        else:
+            if self.use_mla:
+                qd = self.q_lora_rank or d
+                h = self.n_heads
+                per_layer += d * self.q_lora_rank + qd * h * (
+                    self.qk_nope_head_dim + self.qk_rope_head_dim)
+                per_layer += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                per_layer += self.kv_lora_rank * h * (
+                    self.qk_nope_head_dim + self.v_head_dim)
+                per_layer += h * self.v_head_dim * d
+            elif self.n_heads:
+                dh = self.d_head
+                per_layer += d * self.n_heads * dh          # q
+                per_layer += 2 * d * self.n_kv_heads * dh   # k, v
+                per_layer += self.n_heads * dh * d          # o
+            if self.moe:
+                moe_layers = ((self.n_layers - self.first_dense)
+                              // self.moe_every)
+                dense_layers = self.n_layers - moe_layers
+                expert = 3 * d * self.moe_d_ff
+                moe_p = (self.n_experts + self.n_shared_experts) * expert \
+                    + d * self.n_experts
+                dff = self.dense_d_ff or self.d_ff
+                total_ffn = (moe_layers * moe_p
+                             + dense_layers * 3 * d * dff)
+                return (emb + self.n_layers * per_layer + total_ffn)
+            per_layer += 3 * d * self.d_ff                  # swiglu
+        if self.family == "hybrid":
+            # mixture of rglru + local-attn layers; approximate with the
+            # pattern-weighted average
+            pat = self.block_pattern or ("rglru",)
+            n_rec = sum(1 for p in pat if p == "rglru") / len(pat)
+            w = self.rg_lru_width or d
+            rec = 2 * d * w + w * d + 4 * w  # gates + in/out proj + conv
+            attn = (d * self.n_heads * self.d_head
+                    + 2 * d * self.n_kv_heads * self.d_head
+                    + self.n_heads * self.d_head * d)
+            per_layer = n_rec * rec + (1 - n_rec) * attn + 3 * d * self.d_ff
+        return int(emb + self.n_layers * per_layer)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k + shared only)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.use_mla:
+            qd = self.q_lora_rank or d
+            h = self.n_heads
+            per_layer += d * self.q_lora_rank + qd * h * (
+                self.qk_nope_head_dim + self.qk_rope_head_dim)
+            per_layer += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+            per_layer += self.kv_lora_rank * h * (
+                self.qk_nope_head_dim + self.v_head_dim)
+            per_layer += h * self.v_head_dim * d
+        else:
+            dh = self.d_head
+            per_layer += d * self.n_heads * dh + 2 * d * self.n_kv_heads * dh
+            per_layer += self.n_heads * dh * d
+        moe_layers = (self.n_layers - self.first_dense) // self.moe_every
+        dense_layers = self.n_layers - moe_layers
+        expert = 3 * d * self.moe_d_ff
+        active = (self.top_k + self.n_shared_experts) * expert
+        dff = self.dense_d_ff or self.d_ff
+        ffn = moe_layers * active + dense_layers * 3 * d * dff
+        return int(emb + self.n_layers * per_layer + ffn)
+
+    # -- reduced smoke variant ------------------------------------------------
+
+    def reduced(self) -> "ModelConfig":
+        """Family-preserving tiny config for CPU smoke tests."""
+        pat = self.block_pattern
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=max(2, len(pat) or 2),
+            d_model=64,
+            n_heads=max(1, min(4, self.n_heads)),
+            n_kv_heads=max(1, min(2, self.n_kv_heads)),
+            d_head=16,
+            d_ff=128,
+            vocab=128,
+            kv_lora_rank=16 if self.use_mla else 0,
+            q_lora_rank=24 if self.use_mla else 0,
+            qk_nope_head_dim=16 if self.use_mla else self.qk_nope_head_dim,
+            qk_rope_head_dim=8 if self.use_mla else self.qk_rope_head_dim,
+            v_head_dim=16 if self.use_mla else self.v_head_dim,
+            n_experts=8 if self.moe else 0,
+            top_k=min(2, self.top_k) if self.moe else 0,
+            n_shared_experts=min(1, self.n_shared_experts),
+            moe_d_ff=32 if self.moe else 0,
+            dense_d_ff=128 if self.dense_d_ff else 0,
+            local_window=32,
+            rg_lru_width=64 if self.rg_lru_width else None,
+            frontend_prefix=min(4, self.frontend_prefix),
+            max_seq=512,
+        )

@@ -1,0 +1,43 @@
+"""CarbonPATH core: the paper's models and optimization engine.
+
+Public surface:
+    TechDB / DEFAULT_DB            technology knobs (Tables II-III + cited data)
+    Chiplet / library              the chiplet library (A-T-S notation)
+    GEMMWorkload / WORKLOADS       Table IV workloads
+    Mapping / tile_and_assign      Algorithm 1
+    HISystem / validate            solution vectors + feasibility rules
+    evaluate / Metrics             PPAC + CFP evaluation (Eqs. 2-17)
+    anneal / SAConfig / Template   the SA engine and T1-T4 templates
+    evaluate_chipletgym            the ChipletGym-style baseline flow
+"""
+from repro.core.chiplet import (
+    Chiplet,
+    different_chiplet_system,
+    identical_chiplet_system,
+    library,
+)
+from repro.core.chipletgym import evaluate_chipletgym
+from repro.core.evaluate import Metrics, evaluate
+from repro.core.sa import SAConfig, SAResult, anneal, fit_normalizer, random_system
+from repro.core.scalesim import SimCache
+from repro.core.system import HISystem, InvalidSystem, is_valid, validate
+from repro.core.techdb import DEFAULT_DB, TechDB, all_pkg_protocol_pairs
+from repro.core.templates import TEMPLATES, Normalizer, Template, sa_cost
+from repro.core.workload import (
+    ALL_MAPPINGS,
+    GEMMWorkload,
+    Mapping,
+    WORKLOADS,
+    tile_and_assign,
+    workload,
+)
+
+__all__ = [
+    "Chiplet", "library", "identical_chiplet_system", "different_chiplet_system",
+    "evaluate_chipletgym", "Metrics", "evaluate", "SAConfig", "SAResult",
+    "anneal", "fit_normalizer", "random_system", "SimCache", "HISystem",
+    "InvalidSystem", "is_valid", "validate", "DEFAULT_DB", "TechDB",
+    "all_pkg_protocol_pairs", "TEMPLATES", "Normalizer", "Template", "sa_cost",
+    "ALL_MAPPINGS", "GEMMWorkload", "Mapping", "WORKLOADS", "tile_and_assign",
+    "workload",
+]

@@ -1,0 +1,97 @@
+"""Carbon-footprint models (Sec II-B, Eqs. 2-4), after ECO-CHIP [3]/ACT [16].
+
+Embodied CFP: per-chiplet manufacturing carbon (area x node carbon-per-area,
+inflated by die-yield scrap) + amortized design carbon + heterogeneous-
+integration carbon (packaging interconnect, interposer, substrate, inflated
+by bonding-yield scrap).
+
+Operational CFP: Eq. 3. E_system is the per-execution energy of the
+workload; the device re-runs it back-to-back for the active fraction of its
+lifetime, so the fleet-lifetime emission is
+    (E_system / L_system) [W] x active-hours x C_src x N_vol.
+
+Perf-SI (Eq. 4): throughput per unit carbon = 1 / (latency x C_sys).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.chiplet import Chiplet
+from repro.core.system import HISystem
+from repro.core.cost import bonding_yield
+from repro.core.techdb import DEFAULT_DB, TechDB
+
+SECONDS_PER_YEAR = 365.25 * 24 * 3600
+
+
+def chiplet_mfg_cfp(ch: Chiplet, db: TechDB = DEFAULT_DB) -> float:
+    """C_mfg,i(n): area x CPA(node), divided by die yield — scrapped dies
+    waste their embodied carbon."""
+    area = ch.area_mm2(db)
+    return area * db.node_cpa[ch.node] / db.die_yield(area, ch.node)
+
+
+def chiplet_design_cfp(ch: Chiplet, db: TechDB = DEFAULT_DB) -> float:
+    """C_des,i / N_vol: design/NRE carbon amortized over production volume."""
+    return db.node_design_cfp[ch.node] / db.production_volume
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbodiedBreakdown:
+    manufacturing: float
+    design: float
+    packaging: float            # C_HI
+
+    @property
+    def total(self) -> float:
+        return self.manufacturing + self.design + self.packaging
+
+
+def packaging_cfp(sys: HISystem, package_area_mm2: float,
+                  db: TechDB = DEFAULT_DB) -> float:
+    """C_HI: interconnect + interposer + substrate carbon, inflated by the
+    bonding-yield scrap of whole assemblies."""
+    if sys.style == "2D":
+        return db.substrate_cfp_mm2 * package_area_mm2
+    cfp = db.substrate_cfp_mm2 * package_area_mm2
+    if sys.style in ("2.5D", "2.5D+3D"):
+        pkg = db.packages[sys.pkg_25d]
+        cfp += pkg.cfp_kg_per_mm2 * package_area_mm2
+        if sys.pkg_25d in ("Passive", "Active"):
+            cfp += (package_area_mm2 * db.interposer_cpa
+                    / db.interposer_yield(package_area_mm2))
+    if sys.style in ("3D", "2.5D+3D"):
+        pkg = db.packages[sys.pkg_3d]
+        order = sys.stack_order(db)
+        bonded_area = sum(sys.chiplets[i].area_mm2(db) for i in order[1:])
+        cfp += pkg.cfp_kg_per_mm2 * bonded_area
+    return cfp / bonding_yield(sys, db)
+
+
+def embodied_cfp(sys: HISystem, package_area_mm2: float,
+                 db: TechDB = DEFAULT_DB) -> EmbodiedBreakdown:
+    """Eq. 2."""
+    mfg = sum(chiplet_mfg_cfp(c, db) for c in sys.chiplets)
+    des = sum(chiplet_design_cfp(c, db) for c in sys.chiplets)
+    pkg = packaging_cfp(sys, package_area_mm2, db)
+    return EmbodiedBreakdown(mfg, des, pkg)
+
+
+def operational_cfp(energy_j: float, latency_s: float,
+                    db: TechDB = DEFAULT_DB, per_unit: bool = False) -> float:
+    """Eq. 3 under a fixed-demand deployment: the system executes the
+    workload ``duty_runs_per_s`` times per active second over its lifetime,
+    so lifetime emissions scale with per-run energy (which itself carries a
+    static-power x latency term added in ``evaluate``). Returns fleet
+    lifetime kgCO2e, or per-unit with ``per_unit=True``."""
+    del latency_s  # latency enters through the static-energy term upstream
+    active_s = db.lifetime_years * SECONDS_PER_YEAR * db.use_fraction
+    runs = db.duty_runs_per_s * active_s
+    kwh = energy_j * runs / 3.6e6
+    volume = 1 if per_unit else db.production_volume
+    return kwh * db.carbon_intensity * volume
+
+
+def perf_si(latency_s: float, total_cfp: float) -> float:
+    """Eq. 4 with Performance = 1/latency so that higher is better."""
+    return 1.0 / (latency_s * total_cfp)

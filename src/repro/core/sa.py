@@ -1,0 +1,310 @@
+"""Simulated-annealing optimization engine (Sec V).
+
+Components: (1) the solution space = valid :class:`HISystem` vectors,
+(2) hierarchical moves — application-level (mapping) vs lower-level
+(chip-architecture / chiplet / package) perturbations with validity repair,
+(3) the Eq. 17 cost on min/median-normalized metrics.
+
+Runtime mitigations from Sec V-D are both present: the ScaleSim-equivalent
+simulation cache (shared across the whole anneal — node-only chiplet moves
+hit the cache because cycle count is node-independent) and incremental
+re-evaluation falls out of the same property.
+
+Schedule (Sec VI-A): T0 = 4000, Tf = 0.001, cooling 0.99, 50 moves/temp.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.chiplet import Chiplet
+from repro.core.evaluate import Metrics, evaluate
+from repro.core.scalesim import SimCache
+from repro.core.system import HISystem, is_valid, style_for_count
+from repro.core.techdb import (
+    DEFAULT_DB,
+    PKG_PROTOCOLS_25D,
+    PKG_PROTOCOLS_3D,
+    TechDB,
+)
+from repro.core.templates import Normalizer, Template, sa_cost
+from repro.core.workload import GEMMWorkload, Mapping
+
+
+@dataclasses.dataclass
+class SAConfig:
+    t_initial: float = 4000.0
+    t_final: float = 0.001
+    cooling: float = 0.99
+    moves_per_temp: int = 50
+    max_chiplets: int = 6
+    norm_samples: int = 10_000
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SAResult:
+    best: HISystem
+    best_metrics: Metrics
+    best_cost: float
+    history: List[float]
+    evaluations: int
+    cache: SimCache
+
+
+# ---------------------------------------------------------------------------
+# Random valid system generation
+# ---------------------------------------------------------------------------
+
+
+def random_chiplet(rng: random.Random, db: TechDB) -> Chiplet:
+    a = rng.choice(db.array_sizes)
+    t = rng.choice(db.tech_nodes)
+    s = rng.choice(db.sram_sizes_kb[a])
+    return Chiplet(a, t, s)
+
+
+def random_mapping(rng: random.Random) -> Mapping:
+    return Mapping(rng.choice((0, 1)), rng.choice(("OS", "WS", "IS")),
+                   rng.choice((0, 1)))
+
+
+def _pick_25d(rng: random.Random) -> Tuple[str, str]:
+    pkg = rng.choice(list(PKG_PROTOCOLS_25D))
+    return pkg, rng.choice(PKG_PROTOCOLS_25D[pkg])
+
+
+def _pick_3d(rng: random.Random) -> Tuple[str, str]:
+    pkg = rng.choice(list(PKG_PROTOCOLS_3D))
+    return pkg, rng.choice(PKG_PROTOCOLS_3D[pkg])
+
+
+def _style_fields(style: str, n: int, rng: random.Random):
+    """pkg/proto/stack fields consistent with a style and chiplet count."""
+    pkg25 = proto25 = pkg3 = proto3 = None
+    stack: Tuple[int, ...] = ()
+    if style in ("2.5D", "2.5D+3D"):
+        pkg25, proto25 = _pick_25d(rng)
+    if style in ("3D", "2.5D+3D"):
+        pkg3, proto3 = _pick_3d(rng)
+    if style == "2.5D+3D":
+        size = rng.randint(2, n - 1)
+        stack = tuple(sorted(rng.sample(range(n), size)))
+    return pkg25, proto25, pkg3, proto3, stack
+
+
+def random_system(rng: random.Random, db: TechDB = DEFAULT_DB,
+                  max_chiplets: int = 6) -> HISystem:
+    """Random but *valid* HI system (SA initialization, Sec V-A)."""
+    while True:
+        n = rng.randint(1, max_chiplets)
+        if n == 1:
+            style = "2D"
+        elif n == 2:
+            style = rng.choice(("2.5D", "3D"))
+        else:
+            style = rng.choice(("2.5D", "3D", "2.5D+3D"))
+        pkg25, proto25, pkg3, proto3, stack = _style_fields(style, n, rng)
+        sys = HISystem(
+            chiplets=tuple(random_chiplet(rng, db) for _ in range(n)),
+            style=style,
+            memory=rng.choice(list(db.memories)),
+            mapping=random_mapping(rng),
+            pkg_25d=pkg25, proto_25d=proto25,
+            pkg_3d=pkg3, proto_3d=proto3,
+            stack=stack,
+        )
+        if is_valid(sys, db, max_chiplets):
+            return sys
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical moves (Sec V-B)
+# ---------------------------------------------------------------------------
+
+
+def _move_application(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
+    m = sys.mapping
+    which = rng.randrange(3)
+    if which == 0:    # dataflow
+        m = Mapping(m.order,
+                    rng.choice([d for d in ("OS", "WS", "IS")
+                                if d != m.dataflow]), m.split_k)
+    elif which == 1:  # split-K toggle
+        m = Mapping(m.order, m.dataflow, 1 - m.split_k)
+    else:             # assigning order toggle
+        m = Mapping(1 - m.order, m.dataflow, m.split_k)
+    return dataclasses.replace(sys, mapping=m)
+
+
+def _repair_style(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
+    """Dynamic HI-type adjustment + field repair after a count change."""
+    n = sys.n_chiplets
+    style = style_for_count(n, sys.style)
+    pkg25, proto25 = sys.pkg_25d, sys.proto_25d
+    pkg3, proto3 = sys.pkg_3d, sys.proto_3d
+    stack = sys.stack
+    if style in ("2.5D", "2.5D+3D") and not pkg25:
+        pkg25, proto25 = _pick_25d(rng)
+    if style in ("3D", "2.5D+3D") and not pkg3:
+        pkg3, proto3 = _pick_3d(rng)
+    if style != "2.5D+3D":
+        stack = ()
+    else:
+        stack = tuple(i for i in stack if i < n)
+        if len(stack) < 2 or len(stack) >= n:
+            size = rng.randint(2, n - 1)
+            stack = tuple(sorted(rng.sample(range(n), size)))
+    if style == "2D":
+        pkg25 = proto25 = pkg3 = proto3 = None
+    if style == "2.5D":
+        pkg3 = proto3 = None
+    if style == "3D":
+        pkg25 = proto25 = None
+    return dataclasses.replace(
+        sys, style=style, pkg_25d=pkg25, proto_25d=proto25,
+        pkg_3d=pkg3, proto_3d=proto3, stack=stack)
+
+
+def _move_chip_arch(sys: HISystem, rng: random.Random, db: TechDB,
+                    max_chiplets: int) -> HISystem:
+    if rng.random() < 0.5:   # grow/shrink chiplet count
+        n = sys.n_chiplets
+        delta = rng.choice((-1, 1))
+        n2 = min(max(n + delta, 1), max_chiplets)
+        if n2 == n:
+            n2 = min(max(n - delta, 1), max_chiplets)
+        chips = list(sys.chiplets)
+        if n2 > n:
+            chips.append(random_chiplet(rng, db))
+        else:
+            chips.pop(rng.randrange(len(chips)))
+        sys = dataclasses.replace(sys, chiplets=tuple(chips))
+        return _repair_style(sys, rng, db)
+    # memory-type move
+    mem = rng.choice([m for m in db.memories if m != sys.memory])
+    return dataclasses.replace(sys, memory=mem)
+
+
+def _move_chiplet(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
+    idx = rng.randrange(sys.n_chiplets)
+    chips = list(sys.chiplets)
+    new = random_chiplet(rng, db)
+    while new == chips[idx]:
+        new = random_chiplet(rng, db)
+    chips[idx] = new
+    return dataclasses.replace(sys, chiplets=tuple(chips))
+
+
+def _move_package(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
+    if sys.style == "2D":
+        return sys
+    options = []
+    if sys.style in ("2.5D", "2.5D+3D"):
+        options += ["pkg25", "proto25"]
+    if sys.style in ("3D", "2.5D+3D"):
+        options += ["pkg3"]
+    which = rng.choice(options)
+    if which == "pkg25":
+        pkg = rng.choice([p for p in PKG_PROTOCOLS_25D if p != sys.pkg_25d])
+        proto = (sys.proto_25d if sys.proto_25d in PKG_PROTOCOLS_25D[pkg]
+                 else rng.choice(PKG_PROTOCOLS_25D[pkg]))
+        return dataclasses.replace(sys, pkg_25d=pkg, proto_25d=proto)
+    if which == "proto25":
+        protos = [p for p in PKG_PROTOCOLS_25D[sys.pkg_25d]
+                  if p != sys.proto_25d]
+        if not protos:
+            return sys
+        return dataclasses.replace(sys, proto_25d=rng.choice(protos))
+    pkg = rng.choice([p for p in PKG_PROTOCOLS_3D if p != sys.pkg_3d])
+    return dataclasses.replace(sys, pkg_3d=pkg, proto_3d="UCIe-3D")
+
+
+def propose(sys: HISystem, rng: random.Random, db: TechDB = DEFAULT_DB,
+            max_chiplets: int = 6, p_application: float = 0.35) -> HISystem:
+    """Hierarchical move selection: application level first, then one of
+    the lower levels; repair + validity check, retry until valid."""
+    for _ in range(64):
+        if rng.random() < p_application:
+            cand = _move_application(sys, rng, db)
+        else:
+            level = rng.randrange(3)
+            if level == 0:
+                cand = _move_chip_arch(sys, rng, db, max_chiplets)
+            elif level == 1:
+                cand = _move_chiplet(sys, rng, db)
+            else:
+                cand = _move_package(sys, rng, db)
+        if is_valid(cand, db, max_chiplets):
+            return cand
+    return sys
+
+
+# ---------------------------------------------------------------------------
+# The annealer
+# ---------------------------------------------------------------------------
+
+
+def fit_normalizer(
+    wl: GEMMWorkload,
+    db: TechDB = DEFAULT_DB,
+    samples: int = 10_000,
+    seed: int = 1234,
+    cache: Optional[SimCache] = None,
+    evaluate_fn: Callable[..., Metrics] = evaluate,
+    max_chiplets: int = 6,
+) -> Normalizer:
+    """Sample random valid systems and fit the min/median normalizer."""
+    rng = random.Random(seed)
+    cache = cache if cache is not None else SimCache()
+    pop = []
+    for _ in range(samples):
+        s = random_system(rng, db, max_chiplets)
+        pop.append(evaluate_fn(s, wl, db, cache=cache))
+    return Normalizer.fit(pop)
+
+
+def anneal(
+    wl: GEMMWorkload,
+    template: Template,
+    db: TechDB = DEFAULT_DB,
+    config: Optional[SAConfig] = None,
+    norm: Optional[Normalizer] = None,
+    cache: Optional[SimCache] = None,
+    evaluate_fn: Callable[..., Metrics] = evaluate,
+    initial: Optional[HISystem] = None,
+) -> SAResult:
+    cfg = config or SAConfig()
+    rng = random.Random(cfg.seed)
+    cache = cache if cache is not None else SimCache()
+    if norm is None:
+        norm = fit_normalizer(wl, db, min(cfg.norm_samples, 2000),
+                              cfg.seed + 1, cache, evaluate_fn,
+                              cfg.max_chiplets)
+
+    cur = initial or random_system(rng, db, cfg.max_chiplets)
+    cur_m = evaluate_fn(cur, wl, db, cache=cache)
+    cur_c = sa_cost(cur_m, template, norm)
+    best, best_m, best_c = cur, cur_m, cur_c
+    history = [cur_c]
+    evals = 1
+
+    t = cfg.t_initial
+    while t > cfg.t_final:
+        for _ in range(cfg.moves_per_temp):
+            cand = propose(cur, rng, db, cfg.max_chiplets)
+            if cand is cur:
+                continue
+            m = evaluate_fn(cand, wl, db, cache=cache)
+            c = sa_cost(m, template, norm)
+            evals += 1
+            delta = c - cur_c
+            if delta <= 0 or rng.random() < math.exp(-delta / max(t, 1e-12)):
+                cur, cur_m, cur_c = cand, m, c
+                if c < best_c:
+                    best, best_m, best_c = cand, m, c
+        history.append(cur_c)
+        t *= cfg.cooling
+    return SAResult(best, best_m, best_c, history, evals, cache)

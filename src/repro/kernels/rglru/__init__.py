@@ -1,0 +1,4 @@
+from repro.kernels.rglru.ops import rglru
+from repro.kernels.rglru.ref import rglru_assoc_ref, rglru_ref
+
+__all__ = ["rglru", "rglru_ref", "rglru_assoc_ref"]

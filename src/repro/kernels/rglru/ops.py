@@ -1,0 +1,41 @@
+"""Jitted public wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru import kernel as K
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "ct", "interpret"))
+def rglru(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bc: int = 128,
+    ct: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Gated linear recurrence h_t = a_t * h_{t-1} + b_t over (B, T, C).
+
+    Pads T with a_t = 1, b_t = 0 (identity elements) and C with zeros;
+    slices the result back to the input shape.
+    """
+    bsz, t, ch = a.shape
+    interp = _default_interpret() if interpret is None else interpret
+    ct_eff = min(ct, t) if t % min(ct, t) == 0 else t
+    bc_eff = min(bc, ch) if ch % min(bc, ch) == 0 else ch
+    pt = (-t) % ct_eff
+    pc = (-ch) % bc_eff
+    if pt or pc:
+        a = jnp.pad(a, ((0, 0), (0, pt), (0, pc)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pt), (0, pc)))
+    out = K.rglru_pallas(a, b, bc=bc_eff, ct=ct_eff, interpret=interp)
+    return out[:, :t, :ch].astype(a.dtype)

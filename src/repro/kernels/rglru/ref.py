@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the RG-LRU gated linear recurrence.
+
+    h_t = a_t * h_{t-1} + b_t
+
+with elementwise decay a_t in (0, 1) and pre-gated input b_t (the
+RecurrentGemma layer computes a_t = exp(-c * softplus(lambda) * sigmoid(r_t))
+and b_t = sqrt(1 - a_t^2) * (i_t * x_t) before calling this primitive).
+
+Two formulations: a sequential lax.scan (the bitwise oracle) and an
+associative_scan (log-depth; what the long-context serving path uses).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a, b: (B, T, C) -> h: (B, T, C), via sequential scan over T."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    def one(a1, b1):
+        h0 = jnp.zeros(a1.shape[-1], jnp.float32)
+        _, hs = jax.lax.scan(step, h0, (a1.astype(jnp.float32),
+                                        b1.astype(jnp.float32)))
+        return hs
+
+    return jax.vmap(one)(a, b).astype(a.dtype)
+
+
+def rglru_assoc_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Same recurrence via associative scan: elements (a, b) compose as
+    (a2*a1, a2*b1 + b2) — log-depth on parallel hardware."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    av, bv = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    del av
+    return bv.astype(a.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.systolic_gemm.ops import systolic_gemm
+from repro.kernels.systolic_gemm.ref import gemm_ref
+
+__all__ = ["systolic_gemm", "gemm_ref"]

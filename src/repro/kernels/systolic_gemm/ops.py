@@ -1,0 +1,97 @@
+"""Jitted public wrapper for the systolic GEMM kernel.
+
+Handles padding to block multiples, dataflow dispatch, the split-K
+destination reduction, and interpret-mode selection (CPU containers run
+the kernel body in Python via ``interpret=True``; on TPU backends the
+compiled path is used).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.systolic_gemm import kernel as K
+
+DATAFLOWS = ("OS", "WS", "IS")
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "dataflow", "split_k", "out_dtype",
+                     "interpret"))
+def systolic_gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    dataflow: str = "OS",
+    split_k: int = 1,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """``a @ b`` through the paper's (dataflow, split-K, tile) mapping.
+
+    Args:
+      a: (M, K) left operand.
+      b: (K, N) right operand.
+      bm/bk/bn: BlockSpec tile shape — the paper's (t_M, t_K, t_N).
+      dataflow: OS | WS | IS (Sec IV-A).
+      split_k: number of K shards for OS; each produces a partial slab
+        reduced here (the destination-chiplet reduction). WS/IS spill one
+        slab per K block inherently.
+      out_dtype: output dtype (defaults to ``a.dtype``).
+      interpret: force Pallas interpret mode; default on non-TPU backends.
+    """
+    if dataflow not in DATAFLOWS:
+        raise ValueError(f"dataflow must be one of {DATAFLOWS}")
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"bad GEMM shapes {a.shape} x {b.shape}")
+    out_dtype = out_dtype or a.dtype
+    interp = _default_interpret() if interpret is None else interpret
+    m, n = a.shape[0], b.shape[1]
+
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    if dataflow == "OS" and split_k > 1:
+        # pad K so it also divides split_k * bk
+        kq = split_k * bk
+        pk = (-ap.shape[1]) % kq
+        if pk:
+            ap = jnp.pad(ap, ((0, 0), (0, pk)))
+            bp = jnp.pad(bp, ((0, pk), (0, 0)))
+
+    if dataflow == "OS":
+        if split_k > 1:
+            slabs = K.os_gemm_splitk(
+                ap, bp, splits=split_k, bm=bm, bk=bk, bn=bn,
+                out_dtype=jnp.float32, interpret=interp)
+            out = jnp.sum(slabs, axis=0).astype(out_dtype)
+        else:
+            out = K.os_gemm(ap, bp, bm=bm, bk=bk, bn=bn,
+                            out_dtype=out_dtype, interpret=interp)
+    elif dataflow == "WS":
+        slabs = K.ws_gemm_partials(ap, bp, bm=bm, bk=bk, bn=bn,
+                                   interpret=interp)
+        out = jnp.sum(slabs, axis=0).astype(out_dtype)
+    else:  # IS
+        slabs = K.is_gemm_partials(ap, bp, bm=bm, bk=bk, bn=bn,
+                                   interpret=interp)
+        out = jnp.sum(slabs, axis=0).astype(out_dtype)
+    return out[:m, :n]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the systolic GEMM kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray,
+             out_dtype=None) -> jnp.ndarray:
+    """Plain matmul with fp32 accumulation — the correctness oracle for
+    every (dataflow, split-K, block-shape) variant of the kernel."""
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)

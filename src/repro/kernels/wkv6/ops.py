@@ -1,0 +1,43 @@
+"""Jitted public wrapper for the WKV-6 kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6 import kernel as K
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("ct", "interpret"))
+def wkv6(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    *,
+    ct: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """RWKV-6 WKV recurrence over flattened (batch x heads, T, D) inputs.
+
+    ``w`` is the per-step decay already mapped into (0, 1); ``u`` the
+    current-token bonus. Pads T up to a chunk multiple (decay of the pad
+    region is irrelevant — outputs are sliced back).
+    """
+    g, t, d = r.shape
+    interp = _default_interpret() if interpret is None else interpret
+    ct = min(ct, t) if t % min(ct, t) == 0 else t
+    pad = (-t) % ct
+    if pad:
+        def padt(x):
+            return jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        r, k, v, w = padt(r), padt(k), padt(v), padt(w)
+    out = K.wkv6_pallas(r, k, v, w, u, ct=ct, interpret=interp)
+    return out[:, :t].astype(r.dtype)

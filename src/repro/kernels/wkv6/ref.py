@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) WKV recurrence.
+
+Per head with key/value dims D:
+    S_0 = 0                                  (D_k x D_v state)
+    y_t = r_t . (S_t + diag(u) k_t v_t^T)    (readout, current-token bonus u)
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T      (data-dependent decay w_t)
+
+Shapes: r, k, v, w are (G, T, D) with G = batch x heads flattened and
+w in (0, 1); u is (G, D). Returns y of shape (G, T, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u):
+    g, t, d = r.shape
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[:, None] * v_t[None, :]                    # (Dk, Dv)
+        y = jnp.einsum("k,kv->v", r_t, s + u_g[:, None] * kv)
+        s = w_t[:, None] * s + kv
+        return s, y
+
+    ys = []
+    for gi in range(g):
+        u_g = u[gi]
+        s0 = jnp.zeros((d, d), jnp.float32)
+        _, y = jax.lax.scan(
+            step, s0,
+            (r[gi].astype(jnp.float32), k[gi].astype(jnp.float32),
+             v[gi].astype(jnp.float32), w[gi].astype(jnp.float32)))
+        ys.append(y)
+    return jnp.stack(ys).astype(r.dtype)
+
+
+def wkv6_ref_vmapped(r, k, v, w, u):
+    """vmap formulation — used by the models (no Python loop over G)."""
+    def one(r1, k1, v1, w1, u1):
+        def step(s, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[:, None] * v_t[None, :]
+            y = jnp.einsum("k,kv->v", r_t, s + u1[:, None] * kv)
+            return w_t[:, None] * s + kv, y
+        d = r1.shape[-1]
+        _, y = jax.lax.scan(step, jnp.zeros((d, d), jnp.float32),
+                            (r1.astype(jnp.float32), k1.astype(jnp.float32),
+                             v1.astype(jnp.float32), w1.astype(jnp.float32)))
+        return y
+    return jax.vmap(one)(r, k, v, w, u).astype(r.dtype)

@@ -1,0 +1,8 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and
+# must only ever be imported as the program entry point.
+from repro.launch.mesh import (
+    axis_size,
+    data_axes,
+    make_host_mesh,
+    make_production_mesh,
+)

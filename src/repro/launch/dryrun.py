@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); 512 host devices back both the 16x16 single-pod and
+the 2x16x16 multi-pod production meshes.
+
+For every applicable cell this driver:
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...) \
+            .lower(*input_specs(arch))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())    # proves it fits
+        print(compiled.cost_analysis())      # FLOPs/bytes for the roofline
+
+and records per-cell: FLOPs, bytes, per-device memory, and the collective
+schedule (bytes per collective op parsed from the compiled HLO) into a
+JSON report consumed by EXPERIMENTS.md and benchmarks/roofline.py.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k --mesh multi                           # one cell
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.analysis.depth import depth_variants, extrapolate
+from repro.analysis.hlo import collective_bytes
+from repro.configs import ARCH_NAMES, SHAPES, applicable, get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+
+def _compile_cell(cfg, shape, mesh):
+    import functools
+    fn, args, in_sh, out_sh, static = build_cell(cfg, shape, mesh)
+    if static:
+        fn = functools.partial(fn, **static)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jitted.lower(*args)
+    return lowered.compile()
+
+
+def _cost_terms(compiled):
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0), coll)
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    t0 = time.time()
+    try:
+        with mesh:
+            # full-depth compile: memory fit + the real collective schedule
+            compiled = _compile_cell(cfg, shape, mesh)
+            t_compile = time.time() - t0
+            mem = compiled.memory_analysis()
+            flops_raw, bytes_raw, coll_raw = _cost_terms(compiled)
+            # XLA costs while-loop bodies once -> compile two reduced
+            # depths and extrapolate linearly to the full layer count
+            c1, d1, c2, d2, full = depth_variants(cfg)
+            f1, b1, coll1 = _cost_terms(_compile_cell(c1, shape, mesh))
+            f2, b2, coll2 = _cost_terms(_compile_cell(c2, shape, mesh))
+            flops = extrapolate(f1, f2, d1, d2, full)
+            nbytes = extrapolate(b1, b2, d1, d2, full)
+            coll = {
+                k: extrapolate(coll1.get(k, 0.0), coll2.get(k, 0.0),
+                               d1, d2, full)
+                for k in set(coll1) | set(coll2)
+            }
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok",
+            "flops": flops,
+            "bytes_accessed": nbytes,
+            "collectives": coll,
+            "flops_raw": flops_raw,
+            "bytes_raw": bytes_raw,
+            "collectives_raw": coll_raw,
+            "depth_extrapolation": [d1, d2, full],
+            "lower_s": 0.0,
+            "compile_s": round(t_compile, 1),
+        }
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            rec[attr] = getattr(mem, attr, None)
+        if verbose:
+            per_dev = ((rec.get("argument_size_in_bytes") or 0)
+                       + (rec.get("temp_size_in_bytes") or 0))
+            print(f"  memory_analysis: args="
+                  f"{(rec['argument_size_in_bytes'] or 0)/2**30:.2f}GiB "
+                  f"temp={(rec['temp_size_in_bytes'] or 0)/2**30:.2f}GiB "
+                  f"out={(rec['output_size_in_bytes'] or 0)/2**30:.2f}GiB "
+                  f"(per device)")
+            print(f"  cost_analysis: flops={rec['flops']:.3e} "
+                  f"bytes={rec['bytes_accessed']:.3e}")
+            print(f"  collectives: " + (", ".join(
+                f"{k}={v/2**30:.2f}GiB" for k, v in coll.items()
+                if k != 'total' and not k.endswith('_count')) or "none"))
+        return rec
+    except Exception as e:  # noqa: BLE001 — report and continue
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape (default all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="dryrun_report.json")
+    ap.add_argument("--append", action="store_true",
+                    help="merge into an existing report")
+    args = ap.parse_args(argv)
+
+    arches = [args.arch] if args.arch else list(ARCH_NAMES)
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    records = []
+    if args.append and args.out:
+        try:
+            with open(args.out) as f:
+                records = json.load(f)
+        except FileNotFoundError:
+            pass
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records
+            if r.get("status") == "ok"}
+
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch in arches:
+            for shape in shapes:
+                key = (arch, shape, mesh_name)
+                if key in done:
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {mesh_name}")
+                rec = run_cell(arch, shape, mesh, mesh_name)
+                records = [r for r in records
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                records.append(rec)
+                if rec["status"] == "error":
+                    failures += 1
+                    print(f"  ERROR: {rec['error']}")
+                elif rec["status"] == "skipped":
+                    print(f"  skipped: {rec['reason']}")
+                else:
+                    print(f"  ok in {rec['lower_s']}+{rec['compile_s']}s")
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1)
+    print(f"[dryrun] wrote {args.out}: "
+          f"{sum(r['status'] == 'ok' for r in records)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in records)} skipped, "
+          f"{failures} errors")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

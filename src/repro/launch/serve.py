@@ -1,0 +1,88 @@
+"""Serving driver: batched prefill + greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
+        --reduced --batch 4 --prompt-len 64 --gen 32
+
+Builds the mesh, prefills a batch of prompts, then runs the decode loop
+through ``serve_step`` (one new token per sequence per step against the
+sharded cache), reporting per-step latency.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import ShapeCell
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_serve_step
+from repro.models.common import DTypePolicy
+from repro.models.transformer import init_model, prefill
+from repro.distributed import sharding as shd
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--model-par", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = cfg.reduced()
+    if cfg.encoder_only:
+        raise SystemExit("encoder-only architectures have no decode step")
+    if cfg.family == "vlm":
+        raise SystemExit("vlm serving runs via the dry-run decode cells")
+    mesh = make_host_mesh(model=args.model_par)
+    policy = DTypePolicy()
+
+    cache_len = args.prompt_len + args.gen
+    params = init_model(jax.random.PRNGKey(0), cfg, policy)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    serve_fn, ispec = build_serve_step(cfg, mesh, policy)
+    shape = ShapeCell("cli", "decode", cache_len, args.batch)
+    _, in_sh, out_sh = ispec(shape)
+
+    with mesh:
+        t0 = time.time()
+        with shd.activation_policy(mesh):
+            logits, cache, length = prefill(params, cfg, prompts, cache_len,
+                                            policy)
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+        print(f"[serve] prefill {args.batch}x{args.prompt_len} "
+              f"in {t_prefill*1e3:.1f}ms")
+
+        jitted = jax.jit(serve_fn, in_shardings=in_sh, out_shardings=out_sh)
+        token = jnp.argmax(logits, -1).astype(jnp.int32)
+        generated = [token]
+        times = []
+        for i in range(args.gen - 1):
+            t0 = time.time()
+            token, logits, cache, length = jitted(params, cache, token,
+                                                  length)
+            jax.block_until_ready(token)
+            times.append(time.time() - t0)
+            generated.append(token)
+        gen = jnp.stack(generated, axis=1)
+        # skip the first (compile) step in the latency stats
+        steady = times[1:] or times
+        print(f"[serve] generated {gen.shape} tokens; "
+              f"decode latency p50 {sorted(steady)[len(steady)//2]*1e3:.2f}ms"
+              f" (first step incl. compile {times[0]*1e3:.0f}ms)")
+        print(f"[serve] sample row 0: {gen[0][:16].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,226 @@
+"""Step builders: train_step / prefill_step / serve_step with shardings.
+
+These are the functions the dry-run lowers and the drivers execute. All
+of them are pure jit-able functions of explicitly sharded pytrees; the
+builders return (fn, in_shardings, out_shardings, input_specs) so the
+launcher and the dry-run share one source of truth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeCell
+from repro.data.pipeline import make_batch_specs
+from repro.distributed import sharding as shd
+from repro.models.common import DTypePolicy
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+    prefill,
+)
+from repro.optim import adamw
+
+BF16 = DTypePolicy(jnp.bfloat16, jnp.bfloat16)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def model_shape_specs(cfg: ModelConfig, policy: DTypePolicy = BF16):
+    """ShapeDtypeStruct tree of the params (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg, policy))
+
+
+def opt_shape_specs(params_sds, opt_cfg: adamw.AdamWConfig):
+    return jax.eval_shape(lambda: adamw.init(params_sds, opt_cfg))
+
+
+# ---------------------------------------------------------------------------
+# train_step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None,
+                     policy: DTypePolicy = BF16,
+                     remat: bool = True):
+    """Returns (train_step, (in_shardings, out_shardings), input_specs_fn).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    params_sds = model_shape_specs(cfg, policy)
+    opt_sds = opt_shape_specs(params_sds, opt_cfg)
+    pspecs = shd.param_specs(params_sds, mesh)
+    ospecs = shd.opt_state_specs(opt_sds, pspecs)
+    pshardings = _named(mesh, pspecs)
+
+    def train_step(params, opt_state, batch):
+        with shd.activation_policy(mesh):
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, cfg, batch, remat=remat)
+        # pin gradients to the param layout before optimizer math — the
+        # embed/lm_head scatter grads otherwise reach AdamW replicated
+        grads = jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, grads, pshardings)
+        params, opt_state, metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    def input_specs(shape: ShapeCell):
+        batch_sds = make_batch_specs(cfg, shape)
+        bspecs = shd.batch_specs(batch_sds, mesh)
+        in_sh = (_named(mesh, pspecs), _named(mesh, ospecs),
+                 _named(mesh, bspecs))
+        out_sh = (_named(mesh, pspecs), _named(mesh, ospecs), None)
+        return (params_sds, opt_sds, batch_sds), in_sh, out_sh
+
+    return train_step, input_specs
+
+
+# ---------------------------------------------------------------------------
+# eval / encoder forward step (audio prefill cells)
+# ---------------------------------------------------------------------------
+
+
+def build_eval_step(cfg: ModelConfig, mesh: Mesh,
+                    policy: DTypePolicy = BF16):
+    def eval_step(params, batch):
+        with shd.activation_policy(mesh):
+            logits, _ = forward(params, cfg, batch.get("tokens"),
+                                batch.get("embeds"))
+        return logits
+
+    params_sds = model_shape_specs(cfg, policy)
+    pspecs = shd.param_specs(params_sds, mesh)
+
+    def input_specs(shape: ShapeCell):
+        batch_sds = make_batch_specs(cfg, shape)
+        if "labels" in batch_sds:
+            batch_sds = {k: v for k, v in batch_sds.items() if k != "labels"}
+        bspecs = shd.batch_specs(batch_sds, mesh)
+        in_sh = (_named(mesh, pspecs), _named(mesh, bspecs))
+        # logits (B, S, V): batch over DP, vocab over model
+        out_sh = None
+        return (params_sds, batch_sds), in_sh, out_sh
+
+    return eval_step, input_specs
+
+
+# ---------------------------------------------------------------------------
+# prefill_step
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                       policy: DTypePolicy = BF16):
+    """prefill_step(params, batch) -> (last logits, cache, lengths)."""
+
+    def prefill_step(params, batch, cache_len: int):
+        with shd.activation_policy(mesh):
+            if cfg.family == "vlm":
+                # stub frontend embeds are prepended inside forward; for the
+                # cache we prefill on the token stream only (backbone cells)
+                tokens = batch["tokens"]
+            else:
+                tokens = batch["tokens"]
+            return prefill(params, cfg, tokens, cache_len, policy)
+
+    params_sds = model_shape_specs(cfg, policy)
+    pspecs = shd.param_specs(params_sds, mesh)
+
+    def input_specs(shape: ShapeCell):
+        batch_sds = make_batch_specs(cfg, shape)
+        batch_sds = {k: v for k, v in batch_sds.items() if k != "labels"}
+        bspecs = shd.batch_specs(batch_sds, mesh)
+        cache_sds = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                               policy))
+        cspecs = shd.cache_specs(cache_sds, mesh)
+        in_sh = (_named(mesh, pspecs), _named(mesh, bspecs))
+        out_sh = (None, _named(mesh, cspecs), None)
+        return (params_sds, batch_sds), in_sh, out_sh
+
+    return prefill_step, input_specs
+
+
+# ---------------------------------------------------------------------------
+# serve_step (decode: one new token against the cache)
+# ---------------------------------------------------------------------------
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh,
+                     policy: DTypePolicy = BF16):
+    """serve_step(params, cache, token, length) ->
+    (next_token, logits, cache, length+1)."""
+
+    def serve_step(params, cache, token, length):
+        with shd.activation_policy(mesh, shard_residual_seq=False):
+            logits, cache = decode_step(params, cfg, token, cache, length)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache, length + 1
+
+    params_sds = model_shape_specs(cfg, policy)
+    pspecs = shd.param_specs_serving(params_sds, mesh)
+
+    def input_specs(shape: ShapeCell):
+        b = shape.global_batch
+        cache_sds = jax.eval_shape(
+            lambda: init_cache(cfg, b, shape.seq_len, policy))
+        cspecs = shd.cache_specs(cache_sds, mesh)
+        token_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+        len_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+        # serving layout: tokens/activations REPLICATED over the dp axes.
+        # Sharding the (tiny) decode batch over 'data' conflicts with the
+        # weights' FSDP dim and makes XLA all-gather every weight per
+        # step; replicated activations turn those into small activation
+        # all-reduces instead (weights stay put). Caches stay sharded.
+        tspec = P()
+        in_sh = (_named(mesh, pspecs), _named(mesh, cspecs),
+                 NamedSharding(mesh, tspec), NamedSharding(mesh, tspec))
+        out_sh = (NamedSharding(mesh, tspec), None,
+                  _named(mesh, cspecs), NamedSharding(mesh, tspec))
+        return (params_sds, cache_sds, token_sds, len_sds), in_sh, out_sh
+
+    return serve_step, input_specs
+
+
+# ---------------------------------------------------------------------------
+# Cell dispatch: which step does a (cfg, shape) cell lower?
+# ---------------------------------------------------------------------------
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh,
+               policy: DTypePolicy = BF16):
+    """Returns (fn, args_sds, in_shardings, out_shardings, static_kwargs)."""
+    if shape.kind == "train":
+        fn, ispec = build_train_step(cfg, mesh, policy=policy)
+        args, in_sh, out_sh = ispec(shape)
+        return fn, args, in_sh, out_sh, {}
+    if shape.kind == "prefill":
+        if cfg.encoder_only:
+            fn, ispec = build_eval_step(cfg, mesh, policy=policy)
+            args, in_sh, out_sh = ispec(shape)
+            return fn, args, in_sh, out_sh, {}
+        fn, ispec = build_prefill_step(cfg, mesh, policy=policy)
+        args, in_sh, out_sh = ispec(shape)
+        return fn, args, in_sh, out_sh, {"cache_len": shape.seq_len}
+    if shape.kind == "decode":
+        fn, ispec = build_serve_step(cfg, mesh, policy=policy)
+        args, in_sh, out_sh = ispec(shape)
+        return fn, args, in_sh, out_sh, {}
+    raise ValueError(shape.kind)

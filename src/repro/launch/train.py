@@ -1,0 +1,130 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt \
+        --fail-rate 0.02
+
+Runs the full production stack on whatever devices exist: sharded params
+(DP x TP via the host mesh), remat'd train step, deterministic pipeline,
+AdamW, periodic checkpointing, failure injection + restart supervision,
+straggler monitoring, and optional carbon accounting of the run.
+
+``--pathfind`` first runs the TPU carbon pathfinder (the paper's SA
+machinery over mesh/microbatch plans) and applies its chosen plan.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.shapes import ShapeCell
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_train_step
+from repro.models.common import DTypePolicy
+from repro.models.transformer import init_model
+from repro.optim import adamw
+from repro.runtime import FailureInjector, RestartSupervisor, StragglerMonitor
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--fail-rate", type=float, default=0.0)
+    ap.add_argument("--pathfind", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = cfg.reduced()
+    if cfg.family in ("audio", "vlm"):
+        raise SystemExit("train driver supports token-LM archs; "
+                         "audio/vlm run via the dry-run cells")
+    mesh = make_host_mesh(model=args.model_par)
+    policy = DTypePolicy()  # fp32 on CPU hosts
+
+    if args.pathfind:
+        from repro.analysis.tpu_pathfinder import pathfind
+        plan = pathfind(cfg, args.batch, args.seq, verbose=True)
+        print(f"[pathfind] chosen plan: {plan}")
+
+    shape = ShapeCell("cli", "train", args.seq, args.batch)
+    opt_cfg = adamw.AdamWConfig(lr_peak=args.lr, warmup_steps=10,
+                                total_steps=args.steps)
+    step_fn, ispec = build_train_step(cfg, mesh, opt_cfg, policy)
+    _, in_sh, out_sh = ispec(shape)
+
+    params = init_model(jax.random.PRNGKey(0), cfg, policy)
+    opt_state = adamw.init(params, opt_cfg)
+    pipe = SyntheticTokenPipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+
+    with mesh:
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
+
+        state = {"params": params, "opt": opt_state}
+        losses = []
+
+        def one_step(step, state):
+            batch = pipe.batch(step)
+            p, o, metrics = jitted(state["params"], state["opt"], batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e}", flush=True)
+            return {"params": p, "opt": o}
+
+        def save(step, state):
+            mgr.save(step, {"params": state["params"],
+                            "opt_mu": state["opt"].mu,
+                            "opt_nu": state["opt"].nu,
+                            "opt_step": state["opt"].step})
+
+        def restore():
+            if mgr.latest() is None:
+                return 0, {"params": params, "opt": opt_state}
+            like = {"params": params, "opt_mu": opt_state.mu,
+                    "opt_nu": opt_state.nu, "opt_step": opt_state.step}
+            step, tree = mgr.restore(like)
+            return step, {"params": tree["params"],
+                          "opt": adamw.AdamWState(tree["opt_step"],
+                                                  tree["opt_mu"],
+                                                  tree["opt_nu"])}
+
+        sup = RestartSupervisor(
+            one_step, save, restore, save_every=args.ckpt_every,
+            injector=FailureInjector(rate=args.fail_rate, seed=11),
+            monitor=StragglerMonitor())
+        t0 = time.time()
+        state = sup.run(args.steps, state)
+        wall = time.time() - t0
+
+    print(f"[train] {args.steps} steps in {wall:.1f}s; "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+          f"restarts={sup.stats.restarts} "
+          f"replayed={sup.stats.replayed_steps} "
+          f"stragglers={sup.stats.straggler_steps}")
+    return 0 if losses[-1] < losses[0] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,502 @@
+"""Attention variants: GQA (qk-norm / QKV-bias / sliding-window), MLA.
+
+All full-sequence paths use a chunked flash-style attention (online
+softmax over KV chunks inside a scan over Q chunks) so no (S, S) score
+matrix is ever materialized — mandatory for the 32k prefill cells. Decode
+paths attend a single query against the cache.
+
+Shapes: x (B, S, D); q (B, S, KV, G, Dh) grouped so KV heads are never
+`repeat`ed; caches (B, T, KV, Dh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    DTypePolicy,
+    apply_rope,
+    init_rms_norm,
+    normal_init,
+    rms_norm,
+)
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention core
+# ---------------------------------------------------------------------------
+
+
+def _attend_chunk(q, k, v, bias, scale):
+    """q: (B, qc, KV, G, Dh); k/v: (B, kc, KV, Dh); bias: f32 (qc, kc)
+    additive mask (0 / -inf) — kept 2-D so XLA's loop hoisting stores a
+    (qc, kc) constant per chunk pair instead of a full-rank bool tensor.
+    Returns (scores_max, exp_scores@v, exp_sums) for online softmax."""
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias[None, None, None]
+    m = jnp.max(s, axis=-1)                                   # (B,KV,G,qc)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                                   # (B,KV,G,qc)
+    o = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, o, l
+
+
+def _chunk_mask(q_pos, k_pos, causal, window, t):
+    """f32 additive bias (qc, kc): 0 where attended, NEG_INF where masked."""
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    mask &= k_pos[None, :] < t                     # kv padding
+    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, t_true):
+    """Flash attention on chunk-padded operands.
+
+    q: (B, NQ*qc, KV, G, Dh); k/v: (B, NK*kc, KV, Dh). Returns fp32 out of
+    q's shape. The custom VJP recomputes chunk probabilities in the
+    backward pass, so neither direction ever materializes an (S, T) score
+    matrix — this is the memory property the 32k cells depend on.
+    """
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset,
+                             q_chunk, kv_chunk, t_true)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, q_chunk, kv_chunk,
+                    t_true):
+    b, sp, kv_heads, g, dh = q.shape
+    t = t_true                     # unpadded kv length (masks the pad tail)
+    scale = 1.0 / (dh ** 0.5)
+    nq = sp // q_chunk
+    nkv = k.shape[1] // kv_chunk
+    from repro.distributed import sharding as shd
+    # pin the chunk-stacked scan inputs: chunk axes must stay UNsharded or
+    # every dynamic_slice in the scan forces an SPMD rematerialization
+    qs = shd.constrain(q.reshape(b, nq, q_chunk, kv_heads, g, dh),
+                       (shd.DATA, None, None, "model", None, None))
+    kc = shd.constrain(k.reshape(b, nkv, kv_chunk, kv_heads, dh),
+                       (shd.DATA, None, None, "model", None))
+    vc = shd.constrain(v.reshape(b, nkv, kv_chunk, kv_heads, dh),
+                       (shd.DATA, None, None, "model", None))
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+
+    def q_block(args):
+        qi, q_blk = args
+        m0 = shd.constrain(
+            jnp.full((b, kv_heads, g, q_chunk), NEG_INF, jnp.float32),
+            (shd.DATA, "model", None, None))
+        l0 = jnp.zeros_like(m0)
+        o0 = shd.constrain(
+            jnp.zeros((b, kv_heads, g, q_chunk, dh), jnp.float32),
+            (shd.DATA, "model", None, None, None))
+
+        def step(ki, carry):
+            m, l, o = carry
+            k_blk = jax.lax.dynamic_index_in_dim(kc, ki, 1, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vc, ki, 1, keepdims=False)
+            q_pos = q_offset + qi * q_chunk + q_pos_base
+            k_pos = ki * kv_chunk + k_pos_base
+            mask = _chunk_mask(q_pos, k_pos, causal, window, t)
+            mc, oc, lc = _attend_chunk(q_blk, k_blk, v_blk, mask, scale)
+            m_new = jnp.maximum(m, mc)
+            a_old = jnp.exp(m - m_new)
+            a_new = jnp.exp(mc - m_new)
+            l = l * a_old + lc * a_new
+            o = o * a_old[..., None] + oc * a_new[..., None]
+            return m_new, l, o
+
+        # block-triangular schedule: the forward is never differentiated
+        # through (custom VJP), so dynamic fori bounds are legal. Causal
+        # masking skips kv chunks beyond the q chunk's last row; windows
+        # skip chunks before the window start — ~2x fewer chunk einsums
+        # for causal prefill, O(S*W) instead of O(S^2) for local attention.
+        lo = jnp.asarray(0, jnp.int32)
+        hi = jnp.asarray(nkv, jnp.int32)
+        if causal:
+            q_end = q_offset + qi * q_chunk + q_chunk - 1
+            hi = jnp.minimum(hi, (q_end // kv_chunk + 1).astype(jnp.int32))
+        if window is not None:
+            q_start = q_offset + qi * q_chunk
+            lo = jnp.maximum(lo, ((q_start - window + 1) // kv_chunk)
+                             .astype(jnp.int32))
+        m, l, o = jax.lax.fori_loop(lo, hi, step, (m0, l0, o0))
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))   # (b, kv, g, qc)
+        return jnp.transpose(out, (0, 3, 1, 2, 4)), lse
+
+    outs, lses = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qs, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sp, kv_heads, g, dh)
+    lse = jnp.moveaxis(lses, 0, 1)                 # (b, nq, kv, g, qc)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk,
+               t_true):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset,
+                               q_chunk, kv_chunk, t_true)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, q_chunk, kv_chunk, t_true, res,
+               dout):
+    from repro.distributed import sharding as shd
+    q, k, v, out, lse = res
+    b, sp, kv_heads, g, dh = q.shape
+    t = t_true
+    scale = 1.0 / (dh ** 0.5)
+    nq = sp // q_chunk
+    nkv = k.shape[1] // kv_chunk
+    qspec = (shd.DATA, None, None, "model", None, None)
+    qs = jnp.moveaxis(shd.constrain(
+        q.reshape(b, nq, q_chunk, kv_heads, g, dh), qspec), 1, 0)
+    dos = jnp.moveaxis(shd.constrain(
+        dout.reshape(b, nq, q_chunk, kv_heads, g, dh), qspec), 1, 0)
+    kc = shd.constrain(k.reshape(b, nkv, kv_chunk, kv_heads, dh),
+                       (shd.DATA, None, None, "model", None))
+    vc = shd.constrain(v.reshape(b, nkv, kv_chunk, kv_heads, dh),
+                       (shd.DATA, None, None, "model", None))
+    # delta = rowsum(dout * out): (b, nq, kv, g, qc)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)
+    delta = jnp.moveaxis(shd.constrain(
+        delta.reshape(b, nq, q_chunk, kv_heads, g),
+        (shd.DATA, None, None, "model", None)), 1, 0)
+    lses = jnp.moveaxis(shd.constrain(
+        lse, (shd.DATA, None, "model", None, None)), 1, 0)
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+
+    def outer(carry, inp):
+        dk_t, dv_t = carry                          # (b, nkv, kc, kv, dh)
+        qi, q_blk, do_blk, dl_blk, lse_blk = inp
+        do_t = jnp.transpose(do_blk, (0, 2, 3, 1, 4))   # b,kv,g,qc,dh
+        dl_t = jnp.transpose(dl_blk, (0, 2, 3, 1))      # b,kv,g,qc
+
+        def inner(icarry, jnp_in):
+            # operands stay bf16 (f32 casts here would be loop-hoisted by
+            # XLA into full-tensor f32 copies); accumulation is f32 via
+            # preferred_element_type, p/ds cast down for their matmuls.
+            dq_c, dk_t, dv_t = icarry
+            ki, k_blk, v_blk = jnp_in
+            q_pos = q_offset + qi * q_chunk + q_pos_base
+            k_pos = ki * kv_chunk + k_pos_base
+            bias = _chunk_mask(q_pos, k_pos, causal, window, t)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + bias[None, None, None]
+            p = jnp.exp(s - lse_blk[..., None])         # b,kv,g,qc,kc f32
+            p_lo = p.astype(v.dtype)
+            dv_blk = jnp.einsum("bkgqt,bkgqd->btkd", p_lo, do_t,
+                                preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bkgqd,btkd->bkgqt", do_t, v_blk,
+                            preferred_element_type=jnp.float32)
+            ds = (p * (dp - dl_t[..., None]) * scale).astype(v.dtype)
+            dq_c += jnp.einsum("bkgqt,btkd->bqkgd", ds, k_blk,
+                               preferred_element_type=jnp.float32)
+            dk_blk = jnp.einsum("bkgqt,bqkgd->btkd", ds, q_blk,
+                                preferred_element_type=jnp.float32)
+            dk_t = dk_t.at[:, ki].add(dk_blk)
+            dv_t = dv_t.at[:, ki].add(dv_blk)
+            return (dq_c, dk_t, dv_t), None
+
+        dq0 = shd.constrain(
+            jnp.zeros((b, q_chunk, kv_heads, g, dh), jnp.float32),
+            (shd.DATA, None, "model", None, None))
+        (dq_c, dk_t, dv_t), _ = jax.lax.scan(
+            inner, (dq0, dk_t, dv_t),
+            (jnp.arange(nkv), jnp.moveaxis(kc, 1, 0),
+             jnp.moveaxis(vc, 1, 0)))
+        return (dk_t, dv_t), dq_c.astype(q.dtype)
+
+    from repro.distributed import sharding as shd
+    dk0 = shd.constrain(
+        jnp.zeros((b, nkv, kv_chunk, kv_heads, dh), jnp.float32),
+        (shd.DATA, None, None, "model", None))
+    dv0 = jnp.zeros_like(dk0)
+    (dk_t, dv_t), dqs = jax.lax.scan(
+        outer, (dk0, dv0), (jnp.arange(nq), qs, dos, delta, lses))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(q.shape).astype(q.dtype)
+    dk = dk_t.reshape(k.shape).astype(k.dtype)
+    dv = dv_t.reshape(v.shape).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(
+    q: jnp.ndarray,        # (B, S, KV, G, Dh)
+    k: jnp.ndarray,        # (B, T, KV, Dh)
+    v: jnp.ndarray,        # (B, T, KV, Dh)
+    *,
+    causal: bool,
+    q_offset: int = 0,     # absolute position of q[0] within the kv axis
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flash attention (online softmax fwd, recompute bwd);
+    returns (B, S, KV, G, Dh) in v.dtype."""
+    b, s, kv_heads, g, dh = q.shape
+    t = k.shape[1]
+    from repro.models.common import probe_mode
+    if probe_mode():          # monolithic: exact FLOP counting, no loops
+        q_chunk, kv_chunk = s, t
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    nq = -(-s // q_chunk)
+    nkv = -(-t // kv_chunk)
+    qp = nq * q_chunk - s
+    kp = nkv * kv_chunk - t
+    if qp:
+        q = jnp.pad(q, ((0, 0), (0, qp), (0, 0), (0, 0), (0, 0)))
+    if kp:
+        k = jnp.pad(k, ((0, 0), (0, kp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kp), (0, 0), (0, 0)))
+    out = _flash(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, t)
+    return out[:, :s].astype(v.dtype)
+
+
+def decode_attention(q1, k, v, *, length, window: Optional[int] = None):
+    """Single-token attention: q1 (B, KV, G, Dh) vs cache k/v (B, T, KV, Dh);
+    positions >= ``length`` (and outside the window) are masked."""
+    b, kv_heads, g, dh = q1.shape
+    t = k.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bkgd,btkd->bkgt", q1, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(t)
+    mask = pos[None] < length[:, None] if length.ndim else pos < length
+    if window is not None:
+        lo = (length if length.ndim else length[None]) - window
+        mask &= pos[None] >= lo[:, None]
+    s = jnp.where(mask[:, None, None] if mask.ndim == 2 else mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer (covers MHA/GQA/MQA, qk-norm, qkv-bias, sliding window)
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    keys = jax.random.split(key, 4)
+    p: Params = {
+        "wq": normal_init(keys[0], (d, h * dh), 1.0, policy.param_dtype),
+        "wk": normal_init(keys[1], (d, kv * dh), 1.0, policy.param_dtype),
+        "wv": normal_init(keys[2], (d, kv * dh), 1.0, policy.param_dtype),
+        "wo": normal_init(keys[3], (h * dh, d), 1.0, policy.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), policy.param_dtype)
+        p["bk"] = jnp.zeros((kv * dh,), policy.param_dtype)
+        p["bv"] = jnp.zeros((kv * dh,), policy.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(dh, policy.param_dtype)
+        p["k_norm"] = init_rms_norm(dh, policy.param_dtype)
+    return p
+
+
+def _project_qkv(p: Params, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, kv, g, dh)
+    k = k.reshape(b, s, kv, dh)
+    v = v.reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def gqa_forward(
+    p: Params, x, positions, cfg: ModelConfig, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512, kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q.reshape(b, s, -1, cfg.d_head), positions,
+                   cfg.rope_theta).reshape(q.shape)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+
+
+def gqa_prefill(p, x, positions, cfg: ModelConfig, cache_len: int, *,
+                window: Optional[int] = None, q_chunk=512, kv_chunk=1024):
+    """Forward + returns the (right-padded) KV cache of length cache_len."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q.reshape(b, s, -1, cfg.d_head), positions,
+                   cfg.rope_theta).reshape(q.shape)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    pad = cache_len - s
+    cache_k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cache_v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return y, (cache_k, cache_v)
+
+
+def gqa_decode(p, x1, cache: Tuple[jnp.ndarray, jnp.ndarray], length,
+               cfg: ModelConfig, *, window: Optional[int] = None):
+    """x1: (B, 1, D); cache k/v (B, T, KV, Dh); length (B,) current lengths.
+    Returns (y (B, 1, D), new cache)."""
+    b = x1.shape[0]
+    kv, dh = cfg.n_kv_heads, cfg.d_head
+    g = cfg.n_heads // kv
+    q, k, v = _project_qkv(p, x1, cfg)
+    pos = length.astype(jnp.int32)
+    q = apply_rope(q.reshape(b, 1, -1, dh), pos[:, None],
+                   cfg.rope_theta).reshape(b, 1, kv, g, dh)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    ck, cv = cache
+    # write the new kv at position `length` (same position for all rows
+    # requires per-row dynamic update; use one-hot scatter)
+    t = ck.shape[1]
+    onehot = jax.nn.one_hot(pos, t, dtype=ck.dtype)             # (B, T)
+    ck = ck * (1 - onehot[..., None, None]) + onehot[..., None, None] * k
+    cv = cv * (1 - onehot[..., None, None]) + onehot[..., None, None] * v[:, :1]
+    out = decode_attention(q[:, 0], ck, cv, length=pos + 1, window=window)
+    out = out.reshape(b, 1, cfg.n_heads * dh)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]), (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": normal_init(ks[0], (d, r_q), 1.0, policy.param_dtype),
+        "w_uq": normal_init(ks[1], (r_q, h * (dn + dr)), 1.0,
+                            policy.param_dtype),
+        "w_dkv": normal_init(ks[2], (d, r_kv + dr), 1.0, policy.param_dtype),
+        "w_uk": normal_init(ks[3], (r_kv, h * dn), 1.0, policy.param_dtype),
+        "w_uv": normal_init(ks[4], (r_kv, h * dv), 1.0, policy.param_dtype),
+        "wo": normal_init(ks[5], (h * dv, d), 1.0, policy.param_dtype),
+        "kv_norm": init_rms_norm(r_kv, policy.param_dtype),
+        "q_norm": init_rms_norm(r_q, policy.param_dtype),
+    }
+
+
+def _mla_qkv(p: Params, x, positions, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsr,re->bse", cq, p["w_uq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    ckv, k_rope = ckv_full[..., :r_kv], ckv_full[..., r_kv:]
+    ckv = rms_norm(ckv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, k_rope[:, :, 0]
+
+
+def mla_forward(p: Params, x, positions, cfg: ModelConfig, *,
+                q_chunk=256, kv_chunk=512) -> jnp.ndarray:
+    """Training/prefill path: materialize per-head K/V from the latent and
+    run chunked attention with the concatenated [nope | rope] key."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, positions, cfg)
+    k_nope = jnp.einsum("bsr,re->bse", ckv, p["w_uk"]).reshape(b, s, h, dn)
+    v = jnp.einsum("bsr,re->bse", ckv, p["w_uv"]).reshape(b, s, h, dv)
+    # pad v up to key width so one attention call serves both (sliced after)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)              # (b,s,h,dn+dr)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (b, s, h, dr))], axis=-1)
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    out = chunked_attention(q[:, :, :, None, :].reshape(b, s, h, 1, dn + dr),
+                            k, vp, causal=True,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(b, s, h, dn + dr)[..., :dv]
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dv), p["wo"])
+
+
+def mla_prefill(p, x, positions, cfg: ModelConfig, cache_len: int, **kw):
+    """Returns forward output + the *latent* cache (c_kv, k_rope) — the
+    MLA compression that makes 32k-decode caches rank-512 instead of
+    per-head: (B, T, r_kv) + (B, T, dr)."""
+    b, s, _ = x.shape
+    y = mla_forward(p, x, positions, cfg, **kw)
+    _, _, ckv, k_rope = _mla_qkv(p, x, positions, cfg)
+    pad = cache_len - s
+    c1 = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+    c2 = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    return y, (c1, c2)
+
+
+def mla_decode(p, x1, cache, length, cfg: ModelConfig):
+    """Absorbed decode: queries are mapped into the latent space
+    (q_nope @ W_uk) so attention runs directly against the latent cache."""
+    b = x1.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    pos = length.astype(jnp.int32)
+    q_nope, q_rope, ckv_new, k_rope_new = _mla_qkv(
+        p, x1, pos[:, None], cfg)
+    c_cache, r_cache = cache
+    t = c_cache.shape[1]
+    onehot = jax.nn.one_hot(pos, t, dtype=c_cache.dtype)
+    c_cache = c_cache * (1 - onehot[..., None]) + onehot[..., None] * ckv_new
+    r_cache = r_cache * (1 - onehot[..., None]) + onehot[..., None] * k_rope_new
+    # absorb: q_lat (b,h,r_kv) = q_nope @ W_uk per head
+    w_uk = p["w_uk"].reshape(r_kv, h, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    s_lat = jnp.einsum("bhr,btr->bht", q_lat, c_cache)
+    s_rope = jnp.einsum("bhd,btd->bht", q_rope[:, 0], r_cache)
+    scores = (s_lat + s_rope).astype(jnp.float32) * scale
+    mask = jnp.arange(t)[None] <= pos[:, None]
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_cache.dtype)
+    ctx = jnp.einsum("bht,btr->bhr", probs, c_cache)            # latent ctx
+    w_uv = p["w_uv"].reshape(r_kv, h, dv)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(b, 1, h * dv)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]), (c_cache, r_cache)

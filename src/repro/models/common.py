@@ -1,0 +1,123 @@
+"""Shared model building blocks: norms, RoPE, initializers, dtype policy.
+
+All models are pure-functional: params are pytrees of jnp arrays created by
+``init_*`` functions and consumed by ``apply``-style functions. Layers are
+stacked along a leading axis and iterated with ``lax.scan`` so HLO size and
+compile time are O(1) in depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# Cost-probe mode (set from cfg.unroll_layers by the model entry points):
+# layer stacks run as Python loops, flash attention goes monolithic
+# (nq = nkv = 1) and the loss uses a single chunk, so XLA's cost analysis
+# (which visits while-loop bodies once) sees every FLOP. Probe modules are
+# compiled for analysis only — never executed.
+import threading as _threading
+
+_PROBE = _threading.local()
+
+
+def set_probe_mode(on: bool) -> None:
+    _PROBE.value = bool(on)
+
+
+def probe_mode() -> bool:
+    return bool(getattr(_PROBE, "value", False))
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @classmethod
+    def bf16(cls) -> "DTypePolicy":
+        return cls(jnp.bfloat16, jnp.bfloat16)
+
+
+def normal_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: (..., S). Rotates pairs (2i, 2i+1)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (Dh/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scan-over-layers helper
+# ---------------------------------------------------------------------------
+
+
+def stack_layer_params(per_layer: Callable[[jax.Array], Params],
+                       key: jax.Array, n_layers: int) -> Params:
+    """Initialize n_layers copies of a layer and stack each leaf along a
+    leading axis, producing the pytree ``lax.scan`` consumes."""
+    keys = jax.random.split(key, n_layers)
+    trees = [per_layer(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def scan_layers(block: Callable, stacked: Params, x: jnp.ndarray,
+                *broadcast) -> jnp.ndarray:
+    """Run ``block(layer_params, x, *broadcast) -> x`` over stacked layers."""
+    def body(carry, layer_params):
+        return block(layer_params, carry, *broadcast), None
+
+    out, _ = jax.lax.scan(body, x, stacked)
+    return out
+
+
+def scan_layers_with_state(block: Callable, stacked: Params,
+                           x: jnp.ndarray, states: Any,
+                           *broadcast) -> Tuple[jnp.ndarray, Any]:
+    """Like :func:`scan_layers` but each layer also consumes and produces a
+    per-layer state (KV cache slab, recurrent state), stacked likewise."""
+    def body(carry, inp):
+        layer_params, state = inp
+        new_carry, new_state = block(layer_params, carry, state, *broadcast)
+        return new_carry, new_state
+
+    out, new_states = jax.lax.scan(body, x, (stacked, states))
+    return out, new_states

@@ -1,0 +1,261 @@
+"""Feed-forward layers: SwiGLU MLP and capacity-based top-k MoE.
+
+The MoE dispatch is sort-based gather/scatter: tokens are routed to
+(expert, slot) coordinates via an argsort over expert assignments, expert
+FFNs run as one batched einsum over the (E, C, D) gathered block, and
+results scatter-add back weighted by router gates. Compiled matmul FLOPs
+therefore track 6*N_active*D — no one-hot einsum over all experts.
+
+Under pjit the expert axis E shards over the 'model' mesh axis (EP); the
+gather/scatter lower to all-to-alls across it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import DTypePolicy, normal_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, policy: DTypePolicy) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_init(ks[0], (d_model, d_ff), 1.0, policy.param_dtype),
+        "w_up": normal_init(ks[1], (d_model, d_ff), 1.0, policy.param_dtype),
+        "w_down": normal_init(ks[2], (d_ff, d_model), 1.0, policy.param_dtype),
+    }
+
+
+def mlp_forward(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["w_gate"]))
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    return jnp.einsum("...f,fd->...d", gate * up, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": normal_init(ks[0], (d, e), 1.0, jnp.float32),
+        "w_gate": normal_init(ks[1], (e, d, f), 1.0, policy.param_dtype),
+        "w_up": normal_init(ks[2], (e, d, f), 1.0, policy.param_dtype),
+        "w_down": normal_init(ks[3], (e, f, d), 1.0, policy.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d,
+                               cfg.moe_d_ff * cfg.n_shared_experts, policy)
+    return p
+
+
+def _route(router_logits: jnp.ndarray, top_k: int):
+    """Top-k routing with softmax over the selected experts' logits."""
+    gates, idx = jax.lax.top_k(router_logits, top_k)       # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    return gates, idx
+
+
+def moe_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                capacity: Optional[int] = None,
+                exact: bool = False,
+                serving: bool = False) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D). Tokens over capacity are dropped (their
+    contribution falls back to the shared experts / residual path).
+    ``exact=True`` (decode/prefill paths) sizes capacity so nothing drops.
+
+    When a mesh activation policy is live (pjit steps) the expert-parallel
+    shard_map path runs for the big token counts of train/prefill; decode
+    (``serving=True``, a handful of tokens) stays on the local dispatch —
+    its tensors are tiny and SPMD turns the E-sharded expert matmuls into
+    small activation all-reduces with the weights stationary.
+    """
+    from repro.distributed import sharding as shd
+    mesh = shd.active_mesh()
+    if (not serving and mesh is not None and "model" in mesh.axis_names
+            and mesh.shape["model"] > 1
+            and cfg.n_experts % mesh.shape["model"] == 0):
+        return moe_forward_ep(p, x, cfg, mesh, exact=exact)
+    return _moe_forward_local(p, x, cfg, capacity, exact)
+
+
+def _moe_forward_local(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                       capacity: Optional[int] = None,
+                       exact: bool = False) -> jnp.ndarray:
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    gates, expert_idx = _route(logits, k)                   # (T,k), (T,k)
+
+    if capacity is None:
+        if exact:
+            capacity = t * k       # worst case: every token on one expert
+        else:
+            capacity = int(t * k / e * cfg.capacity_factor) + 1
+
+    # flatten (token, k) pairs and sort by expert id
+    flat_expert = expert_idx.reshape(-1)                    # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), k)               # (T*k,)
+    flat_gate = gates.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # position within each expert's contiguous run -> capacity slot
+    ones = jnp.ones_like(sorted_expert)
+    run_pos = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(e), side="left")
+    slot = run_pos - seg_start[sorted_expert]               # (T*k,)
+    keep = slot < capacity
+
+    # gather tokens into (E, C, D); E shards over 'model' (EP), the slot
+    # axis over the DP axes so the expert batch never lives replicated
+    from repro.distributed import sharding as shd
+    slot_c = jnp.where(keep, slot, capacity - 1)
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[sorted_expert, slot_c].add(
+        jnp.where(keep[:, None], xf[sorted_token], 0).astype(x.dtype))
+    buf = shd.constrain(buf, ("model", None, None))
+
+    # batched expert FFN: (E, C, D) x (E, D, F). The E axis stays sharded
+    # over 'model' (weights stationary); under the serving layout the FFN
+    # dim is dp-sharded so gate/up are comm-free and only w_down's output
+    # all-reduces.
+    gate_act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", gate_act * up, p["w_down"])
+
+    # scatter back, weighted by gates
+    gathered = out_buf[sorted_expert, slot_c]               # (T*k, D)
+    contrib = jnp.where(keep[:, None], gathered
+                        * sorted_gate[:, None].astype(x.dtype), 0)
+    y = jnp.zeros((t, d), x.dtype).at[sorted_token].add(contrib)
+
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], xf)
+    return y.reshape(b, s, d)
+
+
+def moe_forward_ep(p: Params, x: jnp.ndarray, cfg: ModelConfig, mesh,
+                   exact: bool = False) -> jnp.ndarray:
+    """Expert-parallel MoE via shard_map (the production path).
+
+    Layout: tokens replicated across the 'model' axis (batch stays on the
+    DP axes); experts sharded over 'model' (E_loc per shard). Each shard
+    routes its local tokens, runs ONLY its own experts on a local
+    capacity buffer (zero-communication dispatch), and the partial outputs
+    psum over 'model' — one activation all-reduce per MoE layer instead of
+    the scatter/gather storm SPMD infers for a global dispatch. This is
+    the paper's split-K story at the package level: partial results
+    produced where the weights live, reduced at the destination.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import data_axes
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    ep = mesh.shape["model"]
+    e_loc = e // ep
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    b_spec = dp if (dp and b % dp_size == 0) else None
+    t_loc = (b // dp_size if b_spec else b) * s
+    if exact:
+        cap = t_loc * k
+    else:
+        cap = int(t_loc * k / e * cfg.capacity_factor) + 1
+
+    scatter_combine = (x.shape[1] % ep == 0)
+
+    def body(xb, router, w_gate, w_up, w_down):
+        # xb: (B_loc, S, D) replicated over 'model'; experts local slices.
+        my = jax.lax.axis_index("model")
+        tl = xb.shape[0] * xb.shape[1]
+        xf = xb.reshape(tl, d)
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), router)
+        gates, expert_idx = _route(logits, k)               # (T_loc, k)
+        flat_e = expert_idx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(tl), k)
+        flat_g = gates.reshape(-1)
+        # keep only assignments owned by this shard's experts
+        local = (flat_e // e_loc) == my
+        le = jnp.where(local, flat_e % e_loc, e_loc)        # e_loc = trash
+        order = jnp.argsort(le, stable=True)
+        se, st, sg = le[order], flat_t[order], flat_g[order]
+        ones = jnp.ones_like(se)
+        run = jnp.cumsum(ones) - 1
+        seg = jnp.searchsorted(se, jnp.arange(e_loc + 1), side="left")
+        slot = run - seg[jnp.minimum(se, e_loc)]
+        keep = (slot < cap) & (se < e_loc)
+        slot_c = jnp.where(keep, slot, cap - 1)
+        se_c = jnp.where(keep, se, 0)
+        # build the small (e_loc, cap) slot->token map + per-slot gates so
+        # the only D-wide tensors are the (e_loc, cap, D) expert buffers —
+        # never a (T_loc*k, D) flat intermediate
+        slot_token = jnp.zeros((e_loc, cap), jnp.int32).at[se_c, slot_c].max(
+            jnp.where(keep, st, 0))
+        slot_gate = jnp.zeros((e_loc, cap), jnp.float32).at[se_c, slot_c].max(
+            jnp.where(keep, sg, 0.0))
+        slot_valid = jnp.zeros((e_loc, cap), bool).at[se_c, slot_c].max(keep)
+        buf = jnp.where(slot_valid[..., None], xf[slot_token], 0)
+        gate_act = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+        up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+        out_buf = jnp.einsum("ecf,efd->ecd", gate_act * up, w_down)
+        weighted = out_buf * (slot_gate * slot_valid)[..., None].astype(
+            out_buf.dtype)
+        y = jnp.zeros((tl, d), xb.dtype).at[
+            slot_token.reshape(-1)].add(weighted.reshape(-1, d))
+        if scatter_combine:
+            # reduce-scatter the combine onto the seq-sharded residual
+            # layout: moves half the bytes of a full all-reduce and saves
+            # the re-shard the next layer boundary would insert anyway
+            y = y.reshape(xb.shape[0], xb.shape[1], d)
+            return jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                        tiled=True)   # (b, s/ep, d)
+        y = jax.lax.psum(y, "model")                        # combine
+        return y.reshape(xb.shape)
+
+    in_specs = (P(b_spec, None, None), P(), P("model"), P("model"),
+                P("model"))
+    out_specs = (P(b_spec, "model", None) if scatter_combine
+                 else P(b_spec, None, None))
+    y = shard_map(body, mesh=mesh, in_specs=in_specs,
+                  out_specs=out_specs, check_vma=False)(
+        x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], x)
+    return y
+
+
+def moe_aux_loss(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Load-balancing auxiliary loss (Switch-style: E * sum(f_e * p_e))."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(logits, cfg.top_k)
+    counts = jnp.zeros((cfg.n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac_tokens = counts / counts.sum()
+    frac_probs = probs.mean(axis=0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

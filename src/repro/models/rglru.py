@@ -1,0 +1,116 @@
+"""RecurrentGemma / Griffin recurrent block: temporal conv + RG-LRU.
+
+Block structure per [arXiv:2402.19427]:
+    gate branch : x -> linear(d -> w) -> GeLU
+    input branch: x -> linear(d -> w) -> causal depthwise conv1d(width 4)
+                    -> RG-LRU
+    merge       : gate * lru_out -> linear(w -> d)
+
+RG-LRU (block-diagonal gates over H heads, as in the released model):
+    r_t = sigmoid(Wa xi_t);  i_t = sigmoid(Wx xi_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)              (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+The scan itself is the Pallas kernel (:mod:`repro.kernels.rglru`) on TPU;
+here the associative-scan oracle is the default lowering.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import DTypePolicy, normal_init
+
+Params = Dict[str, jnp.ndarray]
+
+RG_C = 8.0
+N_GATE_BLOCKS = 16
+
+
+def init_rg_block(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    d = cfg.d_model
+    w = cfg.rg_lru_width or d
+    bw = w // N_GATE_BLOCKS
+    ks = jax.random.split(key, 7)
+    dt = policy.param_dtype
+    return {
+        "w_in": normal_init(ks[0], (d, w), 1.0, dt),
+        "w_gate": normal_init(ks[1], (d, w), 1.0, dt),
+        "conv_w": normal_init(ks[2], (cfg.rg_conv_width, w), 1.0, dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "gate_a": normal_init(ks[3], (N_GATE_BLOCKS, bw, bw), 1.0, dt),
+        "gate_a_b": jnp.zeros((w,), dt),
+        "gate_x": normal_init(ks[4], (N_GATE_BLOCKS, bw, bw), 1.0, dt),
+        "gate_x_b": jnp.zeros((w,), dt),
+        # Lambda parameterized so a is stable in (0.9, 0.999) at init
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (w,), jnp.float32, 0.2, 0.9)),
+        "w_out": normal_init(ks[6], (w, d), 1.0, dt),
+    }
+
+
+def _block_diag(x: jnp.ndarray, wts: jnp.ndarray, bias) -> jnp.ndarray:
+    """x: (..., W) with W = H*bw; wts: (H, bw, bw)."""
+    h, bw, _ = wts.shape
+    xb = x.reshape(*x.shape[:-1], h, bw)
+    out = jnp.einsum("...hb,hbc->...hc", xb, wts)
+    return out.reshape(*x.shape) + bias
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over (B, S, W); kernel (K, W). ``state`` is
+    the trailing K-1 inputs from the previous segment (decode carry).
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return y, xp[:, -(k - 1):]
+
+
+def _rg_lru_coeffs(p: Params, xi: jnp.ndarray):
+    r = jax.nn.sigmoid(_block_diag(xi, p["gate_a"], p["gate_a_b"]))
+    i = jax.nn.sigmoid(_block_diag(xi, p["gate_x"], p["gate_x_b"]))
+    log_a = (-RG_C * jax.nn.softplus(p["lam"])
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via log: 0.5*log1p(-exp(2 log_a))
+    mult = jnp.exp(0.5 * jnp.log1p(-jnp.exp(2 * log_a)
+                                   + 1e-12))
+    b = mult * (i.astype(jnp.float32) * xi.astype(jnp.float32))
+    return a, b
+
+
+def _assoc_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t over axis 1 via associative scan."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rg_block_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                     state: Optional[Tuple] = None):
+    """x: (B, S, D). state = (conv_state (B, K-1, W), h (B, W)) or None.
+    Returns (y, new_state)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    xi = jnp.einsum("bsd,dw->bsw", x, p["w_in"])
+    conv_state = None if state is None else state[0]
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    a, b = _rg_lru_coeffs(p, xi)
+    h0 = None if state is None else state[1]
+    h = _assoc_scan(a, b, h0)
+    y = (h.astype(x.dtype) * gate)
+    y = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return y, (new_conv, h[:, -1])

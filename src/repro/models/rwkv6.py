@@ -1,0 +1,154 @@
+"""RWKV-6 (Finch) blocks: data-dependent token-shift time mix + channel mix.
+
+Faithful structure per [arXiv:2404.05892]: the time-mix block derives its
+five projections (r, k, v, w-decay, gate) from data-dependent lerps between
+the token and its predecessor (the low-rank "ddlerp"), runs the WKV
+recurrence with per-channel data-dependent decay, applies a per-head group
+norm, and gates the output. The channel-mix block is a squared-ReLU MLP
+with receptance gating.
+
+The WKV recurrence itself is the Pallas kernel
+(:mod:`repro.kernels.wkv6`) on TPU; the pure-jnp scan here is the oracle
+and the default on CPU substrates (and is what the dry-run lowers).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import DTypePolicy, init_rms_norm, normal_init, rms_norm
+
+Params = Dict[str, jnp.ndarray]
+
+LORA_RANK = 32
+HEAD_DIM = 64
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def init_time_mix(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    d = cfg.d_model
+    h = n_heads(cfg)
+    ks = jax.random.split(key, 12)
+    dt = policy.param_dtype
+    return {
+        # ddlerp: base mixes + shared lora (d -> 5*rank -> d per target)
+        "mu_x": jnp.full((d,), 0.5, dt),
+        "mu": jnp.full((5, d), 0.5, dt),
+        "lora_a": normal_init(ks[0], (d, 5 * LORA_RANK), 0.1, dt),
+        "lora_b": normal_init(ks[1], (5, LORA_RANK, d), 0.1, dt),
+        # projections
+        "w_r": normal_init(ks[2], (d, d), 1.0, dt),
+        "w_k": normal_init(ks[3], (d, d), 1.0, dt),
+        "w_v": normal_init(ks[4], (d, d), 1.0, dt),
+        "w_g": normal_init(ks[5], (d, d), 1.0, dt),
+        "w_o": normal_init(ks[6], (d, d), 1.0, dt),
+        # decay: w0 + lora_w(x)
+        "w0": jnp.full((d,), -6.0, dt),
+        "decay_a": normal_init(ks[7], (d, LORA_RANK * 2), 0.1, dt),
+        "decay_b": normal_init(ks[8], (LORA_RANK * 2, d), 0.1, dt),
+        # current-token bonus
+        "u": normal_init(ks[9], (h, HEAD_DIM), 0.5, jnp.float32),
+        # per-head group norm
+        "gn": init_rms_norm(d, dt),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = policy.param_dtype
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "w_k": normal_init(ks[0], (d, f), 1.0, dt),
+        "w_v": normal_init(ks[1], (f, d), 1.0, dt),
+        "w_r": normal_init(ks[2], (d, d), 1.0, dt),
+    }
+
+
+def _shift(x: jnp.ndarray, last: jnp.ndarray = None) -> jnp.ndarray:
+    """Previous-token sequence; position 0 sees ``last`` (decode carry) or
+    zeros."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, 0]) if last is None else last
+    return prev.at[:, 0].set(first)
+
+
+def _ddlerp(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Data-dependent lerp producing the five mixed inputs (r,k,v,w,g)."""
+    sx = x_prev - x                                            # (B,S,D)
+    base = x + sx * p["mu_x"]
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, p["lora_a"]))
+    lo = lo.reshape(*lo.shape[:-1], 5, LORA_RANK)
+    adj = jnp.einsum("bsir,ird->bsid", lo, p["lora_b"])        # (B,S,5,D)
+    mixed = x[:, :, None] + sx[:, :, None] * (p["mu"] + adj)
+    return tuple(mixed[:, :, i] for i in range(5))             # r,k,v,w,g
+
+
+def _decay(p: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel data-dependent decay in (0, 1)."""
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["decay_a"]))
+    dw = jnp.einsum("bsr,rd->bsd", lo, p["decay_b"])
+    return jnp.exp(-jnp.exp((p["w0"] + dw).astype(jnp.float32)))
+
+
+def wkv_scan(r, k, v, w, u, s0=None):
+    """Oracle recurrence over (B, S, H, Dh) tensors; returns (y, final S).
+
+    S has shape (B, H, Dh_k, Dh_v); the u-bonus adds u[k]*k_t[k]*v_t[v]
+    for the current token only."""
+    b, s, h, dh = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                               # (B,H,Dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]             # (B,H,Dk,Dv)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[None, :, :, None] * kv)
+        state = w_t[..., :, None] * state + kv
+        return state, y
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def time_mix_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                     state: Tuple = None):
+    """x: (B, S, D). state = (last_x (B,D), wkv_state (B,H,Dh,Dh)) for
+    decode continuation; returns (y, new_state)."""
+    b, s, d = x.shape
+    h = n_heads(cfg)
+    last_x = None if state is None else state[0]
+    x_prev = _shift(x, last_x)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(b, s, h, HEAD_DIM)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(b, s, h, HEAD_DIM)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(b, s, h, HEAD_DIM)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]))
+    w = _decay(p, xw).reshape(b, s, h, HEAD_DIM)
+
+    s0 = None if state is None else state[1]
+    y, wkv_state = wkv_scan(r, k, v, w, p["u"], s0)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["gn"])                                   # head norm
+    y = jnp.einsum("bsd,de->bse", y * g, p["w_o"])
+    return y, (x[:, -1], wkv_state)
+
+
+def channel_mix_forward(p: Params, x: jnp.ndarray,
+                        state: jnp.ndarray = None):
+    """state = last_x (B, D); returns (y, new_state)."""
+    x_prev = _shift(x, state)
+    xk = x + (x_prev - x) * p["mu_k"]
+    xr = x + (x_prev - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["w_k"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"]))
+    return r * kv, x[:, -1]

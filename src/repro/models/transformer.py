@@ -1,0 +1,747 @@
+"""Model assembly for all architecture families.
+
+Families and their layer structure:
+  dense  — uniform decoder layers (GQA + SwiGLU), lax.scan over the stack
+  vlm    — dense backbone consuming stub patch embeddings as a prefix
+  audio  — encoder-only (bidirectional) layers over stub frame embeddings
+  moe    — deepseek-style (MLA attention + shared/routed MoE, leading dense
+           layers) or llama4-style (GQA + MoE interleaved every ``moe_every``)
+  hybrid — recurrentgemma groups (rglru, rglru, local-attention) + tail
+  ssm    — rwkv6 (time-mix + channel-mix), attention-free
+
+Every family exposes the same functional API:
+  init_model(key, cfg, policy)                   -> params
+  forward(params, cfg, tokens | embeds, ...)     -> logits (B, S, V)
+  loss_fn(params, cfg, batch)                    -> scalar (chunked CE)
+  init_cache(cfg, batch_size, cache_len, policy) -> decode state pytree
+  prefill(params, cfg, tokens, cache_len)        -> (last_logits, cache, len)
+  decode_step(params, cfg, token, cache, length) -> (logits, cache)
+
+Layers are stacked and scanned: HLO size is O(1) in depth, which keeps the
+62-cell dry-run compilable on one CPU core.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import (
+    DTypePolicy,
+    init_rms_norm,
+    normal_init,
+    rms_norm,
+    stack_layer_params,
+)
+
+Params = Dict[str, Any]
+
+MOE_AUX_WEIGHT = 0.01
+LOSS_CHUNK = 1024
+
+from repro.models.common import probe_mode, set_probe_mode
+
+
+def _set_unroll(cfg):
+    set_probe_mode(getattr(cfg, "unroll_layers", False))
+
+
+def maybe_scan(body, init, xs):
+    """lax.scan by default (O(1) HLO in depth); a Python loop in probe
+    mode so XLA's cost analysis (which visits while bodies once) sees
+    every layer."""
+    if not probe_mode():
+        return jax.lax.scan(body, init, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(length):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Layer initializers
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_layer(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, policy.param_dtype),
+        "attn": attn.init_gqa(k1, cfg, policy),
+        "ln2": init_rms_norm(cfg.d_model, policy.param_dtype),
+        "mlp": moe_mod.init_mlp(k2, cfg.d_model, cfg.d_ff, policy),
+    }
+
+
+def _init_moe_layer(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    k1, k2 = jax.random.split(key)
+    layer = {
+        "ln1": init_rms_norm(cfg.d_model, policy.param_dtype),
+        "ln2": init_rms_norm(cfg.d_model, policy.param_dtype),
+        "moe": moe_mod.init_moe(k2, cfg, policy),
+    }
+    layer["attn"] = (attn.init_mla(k1, cfg, policy) if cfg.use_mla
+                     else attn.init_gqa(k1, cfg, policy))
+    return layer
+
+
+def _init_deepseek_dense(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, policy.param_dtype),
+        "attn": attn.init_mla(k1, cfg, policy),
+        "ln2": init_rms_norm(cfg.d_model, policy.param_dtype),
+        "mlp": moe_mod.init_mlp(k2, cfg.d_model,
+                                cfg.dense_d_ff or cfg.d_ff, policy),
+    }
+
+
+def _init_hybrid_group(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    """(rglru, rglru, local-attn), each with its own MLP."""
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    def mlp(k):
+        return moe_mod.init_mlp(k, d, cfg.d_ff, policy)
+    return {
+        "rg1": {"ln1": init_rms_norm(d, policy.param_dtype),
+                "block": rg_mod.init_rg_block(ks[0], cfg, policy),
+                "ln2": init_rms_norm(d, policy.param_dtype),
+                "mlp": mlp(ks[1])},
+        "rg2": {"ln1": init_rms_norm(d, policy.param_dtype),
+                "block": rg_mod.init_rg_block(ks[2], cfg, policy),
+                "ln2": init_rms_norm(d, policy.param_dtype),
+                "mlp": mlp(ks[3])},
+        "attn": {"ln1": init_rms_norm(d, policy.param_dtype),
+                 "attn": attn.init_gqa(ks[4], cfg, policy),
+                 "ln2": init_rms_norm(d, policy.param_dtype),
+                 "mlp": mlp(ks[5])},
+    }
+
+
+def _init_rwkv_layer(key, cfg: ModelConfig, policy: DTypePolicy) -> Params:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": init_rms_norm(d, policy.param_dtype),
+        "tm": rwkv_mod.init_time_mix(k1, cfg, policy),
+        "ln2": init_rms_norm(d, policy.param_dtype),
+        "cm": rwkv_mod.init_channel_mix(k2, cfg, policy),
+    }
+
+
+def init_model(key, cfg: ModelConfig,
+               policy: DTypePolicy = DTypePolicy()) -> Params:
+    ke, kl, kh, kt = jax.random.split(key, 4)
+    d = cfg.d_model
+    params: Params = {
+        "embed": normal_init(ke, (cfg.vocab, d), 1.0, policy.param_dtype),
+        "final_norm": init_rms_norm(d, policy.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(kh, (d, cfg.vocab), 1.0,
+                                        policy.param_dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        params["layers"] = stack_layer_params(
+            lambda k: _init_dense_layer(k, cfg, policy), kl, cfg.n_layers)
+    elif fam == "moe":
+        if cfg.moe_every > 1:  # llama4: (dense, moe) groups
+            n_groups = cfg.n_layers // cfg.moe_every
+            def group(k):
+                k1, k2 = jax.random.split(k)
+                return {"dense": _init_dense_layer(k1, cfg, policy),
+                        "moe": _init_moe_layer(k2, cfg, policy)}
+            params["groups"] = stack_layer_params(group, kl, n_groups)
+        else:                  # deepseek: leading dense + uniform moe
+            n_moe = cfg.n_layers - cfg.first_dense
+            if n_moe:
+                params["moe_layers"] = stack_layer_params(
+                    lambda k: _init_moe_layer(k, cfg, policy), kl, n_moe)
+            if cfg.first_dense:
+                params["dense_layers"] = stack_layer_params(
+                    lambda k: _init_deepseek_dense(k, cfg, policy),
+                    kt, cfg.first_dense)
+    elif fam == "hybrid":
+        pat = len(cfg.block_pattern)
+        n_groups = cfg.n_layers // pat
+        tail = cfg.n_layers - n_groups * pat
+        params["groups"] = stack_layer_params(
+            lambda k: _init_hybrid_group(k, cfg, policy), kl, n_groups)
+        if tail:
+            params["tail"] = stack_layer_params(
+                lambda k: {"ln1": init_rms_norm(d, policy.param_dtype),
+                           "block": rg_mod.init_rg_block(k, cfg, policy),
+                           "ln2": init_rms_norm(d, policy.param_dtype),
+                           "mlp": moe_mod.init_mlp(
+                               jax.random.fold_in(k, 1), d, cfg.d_ff,
+                               policy)},
+                kt, tail)
+    elif fam == "ssm":
+        params["layers"] = stack_layer_params(
+            lambda k: _init_rwkv_layer(k, cfg, policy), kl, cfg.n_layers)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / evaluation, full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(lp, x, positions, cfg, *, causal=True, window=None):
+    h = rms_norm(x, lp["ln1"])
+    x = x + attn.gqa_forward(lp["attn"], h, positions, cfg,
+                             causal=causal, window=window)
+    h = rms_norm(x, lp["ln2"])
+    return x + moe_mod.mlp_forward(lp["mlp"], h)
+
+
+def _moe_block(lp, x, positions, cfg):
+    h = rms_norm(x, lp["ln1"])
+    if cfg.use_mla:
+        x = x + attn.mla_forward(lp["attn"], h, positions, cfg)
+    else:
+        x = x + attn.gqa_forward(lp["attn"], h, positions, cfg)
+    h = rms_norm(x, lp["ln2"])
+    y = moe_mod.moe_forward(lp["moe"], h, cfg)
+    aux = moe_mod.moe_aux_loss(lp["moe"], h, cfg)
+    return x + y, aux
+
+
+def _deepseek_dense_block(lp, x, positions, cfg):
+    h = rms_norm(x, lp["ln1"])
+    x = x + attn.mla_forward(lp["attn"], h, positions, cfg)
+    h = rms_norm(x, lp["ln2"])
+    return x + moe_mod.mlp_forward(lp["mlp"], h)
+
+
+def _rg_sub_block(lp, x, cfg, state=None):
+    h = rms_norm(x, lp["ln1"])
+    y, new_state = rg_mod.rg_block_forward(lp["block"], h, cfg, state)
+    x = x + y
+    h = rms_norm(x, lp["ln2"])
+    return x + moe_mod.mlp_forward(lp["mlp"], h), new_state
+
+
+def _rwkv_block(lp, x, cfg, state=None):
+    tm_state = None if state is None else (state["tm_x"], state["wkv"])
+    cm_state = None if state is None else state["cm_x"]
+    h = rms_norm(x, lp["ln1"])
+    y, (tm_x, wkv) = rwkv_mod.time_mix_forward(lp["tm"], h, cfg, tm_state)
+    x = x + y
+    h = rms_norm(x, lp["ln2"])
+    y, cm_x = rwkv_mod.channel_mix_forward(lp["cm"], h, cm_state)
+    return x + y, {"tm_x": tm_x, "wkv": wkv, "cm_x": cm_x}
+
+
+def _embed(params, cfg, tokens, embeds):
+    if tokens is not None:
+        x = params["embed"][tokens]
+        if embeds is not None:  # vlm: prefix patch embeddings
+            x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    else:
+        x = embeds
+    return x
+
+
+def _unembed(params, cfg, x):
+    x = rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def _wrap_body(body, remat: bool):
+    """Constrain the residual carry at every layer boundary (Megatron-style
+    seq sharding under the active policy) and optionally remat the layer."""
+    from repro.distributed import sharding as shd
+
+    def wrapped(carry, lp):
+        out, extra = body(carry, lp)
+        return shd.constrain_residual(out), extra
+
+    if remat:
+        wrapped = jax.checkpoint(
+            wrapped, policy=jax.checkpoint_policies.nothing_saveable)
+    return wrapped
+
+
+def forward(params: Params, cfg: ModelConfig,
+            tokens: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None,
+            return_hidden: bool = False,
+            remat: bool = False):
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    from repro.distributed import sharding as shd
+    _set_unroll(cfg)
+    x = _embed(params, cfg, tokens, embeds)
+    x = shd.constrain_residual(x)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "audio"):
+        causal = not cfg.encoder_only
+        def body(carry, lp):
+            return _dense_block(lp, carry, positions, cfg,
+                                causal=causal), None
+        x, _ = maybe_scan(_wrap_body(body, remat), x, params["layers"])
+    elif fam == "moe":
+        if cfg.moe_every > 1:
+            def body(carry, lp):
+                y = _dense_block(lp["dense"], carry, positions, cfg)
+                y, a = _moe_block(lp["moe"], y, positions, cfg)
+                return y, a
+            x, auxs = maybe_scan(_wrap_body(body, remat), x,
+                                   params["groups"])
+            aux = auxs.sum()
+        else:
+            if cfg.first_dense:
+                def dbody(carry, lp):
+                    return _deepseek_dense_block(lp, carry, positions,
+                                                 cfg), None
+                x, _ = maybe_scan(_wrap_body(dbody, remat), x,
+                                    params["dense_layers"])
+            if "moe_layers" in params:
+                def body(carry, lp):
+                    y, a = _moe_block(lp, carry, positions, cfg)
+                    return y, a
+                x, auxs = maybe_scan(_wrap_body(body, remat), x,
+                                       params["moe_layers"])
+                aux = auxs.sum()
+    elif fam == "hybrid":
+        def body(carry, lp):
+            y, _ = _rg_sub_block(lp["rg1"], carry, cfg)
+            y, _ = _rg_sub_block(lp["rg2"], y, cfg)
+            h = rms_norm(y, lp["attn"]["ln1"])
+            y = y + attn.gqa_forward(lp["attn"]["attn"], h, positions, cfg,
+                                     causal=True, window=cfg.local_window)
+            h = rms_norm(y, lp["attn"]["ln2"])
+            y = y + moe_mod.mlp_forward(lp["attn"]["mlp"], h)
+            return y, None
+        x, _ = maybe_scan(_wrap_body(body, remat), x, params["groups"])
+        if "tail" in params:
+            def tbody(carry, lp):
+                y, _ = _rg_sub_block(lp, carry, cfg)
+                return y, None
+            x, _ = maybe_scan(_wrap_body(tbody, remat), x, params["tail"])
+    elif fam == "ssm":
+        def body(carry, lp):
+            y, _ = _rwkv_block(lp, carry, cfg)
+            return y, None
+        x, _ = maybe_scan(_wrap_body(body, remat), x, params["layers"])
+    else:
+        raise ValueError(fam)
+
+    if return_hidden:
+        return x, aux
+    return _unembed(params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy — never materializes (B, S, V) logits)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            loss_chunk: int = LOSS_CHUNK, remat: bool = False) -> jnp.ndarray:
+    """batch: {"tokens": (B,S) int32, "labels": (B,S) int32, optional
+    "embeds": (B,P,D)} — labels already shifted; label -100 is masked."""
+    tokens = batch.get("tokens")
+    embeds = batch.get("embeds")
+    hidden, aux = forward(params, cfg, tokens, embeds, return_hidden=True,
+                          remat=remat)
+    labels = batch["labels"]
+    if embeds is not None and tokens is not None:
+        hidden = hidden[:, embeds.shape[1]:]        # loss on text positions
+    b, s, d = hidden.shape
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    norm_w = params["final_norm"]
+
+    chunk = s if probe_mode() else min(loss_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=-100)
+    nc = hidden.shape[1] // chunk
+    hidden = hidden.reshape(b, nc, chunk, d)
+    labels = labels.reshape(b, nc, chunk)
+
+    # checkpoint: backward recomputes each chunk's logits instead of
+    # keeping the (B, chunk, V) slab per chunk alive across the map;
+    # the final norm runs per-chunk for the same reason.
+    @jax.checkpoint
+    def chunk_loss(args):
+        h, l = args
+        h = rms_norm(h, norm_w)
+        logits = jnp.einsum("bcd,dv->bcv", h, head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        mask = (l >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    losses, counts = jax.lax.map(
+        chunk_loss, (jnp.moveaxis(hidden, 1, 0), jnp.moveaxis(labels, 1, 0)))
+    ce = jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+    return ce + MOE_AUX_WEIGHT * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               policy: DTypePolicy = DTypePolicy()) -> Any:
+    """Decode-state pytree sized for ``cache_len`` context."""
+    dt = policy.compute_dtype
+    fam = cfg.family
+
+    def kv(n_layers):
+        shape = (n_layers, batch, cache_len, cfg.n_kv_heads, cfg.d_head)
+        return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+    if fam in ("dense", "vlm"):
+        return {"kv": kv(cfg.n_layers)}
+    if fam == "audio":
+        raise ValueError("encoder-only architectures have no decode step")
+    if fam == "moe":
+        if cfg.moe_every > 1:
+            n_groups = cfg.n_layers // cfg.moe_every
+            return {"kv_dense": kv(n_groups), "kv_moe": kv(n_groups)}
+        if cfg.use_mla:
+            n_moe = cfg.n_layers - cfg.first_dense
+            def lat(n):
+                return (jnp.zeros((n, batch, cache_len, cfg.kv_lora_rank), dt),
+                        jnp.zeros((n, batch, cache_len, cfg.qk_rope_head_dim),
+                                  dt))
+            out = {"latent": lat(n_moe)}
+            if cfg.first_dense:
+                out["latent_dense"] = lat(cfg.first_dense)
+            return out
+        return {"kv": kv(cfg.n_layers)}
+    if fam == "hybrid":
+        w = cfg.rg_lru_width or cfg.d_model
+        pat = len(cfg.block_pattern)
+        n_groups = cfg.n_layers // pat
+        tail = cfg.n_layers - n_groups * pat
+        win = min(cfg.local_window, cache_len)
+        def rg_state(n):
+            return {"conv": jnp.zeros((n, batch, cfg.rg_conv_width - 1, w), dt),
+                    "h": jnp.zeros((n, batch, w), jnp.float32)}
+        out = {
+            "rg1": rg_state(n_groups), "rg2": rg_state(n_groups),
+            "kv": (jnp.zeros((n_groups, batch, win, cfg.n_kv_heads,
+                              cfg.d_head), dt),
+                   jnp.zeros((n_groups, batch, win, cfg.n_kv_heads,
+                              cfg.d_head), dt)),
+        }
+        if tail:
+            out["tail"] = rg_state(tail)
+        return out
+    if fam == "ssm":
+        h = rwkv_mod.n_heads(cfg)
+        L = cfg.n_layers
+        return {
+            "wkv": jnp.zeros((L, batch, h, rwkv_mod.HEAD_DIM,
+                              rwkv_mod.HEAD_DIM), jnp.float32),
+            "tm_x": jnp.zeros((L, batch, cfg.d_model), dt),
+            "cm_x": jnp.zeros((L, batch, cfg.d_model), dt),
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one new token against the cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                cache: Any, length: jnp.ndarray):
+    """token: (B,) int32; length: (B,) current context lengths.
+    Returns (logits (B, V), new cache)."""
+    _set_unroll(cfg)
+    x = params["embed"][token][:, None]            # (B, 1, D)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm") or (fam == "moe" and not cfg.use_mla
+                                   and cfg.moe_every == 1):
+        def body(carry, inp):
+            lp, (ck, cv) = inp
+            h = rms_norm(carry, lp["ln1"])
+            y, (ck, cv) = attn.gqa_decode(lp["attn"], h, (ck, cv), length,
+                                          cfg)
+            carry = carry + y
+            h = rms_norm(carry, lp["ln2"])
+            carry = carry + moe_mod.mlp_forward(lp["mlp"], h)
+            return carry, (ck, cv)
+        x, new_kv = maybe_scan(body, x, (params["layers"], cache["kv"]))
+        new_cache = {"kv": new_kv}
+    elif fam == "moe" and cfg.moe_every > 1:       # llama4 groups
+        def body(carry, inp):
+            lp, (ckd, cvd), (ckm, cvm) = inp
+            h = rms_norm(carry, lp["dense"]["ln1"])
+            y, (ckd, cvd) = attn.gqa_decode(lp["dense"]["attn"], h,
+                                            (ckd, cvd), length, cfg)
+            carry = carry + y
+            h = rms_norm(carry, lp["dense"]["ln2"])
+            carry = carry + moe_mod.mlp_forward(lp["dense"]["mlp"], h)
+            h = rms_norm(carry, lp["moe"]["ln1"])
+            y, (ckm, cvm) = attn.gqa_decode(lp["moe"]["attn"], h,
+                                            (ckm, cvm), length, cfg)
+            carry = carry + y
+            h = rms_norm(carry, lp["moe"]["ln2"])
+            carry = carry + moe_mod.moe_forward(lp["moe"]["moe"], h, cfg, exact=True,
+                                                  serving=True)
+            return carry, ((ckd, cvd), (ckm, cvm))
+        x, (nkd, nkm) = maybe_scan(
+            body, x, (params["groups"], cache["kv_dense"], cache["kv_moe"]))
+        new_cache = {"kv_dense": nkd, "kv_moe": nkm}
+    elif fam == "moe" and cfg.use_mla:             # deepseek
+        new_cache = {}
+        if cfg.first_dense:
+            def dbody(carry, inp):
+                lp, lat = inp
+                h = rms_norm(carry, lp["ln1"])
+                y, lat = attn.mla_decode(lp["attn"], h, lat, length, cfg)
+                carry = carry + y
+                h = rms_norm(carry, lp["ln2"])
+                carry = carry + moe_mod.mlp_forward(lp["mlp"], h)
+                return carry, lat
+            x, nl = maybe_scan(dbody, x, (params["dense_layers"],
+                                            cache["latent_dense"]))
+            new_cache["latent_dense"] = nl
+        def body(carry, inp):
+            lp, lat = inp
+            h = rms_norm(carry, lp["ln1"])
+            y, lat = attn.mla_decode(lp["attn"], h, lat, length, cfg)
+            carry = carry + y
+            h = rms_norm(carry, lp["ln2"])
+            carry = carry + moe_mod.moe_forward(lp["moe"], h, cfg, exact=True,
+                                                  serving=True)
+            return carry, lat
+        x, nl = maybe_scan(body, x, (params["moe_layers"],
+                                       cache["latent"]))
+        new_cache["latent"] = nl
+    elif fam == "hybrid":
+        win = cache["kv"][0].shape[2]
+        def body(carry, inp):
+            lp, rg1, rg2, (ck, cv) = inp
+            carry, rg1 = _rg_decode(lp["rg1"], carry, cfg, rg1)
+            carry, rg2 = _rg_decode(lp["rg2"], carry, cfg, rg2)
+            h = rms_norm(carry, lp["attn"]["ln1"])
+            # ring-buffer window cache: write at length % win
+            y, (ck, cv) = _windowed_decode(lp["attn"]["attn"], h, (ck, cv),
+                                           length, cfg, win)
+            carry = carry + y
+            h = rms_norm(carry, lp["attn"]["ln2"])
+            carry = carry + moe_mod.mlp_forward(lp["attn"]["mlp"], h)
+            return carry, (rg1, rg2, (ck, cv))
+        x, (nrg1, nrg2, nkv) = maybe_scan(
+            body, x, (params["groups"], cache["rg1"], cache["rg2"],
+                      cache["kv"]))
+        new_cache = {"rg1": nrg1, "rg2": nrg2, "kv": nkv}
+        if "tail" in params:
+            def tbody(carry, inp):
+                lp, st = inp
+                carry, st = _rg_decode(lp, carry, cfg, st)
+                return carry, st
+            x, nt = maybe_scan(tbody, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = nt
+    elif fam == "ssm":
+        def body(carry, inp):
+            lp, st = inp
+            carry, st = _rwkv_decode(lp, carry, cfg, st)
+            return carry, st
+        x, nst = maybe_scan(
+            body, x, (params["layers"],
+                      {"tm_x": cache["tm_x"], "wkv": cache["wkv"],
+                       "cm_x": cache["cm_x"]}))
+        new_cache = nst
+    else:
+        raise ValueError(fam)
+
+    logits = _unembed(params, cfg, x)[:, 0]
+    return logits, new_cache
+
+
+def _rg_decode(lp, x, cfg, state):
+    st = (state["conv"], state["h"].astype(jnp.float32))
+    y, (conv, h) = _rg_sub_block(lp, x, cfg, st)
+    return y, {"conv": conv, "h": h}
+
+
+def _rwkv_decode(lp, x, cfg, state):
+    return _rwkv_block(lp, x, cfg, state)
+
+
+def _windowed_decode(p, x1, cache, length, cfg, win):
+    """Sliding-window decode with a ring-buffer cache of size ``win``:
+    the new KV overwrites slot (length mod win); attention masks slots
+    beyond min(length+1, win)."""
+    b = x1.shape[0]
+    kv_h, dh = cfg.n_kv_heads, cfg.d_head
+    g = cfg.n_heads // kv_h
+    q, k, v = attn._project_qkv(p, x1, cfg)
+    pos = length.astype(jnp.int32)
+    q = attn.apply_rope(q.reshape(b, 1, -1, dh), pos[:, None],
+                        cfg.rope_theta).reshape(b, 1, kv_h, g, dh)
+    k = attn.apply_rope(k, pos[:, None], cfg.rope_theta)
+    ck, cv = cache
+    slot = pos % win
+    onehot = jax.nn.one_hot(slot, win, dtype=ck.dtype)
+    ck = ck * (1 - onehot[..., None, None]) + onehot[..., None, None] * k
+    cv = cv * (1 - onehot[..., None, None]) + onehot[..., None, None] * v
+    valid = jnp.minimum(pos + 1, win)
+    out = attn.decode_attention(q[:, 0], ck, cv, length=valid)
+    out = out.reshape(b, 1, cfg.n_heads * dh)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]), (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache_len: int,
+            policy: DTypePolicy = DTypePolicy()):
+    """Run the full prompt, build the decode cache. Returns
+    (last-position logits (B, V), cache, lengths (B,))."""
+    b, s = tokens.shape
+    _set_unroll(cfg)
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    fam = cfg.family
+
+    if fam in ("dense", "vlm") or (fam == "moe" and not cfg.use_mla
+                                   and cfg.moe_every == 1):
+        def body(carry, lp):
+            h = rms_norm(carry, lp["ln1"])
+            y, kv = attn.gqa_prefill(lp["attn"], h, positions, cfg,
+                                     cache_len)
+            carry = carry + y
+            h = rms_norm(carry, lp["ln2"])
+            carry = carry + moe_mod.mlp_forward(lp["mlp"], h)
+            return carry, kv
+        x, kvs = maybe_scan(body, x, params["layers"])
+        cache = {"kv": kvs}
+    elif fam == "moe" and cfg.moe_every > 1:
+        def body(carry, lp):
+            h = rms_norm(carry, lp["dense"]["ln1"])
+            y, kvd = attn.gqa_prefill(lp["dense"]["attn"], h, positions,
+                                      cfg, cache_len)
+            carry = carry + y
+            h = rms_norm(carry, lp["dense"]["ln2"])
+            carry = carry + moe_mod.mlp_forward(lp["dense"]["mlp"], h)
+            h = rms_norm(carry, lp["moe"]["ln1"])
+            y, kvm = attn.gqa_prefill(lp["moe"]["attn"], h, positions,
+                                      cfg, cache_len)
+            carry = carry + y
+            h = rms_norm(carry, lp["moe"]["ln2"])
+            carry = carry + moe_mod.moe_forward(lp["moe"]["moe"], h, cfg, exact=True)
+            return carry, (kvd, kvm)
+        x, (kvd, kvm) = maybe_scan(body, x, params["groups"])
+        cache = {"kv_dense": kvd, "kv_moe": kvm}
+    elif fam == "moe" and cfg.use_mla:
+        cache = {}
+        if cfg.first_dense:
+            def dbody(carry, lp):
+                h = rms_norm(carry, lp["ln1"])
+                y, lat = attn.mla_prefill(lp["attn"], h, positions, cfg,
+                                          cache_len)
+                carry = carry + y
+                h = rms_norm(carry, lp["ln2"])
+                carry = carry + moe_mod.mlp_forward(lp["mlp"], h)
+                return carry, lat
+            x, lat = maybe_scan(dbody, x, params["dense_layers"])
+            cache["latent_dense"] = lat
+        def body(carry, lp):
+            h = rms_norm(carry, lp["ln1"])
+            y, lat = attn.mla_prefill(lp["attn"], h, positions, cfg,
+                                      cache_len)
+            carry = carry + y
+            h = rms_norm(carry, lp["ln2"])
+            carry = carry + moe_mod.moe_forward(lp["moe"], h, cfg, exact=True)
+            return carry, lat
+        x, lat = maybe_scan(body, x, params["moe_layers"])
+        cache["latent"] = lat
+    elif fam == "hybrid":
+        win = min(cfg.local_window, cache_len)
+        def body(carry, lp):
+            carry, rg1 = _rg_sub_block(lp["rg1"], carry, cfg)
+            carry, rg2 = _rg_sub_block(lp["rg2"], carry, cfg)
+            h = rms_norm(carry, lp["attn"]["ln1"])
+            y, kv = _windowed_prefill(lp["attn"]["attn"], h, positions,
+                                      cfg, win)
+            carry = carry + y
+            h = rms_norm(carry, lp["attn"]["ln2"])
+            carry = carry + moe_mod.mlp_forward(lp["attn"]["mlp"], h)
+            return carry, (_rg_to_state(rg1), _rg_to_state(rg2), kv)
+        x, (rg1, rg2, kvs) = maybe_scan(body, x, params["groups"])
+        cache = {"rg1": rg1, "rg2": rg2, "kv": kvs}
+        if "tail" in params:
+            def tbody(carry, lp):
+                carry, st = _rg_sub_block(lp, carry, cfg)
+                return carry, _rg_to_state(st)
+            x, tst = maybe_scan(tbody, x, params["tail"])
+            cache["tail"] = tst
+    elif fam == "ssm":
+        def body(carry, lp):
+            carry, st = _rwkv_block(lp, carry, cfg)
+            return carry, st
+        x, sts = maybe_scan(body, x, params["layers"])
+        cache = sts
+    else:
+        raise ValueError(fam)
+
+    logits = _unembed(params, cfg, x[:, -1:])[:, 0]
+    lengths = jnp.full((b,), s, jnp.int32)
+    return logits, cache, lengths
+
+
+def _rg_to_state(st):
+    conv, h = st
+    return {"conv": conv, "h": h}
+
+
+def _windowed_prefill(p, x, positions, cfg, win):
+    """Forward with sliding-window attention; returns the ring-buffer cache
+    holding the last ``win`` positions (aligned so slot = pos mod win)."""
+    b, s, _ = x.shape
+    q, k, v = attn._project_qkv(p, x, cfg)
+    q = attn.apply_rope(q.reshape(b, s, -1, cfg.d_head), positions,
+                        cfg.rope_theta).reshape(q.shape)
+    k = attn.apply_rope(k, positions, cfg.rope_theta)
+    out = attn.chunked_attention(q, k, v, causal=True, window=win)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    # last `win` kv, placed at slots (pos mod win)
+    last_k = k[:, -win:]
+    last_v = v[:, -win:]
+    pos = positions[:, -win:] % win
+    ck = jnp.zeros((b, win) + k.shape[2:], k.dtype)
+    cv = jnp.zeros((b, win) + v.shape[2:], v.dtype)
+    bidx = jnp.arange(b)[:, None]
+    ck = ck.at[bidx, pos].set(last_k)
+    cv = cv.at[bidx, pos].set(last_v)
+    return y, (ck, cv)

@@ -1,0 +1,21 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    init,
+    schedule,
+)
+from repro.optim.compression import (
+    Compressed,
+    compress_with_feedback,
+    decompress,
+    init_error,
+)
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "apply_updates", "clip_by_global_norm",
+    "global_norm", "init", "schedule",
+    "Compressed", "compress_with_feedback", "decompress", "init_error",
+]

@@ -1,0 +1,79 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At multi-pod scale the inter-pod (DCN / 'pod'-axis) all-reduce of dense
+gradients is the dominant collective. Quantizing per-leaf to int8 with a
+per-(row-block) scale cuts those bytes 4x (bf16) to 8x (fp32); the
+quantization residual is carried in an error-feedback buffer and added to
+the next step's gradient, which keeps SGD-style convergence unbiased in
+the long run (error feedback a la 1-bit Adam / EF-SGD).
+
+Usage inside train_step:
+    cgrads, new_err = compress_with_feedback(grads, err)
+    # all-reduce cgrads over the 'pod' axis (cheap int8 payload)
+    grads = decompress(cgrads)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # per-block scaling granularity along the leading axis
+
+
+class Compressed(NamedTuple):
+    q: Any        # int8 payloads (params-like)
+    scale: Any    # fp32 per-block scales
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    size = 1
+    for s in shape:
+        size *= s
+    return flat[:size].reshape(shape).astype(dtype)
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads: Any, err: Any) -> Tuple[Compressed, Any]:
+    """Quantize (grad + carried error); the new error is what quantization
+    dropped. Returns (compressed, new_error)."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = _quantize(target)
+        recon = _dequantize(q, scale, g.shape, jnp.float32)
+        return (q, scale), target - recon
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qs = jax.tree_util.tree_unflatten(tdef, [o[0][0] for o in outs])
+    scales = jax.tree_util.tree_unflatten(tdef, [o[0][1] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return Compressed(qs, scales), new_err
+
+
+def decompress(c: Compressed, like: Any) -> Any:
+    flat_q, tdef = jax.tree_util.tree_flatten(c.q)
+    flat_s = jax.tree_util.tree_leaves(c.scale)
+    flat_l = jax.tree_util.tree_leaves(like)
+    outs = [_dequantize(q, s, l.shape, l.dtype)
+            for q, s, l in zip(flat_q, flat_s, flat_l)]
+    return jax.tree_util.tree_unflatten(tdef, outs)

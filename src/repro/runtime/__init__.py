@@ -1,0 +1,12 @@
+from repro.runtime.failures import (
+    FailureInjector,
+    RestartStats,
+    RestartSupervisor,
+    SimulatedFailure,
+    StragglerMonitor,
+)
+
+__all__ = [
+    "FailureInjector", "RestartStats", "RestartSupervisor",
+    "SimulatedFailure", "StragglerMonitor",
+]

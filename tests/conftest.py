@@ -1,0 +1,10 @@
+"""Pytest config. NOTE: never set --xla_force_host_platform_device_count
+here — smoke tests and benches must see 1 device; only launch/dryrun.py
+(as an entry point) and explicit subprocess tests use fake device counts.
+"""
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device subprocess tests (deselect with -m 'not slow')")

@@ -1,0 +1,337 @@
+"""Unit + property tests for the CarbonPATH analytical models."""
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DEFAULT_DB, Chiplet, HISystem, Mapping, library
+from repro.core import validate, InvalidSystem, is_valid
+from repro.core import workload, tile_and_assign, all_pkg_protocol_pairs
+from repro.core import evaluate
+from repro.core.chiplet import different_chiplet_system, identical_chiplet_system
+from repro.core import scalesim
+from repro.core.workload import Tile, destination_index, ALL_MAPPINGS
+from repro.core import d2d as d2d_mod
+from repro.core import floorplan as fp
+from repro.core import cost as cost_mod
+from repro.core import carbon as carbon_mod
+
+DB = DEFAULT_DB
+
+
+# ---------------------------------------------------------------------------
+# techdb / design space
+# ---------------------------------------------------------------------------
+
+def test_43_pkg_protocol_pairs():
+    assert all_pkg_protocol_pairs() == 43  # Sec V-A: 10 + 3 + 30
+
+
+def test_12_mapping_strategies():
+    assert len(ALL_MAPPINGS) == 12  # 2 orders x 3 dataflows x 2 split-K
+
+
+def test_chiplet_library_size():
+    # 4 array sizes x 5 nodes x 4 SRAM options = 80 chiplets
+    assert len(library()) == 80
+
+
+def test_yield_monotone_in_area():
+    ys = [DB.die_yield(a, 7) for a in (1, 10, 50, 200, 600)]
+    assert all(a > b for a, b in zip(ys, ys[1:]))
+    assert all(0 < y <= 1 for y in ys)
+
+
+def test_yield_better_at_older_nodes():
+    assert DB.die_yield(100, 28) > DB.die_yield(100, 7)
+
+
+def test_dies_per_wafer_decreasing():
+    assert DB.dies_per_wafer(10) > DB.dies_per_wafer(100)
+
+
+@given(st.floats(0.5, 800.0))
+@settings(max_examples=50, deadline=None)
+def test_yield_bounds_property(area):
+    for node in DB.tech_nodes:
+        y = DB.die_yield(area, node)
+        assert 0.0 < y <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# chiplet physical model
+# ---------------------------------------------------------------------------
+
+def test_area_power_scale_with_node():
+    new = Chiplet(128, 7, 1024)
+    old = Chiplet(128, 28, 1024)
+    assert old.area_mm2() > new.area_mm2()
+    assert old.freq_ghz() < new.freq_ghz()
+
+
+def test_notation_roundtrip():
+    c = Chiplet(96, 14, 1536)
+    assert Chiplet.parse(c.name) == c
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: tiler / assigner
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([1, 2, 3, 4, 5, 6]),
+       st.sampled_from(ALL_MAPPINGS))
+@settings(max_examples=40, deadline=None)
+def test_tiler_covers_workload(wl_idx, mapping):
+    """Property: assigned tile MACs sum exactly to the workload MACs."""
+    wl = workload(wl_idx)
+    cores = different_chiplet_system()
+    assignments = tile_and_assign(wl, cores, mapping)
+    assert sum(a.macs for a in assignments) == wl.macs
+    # every m/k/n within bounds
+    for a in assignments:
+        for t in a.tiles:
+            assert 0 < t.m <= wl.M and 0 < t.k <= wl.K and 0 < t.n <= wl.N
+
+
+def test_split_k_partitions_k():
+    wl = workload(5)  # K = 4096
+    cores = different_chiplet_system()
+    on = tile_and_assign(wl, cores, Mapping(0, "OS", 1))
+    off = tile_and_assign(wl, cores, Mapping(0, "OS", 0))
+    assert any(t.partial for a in on for t in a.tiles)
+    assert not any(t.partial for a in off for t in a.tiles)
+    assert all(t.k == wl.K for a in off for t in a.tiles)
+
+
+def test_assignment_proportional_to_power():
+    wl = workload(2)  # big enough for many tiles
+    cores = different_chiplet_system()
+    assignments = tile_and_assign(wl, cores, Mapping(0, "OS", 0))
+    powers = [c.compute_power_ratio() for c in cores]
+    total_tiles = sum(len(a.tiles) for a in assignments)
+    for a, p in zip(assignments, powers):
+        ideal = p / sum(powers) * total_tiles
+        assert abs(len(a.tiles) - ideal) <= 1.0, "within rounding of ideal"
+
+
+def test_destination_is_largest():
+    cores = different_chiplet_system()
+    assert destination_index(cores) == 3  # 192-7-2048
+
+
+# ---------------------------------------------------------------------------
+# ScaleSim-equivalent timing model
+# ---------------------------------------------------------------------------
+
+def test_dataflow_shape_sensitivity():
+    """OS passes scale with M*N, WS with K*N, IS with M*K — so the best
+    dataflow depends on workload shape (the paper's Fig. 9 premise)."""
+    core = Chiplet(128, 7, 1024)
+    tall = Tile(4096, 128, 128, False)   # M >> K,N: IS/OS cheap on passes
+    wide = Tile(128, 4096, 128, False)   # K >> M,N
+    os_t = scalesim.simulate_tile(tall, core, "OS").cycles
+    ws_t = scalesim.simulate_tile(tall, core, "WS").cycles
+    assert ws_t != os_t
+    os_w = scalesim.simulate_tile(wide, core, "OS").cycles
+    is_w = scalesim.simulate_tile(wide, core, "IS").cycles
+    assert os_w != is_w
+
+
+def test_bigger_array_fewer_cycles():
+    t = Tile(512, 512, 512, False)
+    small = scalesim.simulate_tile(t, Chiplet(64, 7, 1024), "OS").cycles
+    big = scalesim.simulate_tile(t, Chiplet(192, 7, 2048), "OS").cycles
+    assert big < small
+
+
+def test_bigger_buffer_less_dram_traffic():
+    t = Tile(2048, 2048, 2048, False)
+    small = scalesim.simulate_tile(t, Chiplet(64, 7, 256), "OS")
+    big = scalesim.simulate_tile(t, Chiplet(64, 7, 1024), "OS")
+    assert big.dram_rd_bits <= small.dram_rd_bits
+
+
+def test_sim_cache_hits():
+    cache = scalesim.SimCache()
+    t = (Tile(128, 128, 128, False),)
+    core = Chiplet(64, 7, 256)
+    cache.simulate(t, core, "OS")
+    cache.simulate(t, core, "OS")
+    assert cache.hits == 1 and cache.misses == 1
+    # node change does NOT invalidate (cycle count is node-independent):
+    cache.simulate(t, Chiplet(64, 22, 256), "OS")
+    assert cache.hits == 2
+
+
+# ---------------------------------------------------------------------------
+# D2D model (Eqs. 6-10)
+# ---------------------------------------------------------------------------
+
+def test_bump_count_3d_beats_25d():
+    """Eq. 7: area-limited 3D bumps >> perimeter-limited 2.5D bumps."""
+    c = Chiplet(128, 7, 1024)
+    n3d = d2d_mod.bump_count(c, 25.0, True)
+    n25 = d2d_mod.bump_count(c, 25.0, False)
+    assert n3d > 10 * n25
+
+
+def test_3d_bandwidth_exceeds_25d():
+    c = Chiplet(128, 7, 1024)
+    bw3 = d2d_mod.chiplet_d2d_bw_bits(c, DB.packages["HybBond"].bump_pitch_um,
+                                      "UCIe-3D", True)
+    bw25 = d2d_mod.chiplet_d2d_bw_bits(c, DB.packages["RDL"].bump_pitch_um,
+                                       "UCIe-S", False)
+    assert bw3 > bw25
+
+
+def test_min_bw_path_semantics():
+    sys = HISystem(chiplets=identical_chiplet_system(4), style="3D",
+                   memory="DDR5", mapping=Mapping(0, "OS", 0),
+                   pkg_3d="uBump", proto_3d="UCIe-3D")
+    topo = d2d_mod.build_topology(sys)
+    order = topo.stack_order
+    top = order[-1]
+    base = topo.base_die
+    path_bw = topo.min_path_bw(top, base)
+    link_bws = [l.bw_bits_s for l in topo.path_links(top, base)]
+    assert path_bw == min(link_bws)
+
+
+def test_3d_stacked_die_dram_bw_limited():
+    """Eqs. 8-10: a stacked die's effective DRAM bw <= base die's."""
+    sys = HISystem(chiplets=identical_chiplet_system(3), style="3D",
+                   memory="HBM3", mapping=Mapping(0, "OS", 0),
+                   pkg_3d="TSV", proto_3d="UCIe-3D")
+    topo = d2d_mod.build_topology(sys)
+    base = topo.base_die
+    for i in range(3):
+        assert topo.effective_dram_bw(i) <= topo.effective_dram_bw(base)
+
+
+def test_shared_link_serialization():
+    """Fig. 4: concurrent transfers on a shared link add (latency grows
+    superlinearly vs a single source)."""
+    sys = HISystem(chiplets=identical_chiplet_system(4), style="3D",
+                   memory="DDR5", mapping=Mapping(0, "OS", 0),
+                   pkg_3d="TSV", proto_3d="UCIe-3D")
+    topo = d2d_mod.build_topology(sys)
+    one = d2d_mod.route_reduction(topo, [0, 0, 10**9, 0]).latency_s
+    # everyone sends through the same chain links
+    many = d2d_mod.route_reduction(topo, [10**9, 10**9, 10**9, 0]).latency_s
+    assert many > one
+
+
+# ---------------------------------------------------------------------------
+# floorplanner
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(1.0, 100.0), min_size=1, max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_floorplan_properties(areas):
+    plan = fp.floorplan(areas)
+    # area conservation: die area == requested
+    assert math.isclose(plan.die_area, sum(areas), rel_tol=1e-6)
+    # slots fit in bbox and white space is non-negative
+    assert plan.white_space >= -1e-6
+    for r in plan.rects:
+        assert r.x >= -1e-9 and r.y >= -1e-9
+        assert r.x + r.w <= plan.width + 1e-6
+        assert r.y + r.h <= plan.height + 1e-6
+    # connectivity: BFS from node 0 reaches everyone
+    adj = plan.adjacency()
+    if len(areas) > 1:
+        seen = {0}
+        frontier = [0]
+        while frontier:
+            u = frontier.pop()
+            for v in adj[u]:
+                if v not in seen:
+                    seen.add(v)
+                    frontier.append(v)
+        assert len(seen) == len(areas), "floorplan adjacency disconnected"
+
+
+# ---------------------------------------------------------------------------
+# cost + carbon
+# ---------------------------------------------------------------------------
+
+def test_chiplet_cost_increases_with_area_and_node():
+    small_old = cost_mod.chiplet_cost(Chiplet(64, 28, 256))
+    big_new = cost_mod.chiplet_cost(Chiplet(192, 7, 8192))
+    assert big_new > small_old
+
+
+def test_rdl_cheapest_hybbond_most_expensive():
+    """Paper Sec VI-B2: RDL most mature/highest yield; HybBond lowest."""
+    chips = identical_chiplet_system(4)
+    mk = lambda style, **kw: HISystem(chiplets=chips, style=style,
+                                      memory="DDR5",
+                                      mapping=Mapping(0, "OS", 0), **kw)
+    rdl = evaluate(mk("2.5D", pkg_25d="RDL", proto_25d="UCIe-S"),
+                   workload(1)).dollar
+    hb = evaluate(mk("3D", pkg_3d="HybBond", proto_3d="UCIe-3D"),
+                  workload(1)).dollar
+    tsv = evaluate(mk("3D", pkg_3d="TSV", proto_3d="UCIe-3D"),
+                   workload(1)).dollar
+    assert rdl < hb
+    assert tsv < hb, "TSV is the cheapest 3D interconnect"
+
+
+def test_bonding_yield_compounds():
+    chips2 = identical_chiplet_system(2)
+    chips6 = identical_chiplet_system(6)
+    mk = lambda c: HISystem(chiplets=c, style="3D", memory="DDR5",
+                            mapping=Mapping(0, "OS", 0),
+                            pkg_3d="HybBond", proto_3d="UCIe-3D")
+    assert cost_mod.bonding_yield(mk(chips6)) < cost_mod.bonding_yield(mk(chips2))
+
+
+def test_embodied_cfp_scales_with_silicon():
+    chips2 = identical_chiplet_system(2)
+    chips6 = identical_chiplet_system(6)
+    mk = lambda c: HISystem(chiplets=c, style="2.5D", memory="DDR5",
+                            mapping=Mapping(0, "OS", 0),
+                            pkg_25d="RDL", proto_25d="UCIe-S")
+    e2 = evaluate(mk(chips2), workload(1)).emb_cfp_kg
+    e6 = evaluate(mk(chips6), workload(1)).emb_cfp_kg
+    assert e6 > e2
+
+
+def test_perf_si_higher_is_better():
+    assert carbon_mod.perf_si(1e-4, 10.0) > carbon_mod.perf_si(2e-4, 10.0)
+    assert carbon_mod.perf_si(1e-4, 10.0) > carbon_mod.perf_si(1e-4, 20.0)
+
+
+# ---------------------------------------------------------------------------
+# validity rules (Sec V-A)
+# ---------------------------------------------------------------------------
+
+def test_invalid_configs_rejected():
+    chips = identical_chiplet_system(2)
+    with pytest.raises(InvalidSystem):   # UCIe-3D in a 2.5D system
+        validate(HISystem(chiplets=chips, style="2.5D", memory="DDR5",
+                          mapping=Mapping(0, "OS", 0),
+                          pkg_25d="RDL", proto_25d="UCIe-3D"))
+    with pytest.raises(InvalidSystem):   # 2.5D+3D with only two chiplets
+        validate(HISystem(chiplets=chips, style="2.5D+3D", memory="DDR5",
+                          mapping=Mapping(0, "OS", 0),
+                          pkg_25d="RDL", proto_25d="UCIe-S",
+                          pkg_3d="TSV", proto_3d="UCIe-3D", stack=(0, 1)))
+    with pytest.raises(InvalidSystem):   # monolithic with 2 chiplets
+        validate(HISystem(chiplets=chips, style="2D", memory="DDR5",
+                          mapping=Mapping(0, "OS", 0)))
+    with pytest.raises(InvalidSystem):   # RDL only pairs with UCIe-S
+        validate(HISystem(chiplets=chips, style="2.5D", memory="DDR5",
+                          mapping=Mapping(0, "OS", 0),
+                          pkg_25d="RDL", proto_25d="AIB"))
+
+
+def test_3d_stack_order_largest_at_base():
+    chips = different_chiplet_system()
+    sys = HISystem(chiplets=chips, style="3D", memory="DDR5",
+                   mapping=Mapping(0, "OS", 0), pkg_3d="TSV",
+                   proto_3d="UCIe-3D")
+    order = sys.stack_order()
+    areas = [chips[i].area_mm2() for i in order]
+    assert areas == sorted(areas, reverse=True)

@@ -1,0 +1,111 @@
+"""SA engine tests: move validity (property-based), convergence, cache."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DEFAULT_DB,
+    SAConfig,
+    SimCache,
+    TEMPLATES,
+    anneal,
+    evaluate,
+    evaluate_chipletgym,
+    fit_normalizer,
+    is_valid,
+    random_system,
+    workload,
+)
+from repro.core.sa import propose
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=80, deadline=None)
+def test_random_system_always_valid(seed):
+    rng = random.Random(seed)
+    assert is_valid(random_system(rng))
+
+
+@given(st.integers(0, 10_000), st.integers(1, 40))
+@settings(max_examples=40, deadline=None)
+def test_moves_preserve_validity(seed, n_moves):
+    """Property: any chain of hierarchical moves stays in the feasible
+    space (the paper's validation-after-every-transformation invariant)."""
+    rng = random.Random(seed)
+    sys = random_system(rng)
+    for _ in range(n_moves):
+        sys = propose(sys, rng)
+        assert is_valid(sys)
+
+
+def test_moves_reach_all_levels():
+    """The move set must perturb application, chip-arch, chiplet and
+    package levels (Sec V-B) — all four kinds observed in a short chain."""
+    rng = random.Random(3)
+    sys = random_system(rng)
+    seen = set()
+    for _ in range(400):
+        new = propose(sys, rng)
+        if new.mapping != sys.mapping:
+            seen.add("application")
+        if new.n_chiplets != sys.n_chiplets or new.memory != sys.memory:
+            seen.add("chip-arch")
+        if (new.n_chiplets == sys.n_chiplets
+                and new.chiplets != sys.chiplets):
+            seen.add("chiplet")
+        if (new.pkg_25d, new.proto_25d, new.pkg_3d) != (
+                sys.pkg_25d, sys.proto_25d, sys.pkg_3d):
+            seen.add("package")
+        sys = new
+    assert seen == {"application", "chip-arch", "chiplet", "package"}
+
+
+def test_anneal_history_converges():
+    cache = SimCache()
+    wl = workload(6)
+    norm = fit_normalizer(wl, samples=200, cache=cache)
+    cfg = SAConfig(t_initial=50, t_final=0.05, cooling=0.85,
+                   moves_per_temp=15, seed=2)
+    res = anneal(wl, TEMPLATES["T1"], config=cfg, norm=norm, cache=cache)
+    # late-phase average cost below early-phase average
+    h = res.history
+    assert sum(h[-5:]) / 5 <= sum(h[:5]) / 5
+    assert res.best_cost <= min(h) + 1e-9
+
+
+def test_simulation_cache_speedup():
+    """Sec V-D: the cache eliminates most re-simulations."""
+    cache = SimCache()
+    wl = workload(1)
+    norm = fit_normalizer(wl, samples=300, cache=cache)
+    cfg = SAConfig(t_initial=20, t_final=0.1, cooling=0.85,
+                   moves_per_temp=10, seed=4)
+    anneal(wl, TEMPLATES["T1"], config=cfg, norm=norm, cache=cache)
+    assert cache.hits > cache.misses, (
+        f"cache ineffective: {cache.hits} hits vs {cache.misses} misses")
+
+
+def test_chipletgym_flow_runs():
+    """The baseline flow plugs into the same engine (evaluate_fn swap)."""
+    cache = SimCache()
+    wl = workload(1)
+    norm = fit_normalizer(wl, samples=200, cache=cache,
+                          evaluate_fn=evaluate_chipletgym)
+    cfg = SAConfig(t_initial=20, t_final=0.1, cooling=0.85,
+                   moves_per_temp=10, seed=5)
+    res = anneal(wl, TEMPLATES["T1"], config=cfg, norm=norm, cache=cache,
+                 evaluate_fn=evaluate_chipletgym)
+    assert res.best_metrics.emb_cfp_kg == 0.0  # ChipletGym models no CFP
+    assert res.best_metrics.latency_s > 0
+
+
+def test_chipletgym_underestimates_energy():
+    """Sec VI-B2: ChipletGym's MAC-only energy model reports lower energy
+    than CarbonPATH's DRAM+SRAM+compute+D2D model."""
+    rng = random.Random(9)
+    for _ in range(20):
+        sys = random_system(rng)
+        full = evaluate(sys, workload(1)).energy_j
+        gym = evaluate_chipletgym(sys, workload(1)).energy_j
+        assert gym < full

@@ -1,0 +1,138 @@
+"""Pallas kernel validation: shape/dtype sweeps against pure-jnp oracles.
+
+All kernels run in interpret mode on CPU; tolerances account for blocked
+fp32 accumulation-order differences.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    gemm_ref,
+    rglru,
+    rglru_assoc_ref,
+    rglru_ref,
+    systolic_gemm,
+    wkv6,
+    wkv6_ref_vmapped,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# systolic_gemm
+# ---------------------------------------------------------------------------
+
+GEMM_SHAPES = [
+    (128, 128, 128),   # exact blocks
+    (200, 300, 450),   # ragged
+    (64, 512, 64),     # deep K
+    (1, 256, 257),     # degenerate M
+]
+
+
+@pytest.mark.parametrize("shape", GEMM_SHAPES)
+@pytest.mark.parametrize("dataflow", ["OS", "WS", "IS"])
+def test_gemm_dataflows(shape, dataflow):
+    m, k, n = shape
+    a = jax.random.normal(jax.random.fold_in(KEY, 1), (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 2), (k, n), jnp.float32)
+    out = systolic_gemm(a, b, bm=64, bk=64, bn=64, dataflow=dataflow)
+    np.testing.assert_allclose(out, gemm_ref(a, b), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("split_k", [2, 4])
+def test_gemm_split_k(split_k):
+    a = jax.random.normal(jax.random.fold_in(KEY, 3), (96, 512), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 4), (512, 160), jnp.float32)
+    out = systolic_gemm(a, b, bm=32, bk=64, bn=32, dataflow="OS",
+                        split_k=split_k)
+    np.testing.assert_allclose(out, gemm_ref(a, b), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_dtypes(dtype):
+    a = (jax.random.normal(jax.random.fold_in(KEY, 5), (128, 128))
+         .astype(dtype))
+    b = (jax.random.normal(jax.random.fold_in(KEY, 6), (128, 128))
+         .astype(dtype))
+    out = systolic_gemm(a, b, bm=64, bk=64, bn=64)
+    assert out.dtype == dtype
+    ref = gemm_ref(a, b)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+def test_gemm_block_shape_sweep():
+    a = jax.random.normal(jax.random.fold_in(KEY, 7), (160, 224), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(KEY, 8), (224, 96), jnp.float32)
+    ref = gemm_ref(a, b)
+    for bm, bk, bn in [(32, 32, 32), (64, 128, 32), (128, 64, 96)]:
+        out = systolic_gemm(a, b, bm=bm, bk=bk, bn=bn)
+        np.testing.assert_allclose(out, ref, rtol=3e-4, atol=3e-4,
+                                   err_msg=f"block {(bm, bk, bn)}")
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g,t,d,ct", [(2, 64, 32, 16), (4, 48, 16, 48),
+                                      (1, 100, 64, 25)])
+def test_wkv6_shapes(g, t, d, ct):
+    ks = jax.random.split(jax.random.fold_in(KEY, 9), 5)
+    r = jax.random.normal(ks[0], (g, t, d)) * 0.4
+    k = jax.random.normal(ks[1], (g, t, d)) * 0.4
+    v = jax.random.normal(ks[2], (g, t, d)) * 0.4
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (g, t, d))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (g, d)) * 0.1
+    out = wkv6(r, k, v, w, u, ct=ct)
+    ref = wkv6_ref_vmapped(r, k, v, w, u)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_state_persistence_across_chunks():
+    """Chunked execution must match unchunked (state carries in VMEM)."""
+    ks = jax.random.split(jax.random.fold_in(KEY, 10), 5)
+    g, t, d = 2, 64, 16
+    r, k, v = (jax.random.normal(ks[i], (g, t, d)) * 0.3 for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (g, t, d))) * 0.4 + 0.5
+    u = jax.random.normal(ks[4], (g, d)) * 0.1
+    np.testing.assert_allclose(wkv6(r, k, v, w, u, ct=8),
+                               wkv6(r, k, v, w, u, ct=64),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rglru
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,c,bc,ct", [(2, 64, 128, 128, 16),
+                                         (1, 80, 200, 128, 40),
+                                         (3, 33, 64, 64, 33)])
+def test_rglru_shapes(b, t, c, bc, ct):
+    ks = jax.random.split(jax.random.fold_in(KEY, 11), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, t, c))) * 0.9
+    x = jax.random.normal(ks[1], (b, t, c)) * 0.3
+    out = rglru(a, x, bc=bc, ct=ct)
+    np.testing.assert_allclose(out, rglru_ref(a, x), rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_assoc_matches_sequential():
+    ks = jax.random.split(jax.random.fold_in(KEY, 12), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 50, 32))) * 0.95
+    x = jax.random.normal(ks[1], (2, 50, 32))
+    np.testing.assert_allclose(rglru_assoc_ref(a, x), rglru_ref(a, x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_identity_decay():
+    """a == 1 everywhere -> cumulative sum of inputs."""
+    b = jnp.ones((1, 10, 8))
+    x = jnp.ones((1, 10, 8))
+    out = rglru(jnp.ones_like(x), x, bc=8, ct=10)
+    np.testing.assert_allclose(out[0, :, 0], jnp.arange(1, 11, dtype=jnp.float32),
+                               rtol=1e-5)
