@@ -6,9 +6,14 @@ per-benchmark data tables go to ``benchmarks/out/<name>.csv``.
 Usage:
     PYTHONPATH=src python -m benchmarks.run           # everything
     PYTHONPATH=src python -m benchmarks.run fig05 t11 # substring filter
+    PYTHONPATH=src python -m benchmarks.run --json perf.json  # + summary
+
+``--json <path>`` additionally writes the summary rows as a JSON perf
+trajectory: {"rows": [{"name", "us_per_call", "derived"}, ...]}.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import traceback
@@ -23,6 +28,7 @@ from benchmarks import (
     fig11_perfsi_cost_scatter,
     fig12_perfsi_mapping,
     fig13_cfp_vs_cost,
+    pathfinder_batch,
     roofline,
     table06_sa_flows,
     table11_runtime,
@@ -41,16 +47,27 @@ ALL = [
     ("table06", table06_sa_flows),
     ("table11", table11_runtime),
     ("roofline", roofline),
+    ("pathfinder_batch", pathfinder_batch),
 ]
 
 OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
 
 
 def main() -> None:
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        try:
+            json_path = args[i + 1]
+        except IndexError:
+            sys.exit("--json requires a path argument")
+        del args[i:i + 2]
+    filters = [a for a in args if not a.startswith("-")]
     os.makedirs(OUT_DIR, exist_ok=True)
     print("name,us_per_call,derived")
     failures = 0
+    summaries = []
     for name, mod in ALL:
         if filters and not any(f in name for f in filters):
             continue
@@ -60,13 +77,29 @@ def main() -> None:
             print(summary, flush=True)
         except AssertionError as e:
             failures += 1
-            print(f"{name},0,ASSERT_FAIL:{e}", flush=True)
+            summary = f"{name},0,ASSERT_FAIL:{e}"
+            print(summary, flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             traceback.print_exc(file=sys.stderr)
-            print(f"{name},0,ERROR:{type(e).__name__}", flush=True)
+            summary = f"{name},0,ERROR:{type(e).__name__}"
+            print(summary, flush=True)
+        summaries.append(summary)
         with open(os.path.join(OUT_DIR, f"{name}.csv"), "w") as f:
             f.write("\n".join(lines) + "\n")
+    if json_path:
+        rows = []
+        for s in summaries:
+            bname, us, derived = s.split(",", 2)
+            try:
+                us_val = float(us)
+            except ValueError:
+                us_val = us  # keep the raw field rather than lose the dump
+            rows.append({"name": bname, "us_per_call": us_val,
+                         "derived": derived})
+        with open(json_path, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"# wrote {json_path}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -5,6 +5,12 @@ Flows: (1) ChipletGym-models SA, (2) CarbonPATH w/o carbon (zeta=eta=0),
 solution normalized to CarbonPATH's (Table VI convention) and the
 converged architectures (Tables VII-X convention).
 
+All three flows run through the Pathfinder v2 facade with the
+:class:`SimulatedAnnealing` strategy — the ChipletGym flow is the
+``objective="chipletgym"`` backend, replacing the seed ``evaluate_fn``
+swap. Normalizers use the scalar fitting loop (``method="scalar"``) so
+runs stay bit-comparable with the seed annealer.
+
 Claim asserted: CarbonPATH achieves lower (or equal) embodied CFP than
 CarbonPATH-w/o-carbon on average, with a meaningful improvement factor
 (paper: 1.9x average, up to 3.16x on T4).
@@ -20,12 +26,10 @@ from repro.core import (
     SAConfig,
     SimCache,
     TEMPLATES,
-    anneal,
     evaluate,
-    evaluate_chipletgym,
-    fit_normalizer,
     workload,
 )
+from repro.pathfinding import Pathfinder, SimulatedAnnealing
 from benchmarks.common import row, timed
 
 REDUCED = SAConfig(t_initial=400.0, t_final=0.01, cooling=0.93,
@@ -39,20 +43,25 @@ def run(out=print, full: bool = False) -> str:
 
     def compute():
         rows = []
+        sa = SimulatedAnnealing(cfg)
         for wl_idx in range(1, 7):
             wl = workload(wl_idx)
-            norm = fit_normalizer(wl, samples=cfg.norm_samples, cache=cache)
-            norm_gym = fit_normalizer(wl, samples=cfg.norm_samples,
-                                      cache=cache,
-                                      evaluate_fn=evaluate_chipletgym)
-            for tname, template in TEMPLATES.items():
-                res_cp = anneal(wl, template, config=cfg, norm=norm,
+            pf = Pathfinder(wl, TEMPLATES["T1"], cache=cache)
+            norm = pf.fit_normalizer(samples=cfg.norm_samples,
+                                     method="scalar")
+            pf_gym = Pathfinder(wl, TEMPLATES["T1"], objective="chipletgym",
                                 cache=cache)
-                res_noc = anneal(wl, template.without_carbon(), config=cfg,
-                                 norm=norm, cache=cache)
-                res_gym = anneal(wl, template.without_carbon(), config=cfg,
-                                 norm=norm_gym, cache=cache,
-                                 evaluate_fn=evaluate_chipletgym)
+            norm_gym = pf_gym.fit_normalizer(samples=cfg.norm_samples,
+                                             method="scalar")
+            for tname, template in TEMPLATES.items():
+                res_cp = Pathfinder(wl, template, norm=norm,
+                                    cache=cache).search(strategy=sa)
+                res_noc = Pathfinder(wl, template.without_carbon(),
+                                     norm=norm, cache=cache).search(
+                    strategy=sa)
+                res_gym = Pathfinder(wl, template.without_carbon(),
+                                     objective="chipletgym", norm=norm_gym,
+                                     cache=cache).search(strategy=sa)
                 # re-evaluate every solution under the FULL CarbonPATH
                 # models so the comparison is apples-to-apples
                 m_cp = res_cp.best_metrics

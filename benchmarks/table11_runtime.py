@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import time
 
-from repro.core import SAConfig, SimCache, TEMPLATES, anneal, fit_normalizer, workload
+from repro.core import SAConfig, SimCache, TEMPLATES, workload
 from repro.core import scalesim
+from repro.pathfinding import Pathfinder, SimulatedAnnealing
 from benchmarks.common import row, timed
 
 
@@ -26,6 +27,12 @@ class _NoCache(scalesim.SimCache):
 def run(out=print) -> str:
     cfg = SAConfig(t_initial=400.0, t_final=0.05, cooling=0.93,
                    moves_per_temp=25, norm_samples=800, seed=1)
+    sa = SimulatedAnnealing(cfg)
+
+    def flow(wl, cache):
+        pf = Pathfinder(wl, TEMPLATES["T1"], cache=cache)
+        pf.fit_normalizer(samples=800, method="scalar")
+        pf.search(strategy=sa)
 
     def compute():
         results = []
@@ -33,13 +40,11 @@ def run(out=print) -> str:
             wl = workload(wl_idx)
             cache = SimCache()
             t0 = time.perf_counter()
-            norm = fit_normalizer(wl, samples=800, cache=cache)
-            anneal(wl, TEMPLATES["T1"], config=cfg, norm=norm, cache=cache)
+            flow(wl, cache)
             with_cache = time.perf_counter() - t0
             nocache = _NoCache()
             t0 = time.perf_counter()
-            norm = fit_normalizer(wl, samples=800, cache=nocache)
-            anneal(wl, TEMPLATES["T1"], config=cfg, norm=norm, cache=nocache)
+            flow(wl, nocache)
             without = time.perf_counter() - t0
             hit_rate = cache.hits / max(1, cache.hits + cache.misses)
             results.append((wl_idx, with_cache, without, hit_rate))

@@ -6,6 +6,11 @@ Anneals (chip count, TP width, microbatch, remat, int8 gradient
 compression) for three assigned architectures under two objectives —
 pure speed vs carbon-weighted — and prints how the chosen plan shifts,
 mirroring the paper's T1-vs-T3 template analysis at pod scale.
+
+For the paper's own chiplet design space, use the Pathfinder v2 API
+instead (``repro.pathfinding.Pathfinder`` + a search strategy — see
+examples/quickstart.py); this example keeps its bespoke pod-level
+annealer because its design vector is not an HI system.
 """
 from repro.analysis.tpu_pathfinder import evaluate_plan, pathfind
 from repro.configs import get_config

@@ -1,15 +1,25 @@
-"""Quickstart: CarbonPATH's public API in ~40 lines.
+"""Quickstart: CarbonPATH's public API (Pathfinder v2) in ~50 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. Evaluate one HI system's PPAC + CFP on a paper workload.
-2. Anneal a carbon-aware design for the same workload (fast schedule).
+2. Evaluate a whole random population at once (encoded design space).
+3. Let the SA engine design a carbon-aware system via the Pathfinder
+   facade (fast schedule), then cross-check with parallel tempering.
+
+Migration note: the seed entry points ``anneal(...)`` / ``fit_normalizer``
+still work as deprecation shims; new code should use
+``Pathfinder(wl, template).search(strategy=...)``.
 """
-from repro.core import (
-    HISystem, Mapping, SAConfig, SimCache, TEMPLATES,
-    anneal, evaluate, fit_normalizer, workload,
-)
+from repro.core import HISystem, Mapping, SAConfig, TEMPLATES, evaluate, workload
 from repro.core.chiplet import different_chiplet_system
+from repro.pathfinding import (
+    DesignSpace,
+    ParallelTempering,
+    Pathfinder,
+    SimulatedAnnealing,
+    evaluate_batch,
+)
 
 wl = workload(1)                       # GPT-2 MLP GEMM (512 x 768 x 3072)
 
@@ -27,11 +37,20 @@ print(f"  area    {m.area_mm2:8.1f} mm2  cost   {m.dollar:6.2f} $")
 print(f"  CFP     {m.emb_cfp_kg:.2f} kg embodied + {m.ope_cfp_kg:.2f} kg "
       f"operational   Perf-SI {m.perf_si:.3e}")
 
-# -- 2. let the SA engine design one (carbon-aware template T1) ------------
-cache = SimCache()
-norm = fit_normalizer(wl, samples=1500, cache=cache)
+# -- 2. batched evaluation over the encoded design space -------------------
+space = DesignSpace()
+pop = space.sample(4096, key=0)                   # valid by construction
+mb = evaluate_batch(pop, wl)
+best = int(mb.total_cfp.argmin())
+print(f"\n[evaluate_batch] {len(mb)} systems in one call; lowest-CFP draw: "
+      f"{space.decode(pop[best]).describe()} "
+      f"({mb.total_cfp[best]:.2f} kg, {mb.latency_s[best]*1e6:.1f} us)")
+
+# -- 3. let the SA engine design one (carbon-aware template T1) ------------
+pf = Pathfinder(wl, TEMPLATES["T1"])
+pf.fit_normalizer(samples=2000, seed=1)           # batched min/median fit
 cfg = SAConfig(t_initial=400, t_final=0.01, cooling=0.93, moves_per_temp=25)
-res = anneal(wl, TEMPLATES["T1"], config=cfg, norm=norm, cache=cache)
+res = pf.search(strategy=SimulatedAnnealing(cfg))
 b = res.best
 print(f"\n[anneal T1] best system after {res.evaluations} evaluations:")
 print(f"  {b.describe()}  chiplets={[c.name for c in b.chiplets]} "
@@ -39,4 +58,9 @@ print(f"  {b.describe()}  chiplets={[c.name for c in b.chiplets]} "
 print(f"  latency {res.best_metrics.latency_s*1e6:.2f} us  "
       f"CFP {res.best_metrics.total_cfp:.2f} kg  "
       f"cost {res.best_metrics.dollar:.2f} $")
-print(f"  sim-cache: {cache.hits} hits / {cache.misses} misses")
+
+# -- 4. same objective, batched parallel-tempering strategy ----------------
+res_pt = pf.search(strategy=ParallelTempering(n_chains=8, sweeps=120), key=0)
+print(f"\n[tempering] best of {res_pt.evaluations} batched evaluations: "
+      f"{res_pt.best.describe()}  cost {res_pt.best_cost:.3f} "
+      f"(SA found {res.best_cost:.3f})")

@@ -9,6 +9,10 @@ Public surface:
     evaluate / Metrics             PPAC + CFP evaluation (Eqs. 2-17)
     anneal / SAConfig / Template   the SA engine and T1-T4 templates
     evaluate_chipletgym            the ChipletGym-style baseline flow
+
+Exploration entry point: :mod:`repro.pathfinding` (Pathfinder API v2) —
+encoded design space, batched evaluation, pluggable search strategies.
+``anneal`` remains as a deprecation shim over it.
 """
 from repro.core.chiplet import (
     Chiplet,

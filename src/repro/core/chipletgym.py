@@ -8,8 +8,10 @@ Reproduces the simplifying assumptions the paper criticizes:
   * no area term and no CFP in the optimization objective.
 
 The evaluator exposes the same signature as :func:`repro.core.evaluate.
-evaluate` so the SA engine can run *ChipletGym-flow* optimizations by
-swapping ``evaluate_fn``.
+evaluate`. In the Pathfinder v2 API it is the ``objective="chipletgym"``
+backend (``repro.pathfinding.Pathfinder``), which replaces the seed
+``evaluate_fn`` swap; batched strategies fall back to per-row scalar
+evaluation for this backend.
 """
 from __future__ import annotations
 

@@ -51,13 +51,16 @@ class Topology:
     # -- path helpers -------------------------------------------------------
 
     def shortest_path(self, src: int, dst: int) -> List[int]:
+        """BFS with *sorted* neighbour expansion: ties between equal-length
+        paths break deterministically (lowest chiplet index first), so the
+        scalar and batched evaluators route identically."""
         if src == dst:
             return [src]
         prev: Dict[int, int] = {src: src}
         q = deque([src])
         while q:
             u = q.popleft()
-            for v in self.adj[u]:
+            for v in sorted(self.adj[u]):
                 if v not in prev:
                     prev[v] = u
                     if v == dst:

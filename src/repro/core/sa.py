@@ -1,9 +1,16 @@
-"""Simulated-annealing optimization engine (Sec V).
+"""SA solution space + hierarchical moves (Sec V), and legacy shims.
 
 Components: (1) the solution space = valid :class:`HISystem` vectors,
 (2) hierarchical moves — application-level (mapping) vs lower-level
 (chip-architecture / chiplet / package) perturbations with validity repair,
 (3) the Eq. 17 cost on min/median-normalized metrics.
+
+The annealing *loop* itself moved to
+:class:`repro.pathfinding.SimulatedAnnealing` (Pathfinder API v2);
+``anneal`` below is a thin deprecation shim that reproduces the seed
+behaviour bit-for-bit. ``fit_normalizer`` remains the scalar reference
+loop — prefer :func:`repro.pathfinding.fit_normalizer_batched` for large
+populations (>= 5x faster via the array evaluator).
 
 Runtime mitigations from Sec V-D are both present: the ScaleSim-equivalent
 simulation cache (shared across the whole anneal — node-only chiplet moves
@@ -15,8 +22,8 @@ Schedule (Sec VI-A): T0 = 4000, Tf = 0.001, cooling 0.99, 50 moves/temp.
 from __future__ import annotations
 
 import dataclasses
-import math
 import random
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.chiplet import Chiplet
@@ -29,7 +36,7 @@ from repro.core.techdb import (
     PKG_PROTOCOLS_3D,
     TechDB,
 )
-from repro.core.templates import Normalizer, Template, sa_cost
+from repro.core.templates import Normalizer, Template
 from repro.core.workload import GEMMWorkload, Mapping
 
 
@@ -276,35 +283,34 @@ def anneal(
     evaluate_fn: Callable[..., Metrics] = evaluate,
     initial: Optional[HISystem] = None,
 ) -> SAResult:
+    """Deprecation shim over the Pathfinder v2 API.
+
+    The annealing engine now lives in
+    :class:`repro.pathfinding.SimulatedAnnealing`; this wrapper preserves
+    the seed call signature and, *for a given normalizer*, produces
+    bit-identical trajectories (same RNG stream, same moves, same
+    evaluations). With ``norm=None`` the auto-fitted normalizer now uses
+    the true median (the ``Normalizer.fit`` even-length fix), so
+    trajectories can differ slightly from the pre-fix release. Migrate
+    to::
+
+        Pathfinder(wl, template, db=db, norm=norm).search(
+            strategy=SimulatedAnnealing(config))
+    """
+    warnings.warn(
+        "repro.core.sa.anneal is deprecated; use repro.pathfinding."
+        "Pathfinder with the SimulatedAnnealing strategy",
+        DeprecationWarning, stacklevel=2)
+    from repro.pathfinding import Pathfinder, SimulatedAnnealing
+
     cfg = config or SAConfig()
-    rng = random.Random(cfg.seed)
     cache = cache if cache is not None else SimCache()
     if norm is None:
         norm = fit_normalizer(wl, db, min(cfg.norm_samples, 2000),
                               cfg.seed + 1, cache, evaluate_fn,
                               cfg.max_chiplets)
-
-    cur = initial or random_system(rng, db, cfg.max_chiplets)
-    cur_m = evaluate_fn(cur, wl, db, cache=cache)
-    cur_c = sa_cost(cur_m, template, norm)
-    best, best_m, best_c = cur, cur_m, cur_c
-    history = [cur_c]
-    evals = 1
-
-    t = cfg.t_initial
-    while t > cfg.t_final:
-        for _ in range(cfg.moves_per_temp):
-            cand = propose(cur, rng, db, cfg.max_chiplets)
-            if cand is cur:
-                continue
-            m = evaluate_fn(cand, wl, db, cache=cache)
-            c = sa_cost(m, template, norm)
-            evals += 1
-            delta = c - cur_c
-            if delta <= 0 or rng.random() < math.exp(-delta / max(t, 1e-12)):
-                cur, cur_m, cur_c = cand, m, c
-                if c < best_c:
-                    best, best_m, best_c = cand, m, c
-        history.append(cur_c)
-        t *= cfg.cooling
-    return SAResult(best, best_m, best_c, history, evals, cache)
+    pf = Pathfinder(wl, template, db=db, objective=evaluate_fn, norm=norm,
+                    cache=cache, max_chiplets=cfg.max_chiplets)
+    res = pf.search(strategy=SimulatedAnnealing(cfg, initial=initial))
+    return SAResult(res.best, res.best_metrics, res.best_cost, res.history,
+                    res.evaluations, cache)

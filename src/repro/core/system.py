@@ -1,9 +1,14 @@
 """HI-system configuration vector + feasibility rules (Sec V-A).
 
-An :class:`HISystem` is one candidate solution of the SA engine: the
+An :class:`HISystem` is one candidate solution of the search engine: the
 chiplet multiset, integration style, package interconnect(s), protocol(s),
 system memory, and the workload mapping triple. ``validate`` enforces the
 paper's feasibility rules; every SA move goes through it.
+
+For population-scale work, systems have a canonical fixed-width ``int32``
+encoding — see :class:`repro.pathfinding.DesignSpace`, whose
+``validity_mask`` is the vectorized rendering of :func:`validate` and
+whose ``encode``/``decode`` round-trip exactly over valid systems.
 """
 from __future__ import annotations
 

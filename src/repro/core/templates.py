@@ -9,6 +9,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Mapping, Sequence
 
+import numpy as np
+
 from repro.core.evaluate import Metrics
 
 METRIC_FIELDS = ("energy_j", "area_mm2", "latency_s", "dollar",
@@ -59,8 +61,19 @@ class Normalizer:
         for f in METRIC_FIELDS:
             vals = sorted(getattr(m, f) for m in population)
             mins[f] = vals[0]
-            mid = vals[len(vals) // 2]
-            medians[f] = mid if mid > 0 else 1.0
+            medians[f] = _positive_median(vals)
+        return cls(mins, medians)
+
+    @classmethod
+    def fit_arrays(cls, fields: Mapping[str, "np.ndarray"]) -> "Normalizer":
+        """Fit from struct-of-arrays metrics (one array per METRIC_FIELDS
+        entry), e.g. a :class:`repro.pathfinding.MetricsBatch`."""
+        mins: Dict[str, float] = {}
+        medians: Dict[str, float] = {}
+        for f in METRIC_FIELDS:
+            vals = np.asarray(fields[f], dtype=np.float64)
+            mins[f] = float(vals.min())
+            medians[f] = _positive_median(sorted(vals.tolist()))
         return cls(mins, medians)
 
     def normalize(self, m: Metrics) -> Dict[str, float]:
@@ -68,6 +81,23 @@ class Normalizer:
             f: (getattr(m, f) - self.mins[f]) / self.medians[f]
             for f in METRIC_FIELDS
         }
+
+    def weights_arrays(self):
+        """(mins, medians) as float64 vectors in METRIC_FIELDS order, for
+        batched cost evaluation."""
+        return (np.array([self.mins[f] for f in METRIC_FIELDS]),
+                np.array([self.medians[f] for f in METRIC_FIELDS]))
+
+
+def _positive_median(sorted_vals: Sequence[float]) -> float:
+    """True median of a pre-sorted sequence (midpoint average for even
+    lengths), floored to 1.0 when non-positive so it can divide."""
+    n = len(sorted_vals)
+    if n % 2:
+        mid = sorted_vals[n // 2]
+    else:
+        mid = 0.5 * (sorted_vals[n // 2 - 1] + sorted_vals[n // 2])
+    return mid if mid > 0 else 1.0
 
 
 IDENTITY_NORMALIZER = Normalizer(

@@ -1,0 +1,11 @@
+"""Cross-version Pallas TPU compatibility helpers."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kwargs):
+    """``CompilerParams`` was renamed from ``TPUCompilerParams``; build
+    whichever this jax provides."""
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -15,14 +15,19 @@ from typing import Tuple
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh_kwargs(n: int) -> dict:
+    """``axis_types`` only exists on newer jax; omit it where unavailable
+    (older versions treat every axis as Auto anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_host_mesh(model: int = 1):
@@ -30,7 +35,7 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     model = max(1, min(model, n))
     return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+                         **_mesh_kwargs(2))
 
 
 def data_axes(mesh) -> Tuple[str, ...]:

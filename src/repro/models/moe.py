@@ -167,7 +167,10 @@ def moe_forward_ep(p: Params, x: jnp.ndarray, cfg: ModelConfig, mesh,
     the paper's split-K story at the package level: partial results
     produced where the weights live, reduced at the destination.
     """
-    from jax import shard_map
+    try:
+        from jax import shard_map  # newer jax re-exports it at top level
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.launch.mesh import data_axes
 
@@ -240,8 +243,11 @@ def moe_forward_ep(p: Params, x: jnp.ndarray, cfg: ModelConfig, mesh,
                 P("model"))
     out_specs = (P(b_spec, "model", None) if scatter_combine
                  else P(b_spec, None, None))
+    import inspect
+    no_check = ("check_vma" if "check_vma" in
+                inspect.signature(shard_map).parameters else "check_rep")
     y = shard_map(body, mesh=mesh, in_specs=in_specs,
-                  out_specs=out_specs, check_vma=False)(
+                  out_specs=out_specs, **{no_check: False})(
         x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     if "shared" in p:
         y = y + mlp_forward(p["shared"], x)

@@ -1,0 +1,49 @@
+"""CarbonPATH pathfinding — Pathfinder API v2.
+
+The public exploration surface of the repo: an encoded design space
+(:class:`DesignSpace`), a batched struct-of-arrays evaluator
+(:func:`evaluate_batch`, parity-guaranteed against the scalar
+:func:`repro.core.evaluate.evaluate`) and pluggable search strategies
+behind the :class:`Pathfinder` facade.
+
+Quickstart::
+
+    from repro.core import SAConfig, TEMPLATES, workload
+    from repro.pathfinding import Pathfinder, SimulatedAnnealing
+
+    pf = Pathfinder(workload(1), TEMPLATES["T1"])
+    res = pf.search(strategy=SimulatedAnnealing(SAConfig()))
+    print(res.best.describe(), res.best_metrics.total_cfp)
+
+Migration from the seed API: ``anneal(wl, template, ...)`` is now
+``Pathfinder(wl, template, ...).search(SimulatedAnnealing(config))``;
+``fit_normalizer`` is ``Pathfinder.fit_normalizer`` (batched by default,
+``method="scalar"`` for the seed loop); the ``evaluate_fn`` swap is the
+``objective="carbonpath" | "chipletgym"`` backend name. The seed entry
+points keep working as thin deprecation shims for one release.
+"""
+from repro.pathfinding.batch import (
+    BatchEvaluator,
+    MetricsBatch,
+    evaluate_batch,
+    fit_normalizer_batched,
+    get_evaluator,
+)
+from repro.pathfinding.pathfinder import OBJECTIVES, Pathfinder
+from repro.pathfinding.space import DesignSpace
+from repro.pathfinding.strategies import (
+    GridSweep,
+    Objective,
+    ParallelTempering,
+    RandomSearch,
+    SearchResult,
+    SearchStrategy,
+    SimulatedAnnealing,
+)
+
+__all__ = [
+    "BatchEvaluator", "MetricsBatch", "evaluate_batch",
+    "fit_normalizer_batched", "get_evaluator", "OBJECTIVES", "Pathfinder",
+    "DesignSpace", "GridSweep", "Objective", "ParallelTempering",
+    "RandomSearch", "SearchResult", "SearchStrategy", "SimulatedAnnealing",
+]

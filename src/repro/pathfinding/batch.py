@@ -1,0 +1,878 @@
+"""Batched PPAC + CFP evaluation over encoded populations.
+
+``evaluate_batch`` computes the same six metrics as the scalar
+:func:`repro.core.evaluate.evaluate` — latency, energy, area, dollar,
+embodied CFP, operational CFP (Eqs. 2-17) — for an entire ``int32``
+population at once, within 1e-6 relative tolerance of the scalar
+reference (asserted by the tier-1 parity tests and the
+``pathfinder_batch`` benchmark).
+
+Three-stage pipeline:
+
+1. **Lookup tables** (built once per (workload, TechDB, tile sizes)):
+   per-(array, node, sram) chiplet physicals (area/power/cost/carbon) via
+   the scalar :class:`Chiplet` methods, and per-tile prefix-sum tables of
+   the ScaleSim-equivalent simulation over the canonical tile list, one
+   per (array, sram, dataflow, split-K) combination. Algorithm 1 assigns
+   each core a *contiguous* tile range, so a core's simulation result is
+   a difference of two prefix entries.
+2. **Topology descriptors** (thin Python pass, the only non-vectorized
+   stage): the slicing floorplan, link bandwidths, BFS reduction routes
+   and DRAM attach points per system — identical math to
+   :mod:`repro.core.d2d` including its sorted-BFS tie-breaking.
+3. **Array arithmetic**: tile assignment, prefix gathers and the full
+   latency/energy/area/dollar/CFP calculation as ``jax.numpy`` gathers
+   and arithmetic over ``[population, chiplet-slot]`` arrays (float64 via
+   ``jax.experimental.enable_x64``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.carbon import SECONDS_PER_YEAR
+from repro.core.chiplet import Chiplet
+from repro.core.d2d import HOP_LATENCY_S
+from repro.core.evaluate import Metrics
+from repro.core.scalesim import OPERAND_BYTES, PSUM_BYTES
+from repro.core.techdb import DEFAULT_DB, TechDB
+from repro.core.templates import Normalizer
+from repro.core.workload import DEFAULT_TILE, GEMMWorkload, _partition
+from repro.pathfinding.space import (
+    COL_DATAFLOW,
+    COL_MEM,
+    COL_N,
+    COL_ORDER,
+    COL_PAIR25,
+    COL_PAIR3,
+    COL_SPLITK,
+    COL_STACK,
+    COL_STYLE,
+    DEFAULT_MAX_CHIPLETS,
+    DesignSpace,
+    S_2D,
+    S_3D,
+    S_HYBRID,
+)
+
+MAX_LINKS = 16  # slicing floorplans of <= 6 planar slots + a 3D chain
+_TOPO_CACHE_MAX = 200_000  # per-evaluator memoized topology descriptors
+
+
+@dataclasses.dataclass
+class MetricsBatch:
+    """Struct-of-arrays mirror of :class:`repro.core.evaluate.Metrics`."""
+
+    latency_s: np.ndarray
+    energy_j: np.ndarray
+    area_mm2: np.ndarray
+    dollar: np.ndarray
+    emb_cfp_kg: np.ndarray
+    ope_cfp_kg: np.ndarray
+    l_compute_rd_s: np.ndarray
+    l_d2d_s: np.ndarray
+    l_dram_wr_s: np.ndarray
+    e_compute_j: np.ndarray
+    e_d2d_j: np.ndarray
+    d2d_bits: np.ndarray
+    macs: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.latency_s)
+
+    @property
+    def total_cfp(self) -> np.ndarray:
+        return self.emb_cfp_kg + self.ope_cfp_kg
+
+    def fields(self) -> Dict[str, np.ndarray]:
+        """The six Eq. 17 metric fields (METRIC_FIELDS order-compatible)."""
+        return {
+            "energy_j": self.energy_j, "area_mm2": self.area_mm2,
+            "latency_s": self.latency_s, "dollar": self.dollar,
+            "emb_cfp_kg": self.emb_cfp_kg, "ope_cfp_kg": self.ope_cfp_kg,
+        }
+
+    def row(self, i: int) -> Metrics:
+        return Metrics(
+            latency_s=float(self.latency_s[i]),
+            energy_j=float(self.energy_j[i]),
+            area_mm2=float(self.area_mm2[i]),
+            dollar=float(self.dollar[i]),
+            emb_cfp_kg=float(self.emb_cfp_kg[i]),
+            ope_cfp_kg=float(self.ope_cfp_kg[i]),
+            l_compute_rd_s=float(self.l_compute_rd_s[i]),
+            l_d2d_s=float(self.l_d2d_s[i]),
+            l_dram_wr_s=float(self.l_dram_wr_s[i]),
+            e_compute_j=float(self.e_compute_j[i]),
+            e_d2d_j=float(self.e_d2d_j[i]),
+            d2d_bits=int(self.d2d_bits[i]),
+            macs=int(self.macs[i]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized ScaleSim-equivalent per-tile model (exact integer replication
+# of scalesim.simulate_tile / _tile_traffic)
+# ---------------------------------------------------------------------------
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def _tile_sim_arrays(m, k, n, a: int, buf: int, dataflow: str):
+    """(cycles, rd_bits, wr_bits, sram_bits, macs) int64 arrays over tiles."""
+    m, k, n = (np.asarray(x, dtype=np.int64) for x in (m, k, n))
+    if dataflow == "OS":
+        passes, stream = _ceil_div(m, a) * _ceil_div(n, a), k
+    elif dataflow == "WS":
+        passes, stream = _ceil_div(k, a) * _ceil_div(n, a), m
+    else:  # IS
+        passes, stream = _ceil_div(m, a) * _ceil_div(k, a), n
+    cycles = passes * (stream + 2 * a - 1)
+
+    if_b = m * k * OPERAND_BYTES
+    w_b = k * n * OPERAND_BYTES
+    of_b = m * n * PSUM_BYTES
+    final_wr = m * n * OPERAND_BYTES
+    if dataflow == "OS":
+        if_folds = np.where(a * k * OPERAND_BYTES <= buf, 1, _ceil_div(n, a))
+        w_folds = np.where(k * a * OPERAND_BYTES <= buf, 1, _ceil_div(m, a))
+        rd = if_b * if_folds + w_b * w_folds
+        wr = final_wr
+    elif dataflow == "WS":
+        if_folds = np.where(m * a * OPERAND_BYTES <= buf, 1, _ceil_div(n, a))
+        k_folds = _ceil_div(k, a)
+        spill = np.where(m * a * PSUM_BYTES <= buf, 1, k_folds)
+        rd = w_b + if_b * if_folds + of_b * (spill - 1)
+        wr = of_b * (spill - 1) + final_wr
+    else:  # IS
+        w_folds = np.where(a * n * OPERAND_BYTES <= buf, 1, _ceil_div(m, a))
+        k_folds = _ceil_div(k, a)
+        spill = np.where(a * n * PSUM_BYTES <= buf, 1, k_folds)
+        rd = if_b + w_b * w_folds + of_b * (spill - 1)
+        wr = of_b * (spill - 1) + final_wr
+    sram = (if_b + w_b + of_b) * 8 + (rd + wr) * 8
+    return cycles, rd * 8, wr * 8, sram, m * k * n
+
+
+# ---------------------------------------------------------------------------
+# Tuple-based replication of the slicing floorplanner: identical arithmetic
+# to fp.floorplan / fp.Rect.edge_shared (guarded by the tier-1 parity
+# tests), minus the per-Rect object overhead — the descriptor pass runs it
+# once per 2.5D/hybrid system.
+# ---------------------------------------------------------------------------
+
+
+def _lean_place(items, x, y, w, h, vertical, out):
+    if len(items) == 1:
+        out[items[0][0]] = (x, y, w, h)
+        return
+    ordered = sorted(items, key=lambda t: t[1], reverse=True)
+    left, right = [], []
+    al = ar = 0.0
+    for item in ordered:
+        if al <= ar:
+            left.append(item)
+            al += item[1]
+        else:
+            right.append(item)
+            ar += item[1]
+    frac = al / (al + ar)
+    if vertical:
+        wl = w * frac
+        _lean_place(left, x, y, wl, h, False, out)
+        _lean_place(right, x + wl, y, w - wl, h, False, out)
+    else:
+        hl = h * frac
+        _lean_place(left, x, y, w, hl, True, out)
+        _lean_place(right, x, y + hl, w, h - hl, True, out)
+
+
+def _lean_floorplan(areas):
+    """-> (rect tuples (x, y, w, h) in input order, bbox area)."""
+    total = sum(areas) * (1.0 + 0.10)
+    side = math.sqrt(total)
+    out = [None] * len(areas)
+    _lean_place(list(enumerate(areas)), 0.0, 0.0, side, side, True, out)
+    width = max(r[0] + r[2] for r in out)
+    height = max(r[1] + r[3] for r in out)
+    return out, width * height
+
+
+def _lean_edge(r1, r2, tol=1e-9):
+    x1, y1, w1, h1 = r1
+    x2, y2, w2, h2 = r2
+    if abs(x1 + w1 - x2) < tol or abs(x2 + w2 - x1) < tol:
+        lo = y1 if y1 > y2 else y2
+        hi = min(y1 + h1, y2 + h2)
+        return hi - lo if hi > lo else 0.0
+    if abs(y1 + h1 - y2) < tol or abs(y2 + h2 - y1) < tol:
+        lo = x1 if x1 > x2 else x2
+        hi = min(x1 + w1, x2 + w2)
+        return hi - lo if hi > lo else 0.0
+    return 0.0
+
+
+# ---------------------------------------------------------------------------
+# The evaluator
+# ---------------------------------------------------------------------------
+
+_SIM_METRICS = ("cycles", "rd", "wr", "sram", "macs")
+
+
+class BatchEvaluator:
+    """Precomputed-table batched evaluator for one (workload, db, tiles)."""
+
+    def __init__(self, wl: GEMMWorkload, db: TechDB = DEFAULT_DB,
+                 tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
+                 space: Optional[DesignSpace] = None):
+        self.wl = wl
+        self.db = db
+        self.tile_sizes = tile_sizes
+        self.space = space or DesignSpace(db)
+        self._topo_cache: Dict[bytes, tuple] = {}
+        self._build_chiplet_tables()
+        self._build_memory_tables()
+        self._build_package_info()
+        self._build_tile_tables()
+
+    # -- table construction -------------------------------------------------
+
+    def _build_chiplet_tables(self) -> None:
+        sp, db = self.space, self.db
+        A, T = len(sp.arrays), len(sp.nodes)
+        S = int(sp.n_sram.max())
+        shape = (A, T, S)
+        self.t_area = np.zeros(shape)
+        self.t_static = np.zeros(shape)
+        self.t_cost = np.zeros(shape)
+        self.t_mfg = np.zeros(shape)
+        self.t_buf = np.zeros(shape, dtype=np.int64)
+        from repro.core import carbon as carbon_mod
+        from repro.core import cost as cost_mod
+        for ai, array in enumerate(sp.arrays):
+            for ti, node in enumerate(sp.nodes):
+                for si, sram in enumerate(db.sram_sizes_kb[array]):
+                    c = Chiplet(array, node, sram)
+                    self.t_area[ai, ti, si] = c.area_mm2(db)
+                    self.t_static[ai, ti, si] = c.static_power_w(db)
+                    self.t_cost[ai, ti, si] = cost_mod.chiplet_cost(c, db)
+                    self.t_mfg[ai, ti, si] = carbon_mod.chiplet_mfg_cfp(c, db)
+                    self.t_buf[ai, ti, si] = c.buffer_bytes_each()
+        self.t_freq = np.array([db.freq_ghz(t) for t in sp.nodes])
+        self.t_des = np.array(
+            [db.node_design_cfp[t] / db.production_volume for t in sp.nodes])
+        self.t_sram_e = np.array([db.sram_energy_pj_bit(t) for t in sp.nodes])
+        self.t_mac_e = np.array([db.mac_energy_pj(t) for t in sp.nodes])
+        # Algorithm 1 line 6 relative compute power (node-scaled frequency)
+        self.t_power = np.array(
+            [[a * a * db.freq_ghz(t) for t in sp.nodes] for a in sp.arrays])
+
+    def _build_memory_tables(self) -> None:
+        mems = [self.db.memories[m] for m in self.space.memories]
+        self.m_bw = np.array(
+            [m.bw_gbs_per_channel * m.max_channels * 8e9 for m in mems])
+        self.m_rd = np.array([m.energy_pj_bit_rd for m in mems])
+        self.m_wr = np.array([m.energy_pj_bit_wr for m in mems])
+        self.m_cost = np.array([m.cost_usd for m in mems])
+
+    def _build_package_info(self) -> None:
+        """Per package-protocol pair: everything the link model consumes."""
+        db = self.db
+
+        def info(pkg_name, proto_name):
+            pkg = db.packages[pkg_name]
+            proto = db.protocols[proto_name]
+            return (pkg.bump_pitch_um, pkg.bonding_yield, pkg.cfp_kg_per_mm2,
+                    pkg.cost_scale, proto.data_rate_gbps, proto.efficiency,
+                    proto.energy_pj_bit, pkg_name in ("Passive", "Active"))
+
+        self.p25_info = [info(p, pr) for p, pr in self.space.pairs_25d]
+        self.p3_info = [info(p, pr) for p, pr in self.space.pairs_3d]
+
+    def _build_tile_tables(self) -> None:
+        """Canonical tile lists (Algorithm 1 lines 1-4) and prefix-sum sim
+        tables [array, sram, dataflow, tile+1] for both split-K settings."""
+        wl, db, sp = self.wl, self.db, self.space
+        t_m, t_k, t_n = self.tile_sizes
+        self.tiles: Dict[int, dict] = {}
+        for split_k in (0, 1):
+            b_k = min(t_k, max(1, wl.K // 2)) if split_k else wl.K
+            ms = _partition(wl.M, t_m)
+            ks = _partition(wl.K, b_k)
+            ns = _partition(wl.N, t_n)
+            partial = len(ks) > 1
+            mv = np.array([m for m in ms for _ in ks for _ in ns],
+                          dtype=np.int64)
+            kv = np.array([k for _ in ms for k in ks for _ in ns],
+                          dtype=np.int64)
+            nv = np.array([n for _ in ms for _ in ks for n in ns],
+                          dtype=np.int64)
+            T = len(mv)
+            A, S = len(sp.arrays), int(sp.n_sram.max())
+            pref = {f: np.zeros((A, S, 3, T + 1), dtype=np.int64)
+                    for f in _SIM_METRICS}
+            for ai, array in enumerate(sp.arrays):
+                for si in range(len(db.sram_sizes_kb[array])):
+                    buf = int(self.t_buf[ai, 0, si])
+                    for di, dataflow in enumerate(("OS", "WS", "IS")):
+                        vals = _tile_sim_arrays(mv, kv, nv, array, buf,
+                                                dataflow)
+                        for f, arr in zip(_SIM_METRICS, vals):
+                            np.cumsum(arr, out=pref[f][ai, si, di, 1:])
+            width = PSUM_BYTES if partial else OPERAND_BYTES
+            mn_pref = np.zeros(T + 1, dtype=np.int64)
+            np.cumsum(mv * nv * width * 8, out=mn_pref[1:])
+            self.tiles[split_k] = dict(T=T, pref=pref, mn_pref=mn_pref)
+
+    # -- Algorithm 1, vectorized --------------------------------------------
+
+    def _assign(self, powers: np.ndarray, nmask: np.ndarray,
+                order: np.ndarray, total: np.ndarray):
+        """Per-core (start, count) into the canonical tile list, replicating
+        ``tile_and_assign`` exactly (stable sorts, floor + largest-fraction
+        leftover distribution)."""
+        P, C = powers.shape
+        key = np.where(order[:, None] == 0, -powers, powers)
+        key = np.where(nmask, key, np.inf)  # padding sorts last either way
+        pos = np.argsort(key, axis=1, kind="stable")
+        p_sorted = np.take_along_axis(powers, pos, axis=1)
+        # accumulate in sorted order, exactly like the scalar loop's
+        # sum(): equal-power cores make the fractional parts ulp-level
+        # ties, so even summation order is part of the parity contract
+        psum = np.add.accumulate(p_sorted, axis=1)[:, -1]
+        psum = np.where(psum > 0, psum, 1.0)  # all-padding rows (buckets)
+        ideal = p_sorted / psum[:, None] * total[:, None]
+        counts = np.floor(ideal)
+        remaining = (total - counts.sum(axis=1)).astype(np.int64)
+        frac = ideal - counts
+        frac_pos = np.argsort(-frac, axis=1, kind="stable")
+        rank = np.empty((P, C), dtype=np.int64)
+        np.put_along_axis(rank, frac_pos,
+                          np.broadcast_to(np.arange(C), (P, C)), axis=1)
+        counts = counts.astype(np.int64) + (rank < remaining[:, None])
+        starts = np.zeros((P, C), dtype=np.int64)
+        np.cumsum(counts[:, :-1], axis=1, out=starts[:, 1:])
+        start = np.empty((P, C), dtype=np.int64)
+        count = np.empty((P, C), dtype=np.int64)
+        np.put_along_axis(start, pos, starts, axis=1)
+        np.put_along_axis(count, pos, counts, axis=1)
+        return start, count
+
+    # -- stage 2: per-system topology descriptors ---------------------------
+
+    def _topo_one(self, n: int, st: int, ar, p25i: int, p3i: int,
+                  stackmask: int, memtot: float):
+        """Topology descriptor for one 2.5D or hybrid system — identical
+        math to d2d.build_topology/route_reduction, compacted to plain
+        tuples so it can be memoized by structural signature."""
+        adj: List[List[int]] = [[] for _ in range(n)]
+        lidx: Dict[Tuple[int, int], int] = {}
+        bw_c: List[int] = []
+        bw_v: List[float] = []
+        de_c: List[int] = []
+        de_v: List[float] = []
+        ho_c: List[int] = []
+        ho_v: List[int] = []
+        lkbw: List[float] = []
+        lke: List[float] = []
+        in_l: List[int] = []
+        in_c: List[int] = []
+        acost = self.db.assembly_cost
+
+        (pitch25, y25, cfp25, scale25, rate25, eta25, ebit25,
+         is_interp) = self.p25_info[p25i]
+        if st == S_HYBRID:
+            (pitch3, y3, cfp3, scale3, rate3, eta3, ebit3,
+             _) = self.p3_info[p3i]
+            members = [i for i in range(n) if (stackmask >> i) & 1]
+            order3 = sorted(members, key=lambda i: -ar[i])
+            base = order3[0]
+            planar = [i for i in range(n)
+                      if not (stackmask >> i) & 1] + [base]
+            chain = order3
+        else:
+            base = None
+            planar = list(range(n))
+            chain = []
+
+        # 2.5D plane: slicing floorplan -> shared-edge links (Eqs. 6-7)
+        base_bw = memtot
+        rects, bbox = _lean_floorplan([ar[i] for i in planar])
+        npl = len(planar)
+        for j in range(npl):
+            rj = rects[j]
+            for j2 in range(j + 1, npl):
+                edge = _lean_edge(rj, rects[j2])
+                if edge > 1e-9:
+                    bw = (rate25 * 1e9
+                          * max(1, int(edge * 1e3 / pitch25)) * eta25)
+                    a, b = planar[j], planar[j2]
+                    for end in (a, b):
+                        perim = 4.0 * math.sqrt(ar[end])
+                        bw = min(bw, rate25 * 1e9
+                                 * max(1, int(perim * 1e3 / pitch25))
+                                 * eta25)
+                    lidx[(a, b) if a < b else (b, a)] = len(lkbw)
+                    lkbw.append(bw)
+                    lke.append(ebit25)
+                    adj[a].append(b)
+                    adj[b].append(a)
+        tot = sum(ar[i] for i in planar)
+        for i in planar:
+            share = memtot * ar[i] / tot
+            bw_c.append(i)
+            bw_v.append(share)
+            if i == base:
+                base_bw = share
+
+        # 3D chain: face-area bonds, base-die-mediated DRAM (Eqs. 8-10)
+        chain_links = []
+        for lo, hi in zip(chain, chain[1:]):
+            face = min(ar[lo], ar[hi])
+            bw = (rate3 * 1e9
+                  * max(1, int(face * 1e6 / (pitch3 * pitch3))) * eta3)
+            chain_links.append(bw)
+            lidx[(lo, hi) if lo < hi else (hi, lo)] = len(lkbw)
+            lkbw.append(bw)
+            lke.append(ebit3)
+            adj[lo].append(hi)
+            adj[hi].append(lo)
+        # stacked non-base dies reach DRAM only through the base die
+        bw = base_bw
+        for tier in range(1, len(chain)):
+            i = chain[tier]
+            bw = min(bw, chain_links[tier - 1])
+            bw_c.append(i)
+            bw_v.append(bw)
+            de_c.append(i)
+            de_v.append(tier * ebit3)
+        assert len(lkbw) <= MAX_LINKS, "floorplan produced > MAX_LINKS"
+
+        # reduction routes: BFS per source, sorted-neighbour expansion
+        # (identical tie-breaking to d2d.Topology.shortest_path). The
+        # destination is the first-largest die, as in build_topology.
+        d = ar.index(max(ar[:n]))
+        adj = [sorted(a) for a in adj]
+        for src in range(n):
+            if src == d:
+                continue
+            if d in adj[src]:
+                # direct link: the unique length-1 shortest path, so
+                # BFS tie-breaking cannot matter — skip the search
+                in_l.append(lidx[(src, d) if src < d else (d, src)])
+                in_c.append(src)
+                ho_c.append(src)
+                ho_v.append(1)
+                continue
+            prev = {src: src}
+            queue = [src]
+            qi = 0
+            found = False
+            while qi < len(queue) and not found:
+                u = queue[qi]
+                qi += 1
+                for w in adj[u]:
+                    if w not in prev:
+                        prev[w] = u
+                        if w == d:
+                            found = True
+                            break
+                        queue.append(w)
+            node = d
+            nh = 0
+            while node != src:
+                u = prev[node]
+                in_l.append(lidx[(u, node) if u < node else (node, u)])
+                in_c.append(src)
+                nh += 1
+                node = u
+            ho_c.append(src)
+            ho_v.append(nh)
+
+        # bonding yield, assembly cost, carbon rates (Eqs. 15-16, 2)
+        n_attach = len(planar)
+        bond_y = y25 ** n_attach
+        assembly = n_attach * acost * scale25
+        p3_bonded = 0.0
+        if st == S_HYBRID:
+            n_bonds = max(0, len(chain) - 1)
+            bond_y = bond_y * y3 ** n_bonds
+            assembly = assembly + len(chain) * acost * scale3
+            p3_bonded = cfp3 * sum(ar[i] for i in chain[1:])
+        return ((bw_c, bw_v), (de_c, de_v), (ho_c, ho_v), (lkbw, lke),
+                (in_l, in_c), bbox, bond_y, assembly, is_interp, cfp25,
+                p3_bonded)
+
+    def _topology(self, v: np.ndarray, areas: np.ndarray):
+        P, C = areas.shape
+        db = self.db
+        style = v[:, COL_STYLE]
+        is2d = style == S_2D
+
+        # scatter accumulators: per-element numpy writes are ~1us each, so
+        # the loop collects plain-python triplets and scatters once at the
+        # end (this is the difference between ~2x and ~8x over scalar)
+        bw_p, bw_c, bw_v = [], [], []          # eff_bw[p, c] = v
+        de_p, de_c, de_v = [], [], []          # dram_e[p, c] = v
+        ho_p, ho_c, ho_v = [], [], []          # hops[p, c] = v
+        lk_p, lk_l, lk_bw, lk_e = [], [], [], []   # link_bw/link_e[p, l]
+        in_p, in_l, in_c = [], [], []          # inc[p, l, c] = 1
+
+        pkg_area = np.zeros(P)
+        pkg_area[is2d] = areas[is2d, 0]
+        bond_y_l = [1.0] * P
+        assembly_l = [0.0] * P
+        interp_l = [False] * P
+        p25_rate_l = [0.0] * P
+        p3_bonded_l = [0.0] * P
+        acost = db.assembly_cost
+
+        # pure-3D rows: a vertical chain (no floorplan) — fully vectorized
+        is3d = style == S_3D
+        if is3d.any():
+            r3 = np.nonzero(is3d)[0]
+            n3 = v[r3, COL_N]
+            C3 = int(n3.max())
+            a3 = areas[r3, :C3]
+            # stack order: non-increasing area, ties by index (stable)
+            order3 = np.argsort(np.where(np.arange(C3)[None, :] < n3[:, None],
+                                         -a3, np.inf), axis=1, kind="stable")
+            a_sorted = np.take_along_axis(a3, order3, axis=1)
+            info3 = np.asarray(
+                [i[:7] for i in self.p3_info])[v[r3, COL_PAIR3]]
+            pitch3, y3, cfp3, scale3, rate3, eta3, ebit3 = info3.T
+            tiermask = np.arange(1, C3)[None, :] < n3[:, None]  # tier >= 1
+            # Eq. 7 per bond: bumps over the (smaller) upper die's face
+            face = a_sorted[:, 1:]
+            nb = np.maximum(
+                1.0, np.trunc(face * 1e6 / (pitch3 * pitch3)[:, None]))
+            cbw = rate3[:, None] * 1e9 * nb * eta3[:, None]
+            base3 = order3[:, 0]
+            memtot3 = self.m_bw[v[r3, COL_MEM]]
+            pkg_area[r3] = a_sorted[:, 0]
+            # Eqs. 8-10: effective DRAM bw = min(base bw, links below)
+            eff3 = np.minimum(memtot3[:, None], np.minimum.accumulate(
+                np.where(tiermask, cbw, np.inf), axis=1))
+            bw_p.extend(r3.tolist())
+            bw_c.extend(base3.tolist())
+            bw_v.extend(memtot3.tolist())
+            tr, tc = np.nonzero(tiermask)
+            bw_p.extend(r3[tr].tolist())
+            bw_c.extend(order3[tr, tc + 1].tolist())
+            bw_v.extend(eff3[tr, tc].tolist())
+            de_p.extend(r3[tr].tolist())
+            de_c.extend(order3[tr, tc + 1].tolist())
+            de_v.extend(((tc + 1) * ebit3[tr]).tolist())
+            ho_p.extend(r3[tr].tolist())
+            ho_c.extend(order3[tr, tc + 1].tolist())
+            ho_v.extend((tc + 1).tolist())
+            lk_p.extend(r3[tr].tolist())
+            lk_l.extend(tc.tolist())
+            lk_bw.extend(cbw[tr, tc].tolist())
+            lk_e.extend(np.broadcast_to(ebit3[:, None],
+                                        cbw.shape)[tr, tc].tolist())
+            # tier t's reduction route to the base crosses links 0..t-1
+            ir, il, it = np.nonzero(
+                np.triu(np.ones((C3 - 1, C3 - 1), dtype=bool))[None]
+                & tiermask[:, None, :])
+            in_p.extend(r3[ir].tolist())
+            in_l.extend(il.tolist())
+            in_c.extend(order3[ir, it + 1].tolist())
+            for p, nn, y, sc, bonded in zip(
+                    r3.tolist(), n3.tolist(), y3.tolist(), scale3.tolist(),
+                    (cfp3 * np.where(tiermask, a_sorted[:, 1:], 0.0)
+                     .sum(axis=1)).tolist()):
+                bond_y_l[p] = y ** (nn - 1)
+                assembly_l[p] = nn * acost * sc
+                p3_bonded_l[p] = bonded
+
+        pkg_area_l = pkg_area.tolist()
+        rows = np.nonzero(~is2d & ~is3d)[0].tolist()
+        n_l = v[:, COL_N].tolist()
+        st_l = style.tolist()
+        p25_l = v[:, COL_PAIR25].tolist()
+        p3_l = v[:, COL_PAIR3].tolist()
+        stack_l = v[:, COL_STACK].tolist()
+        mem_l = self.m_bw[v[:, COL_MEM]].tolist()
+        areas_l = areas.tolist()
+
+        # memoize descriptors on the structural columns (everything but the
+        # mapping triple): application-level SA moves and re-fits over the
+        # same population reuse topologies wholesale
+        row_nbytes = v.shape[1] * v.itemsize
+        vkey = v.copy()
+        vkey[:, COL_ORDER] = 0
+        vkey[:, COL_DATAFLOW] = 0
+        vkey[:, COL_SPLITK] = 0
+        key_blob = vkey.tobytes()
+        cache = self._topo_cache
+
+        for p in rows:
+            key = key_blob[p * row_nbytes:(p + 1) * row_nbytes]
+            desc = cache.get(key)
+            if desc is None:
+                desc = self._topo_one(n_l[p], st_l[p], areas_l[p],
+                                      p25_l[p], p3_l[p], stack_l[p],
+                                      mem_l[p])
+                if len(cache) < _TOPO_CACHE_MAX:
+                    cache[key] = desc
+            (d_bw, d_de, d_ho, d_lk, d_inc, d_area, d_bond, d_asm,
+             d_interp, d_p25, d_p3b) = desc
+            bw_p.extend([p] * len(d_bw[0]))
+            bw_c.extend(d_bw[0])
+            bw_v.extend(d_bw[1])
+            de_p.extend([p] * len(d_de[0]))
+            de_c.extend(d_de[0])
+            de_v.extend(d_de[1])
+            ho_p.extend([p] * len(d_ho[0]))
+            ho_c.extend(d_ho[0])
+            ho_v.extend(d_ho[1])
+            lk_p.extend([p] * len(d_lk[0]))
+            lk_l.extend(range(len(d_lk[0])))
+            lk_bw.extend(d_lk[0])
+            lk_e.extend(d_lk[1])
+            in_p.extend([p] * len(d_inc[0]))
+            in_l.extend(d_inc[0])
+            in_c.extend(d_inc[1])
+            pkg_area_l[p] = d_area
+            bond_y_l[p] = d_bond
+            assembly_l[p] = d_asm
+            interp_l[p] = d_interp
+            p25_rate_l[p] = d_p25
+            p3_bonded_l[p] = d_p3b
+
+        eff_bw = np.zeros((P, C))
+        eff_bw[bw_p, bw_c] = bw_v
+        eff_bw[is2d, 0] = self.m_bw[v[is2d, COL_MEM]]
+        dram_e = np.zeros((P, C))
+        dram_e[de_p, de_c] = de_v
+        hops = np.zeros((P, C), dtype=np.int64)
+        hops[ho_p, ho_c] = ho_v
+        link_bw = np.full((P, MAX_LINKS), np.inf)
+        link_bw[lk_p, lk_l] = lk_bw
+        link_e = np.zeros((P, MAX_LINKS))
+        link_e[lk_p, lk_l] = lk_e
+        inc = np.zeros((P, MAX_LINKS, C))
+        inc[in_p, in_l, in_c] = 1.0
+        assembly = np.asarray(assembly_l)
+        assembly[is2d] = acost
+        return dict(eff_bw=eff_bw, dram_e=dram_e, hops=hops, link_bw=link_bw,
+                    link_e=link_e, inc=inc, pkg_area=np.asarray(pkg_area_l),
+                    bond_y=np.asarray(bond_y_l), assembly=assembly,
+                    interp=np.asarray(interp_l),
+                    p25_rate=np.asarray(p25_rate_l),
+                    p3_bonded=np.asarray(p3_bonded_l), is2d=is2d)
+
+    # -- stage 3: jax.numpy arithmetic over the population ------------------
+
+    def __call__(self, encoded: np.ndarray) -> MetricsBatch:
+        sp, db, wl = self.space, self.db, self.wl
+        v = np.atleast_2d(np.asarray(encoded)).astype(np.int64)
+        # pad the population to a power-of-two bucket: every row is
+        # computed independently, and stable shapes keep jax's op cache
+        # warm across differently sized calls
+        n_real = v.shape[0]
+        bucket = max(64, 1 << (n_real - 1).bit_length())
+        if bucket != n_real:
+            v = np.vstack(
+                [v, np.zeros((bucket - n_real, v.shape[1]), dtype=v.dtype)])
+        P, C = v.shape[0], sp.max_chiplets
+
+        n = v[:, COL_N]
+        nmask = np.arange(C)[None, :] < n[:, None]
+        chip = v[:, 9:9 + 3 * C].reshape(P, C, 3)
+        a_idx = np.where(nmask, chip[:, :, 0], 0)
+        t_idx = np.where(nmask, chip[:, :, 1], 0)
+        s_idx = np.where(nmask, chip[:, :, 2], 0)
+
+        areas = np.where(nmask, self.t_area[a_idx, t_idx, s_idx], 0.0)
+        dest = np.where(nmask, areas, -1.0).argmax(axis=1)
+
+        # Algorithm 1 + prefix-sum gathers of the cached simulations
+        powers = np.where(nmask, self.t_power[a_idx, t_idx], 0.0)
+        split = v[:, COL_SPLITK]
+        total = np.where(split == 1, self.tiles[1]["T"], self.tiles[0]["T"])
+        start, count = self._assign(powers, nmask, v[:, COL_ORDER], total)
+        end = start + count
+        sims = {f: np.zeros((P, C), dtype=np.int64) for f in _SIM_METRICS}
+        mn_bits = np.zeros((P, C), dtype=np.int64)
+        df = v[:, COL_DATAFLOW]
+        for sk in (0, 1):
+            rows = np.nonzero(split == sk)[0]
+            if not len(rows):
+                continue
+            tab = self.tiles[sk]
+            ai, si = a_idx[rows], s_idx[rows]
+            di = np.broadcast_to(df[rows, None], ai.shape)
+            st_r, en_r = start[rows], end[rows]
+            for f in _SIM_METRICS:
+                pref = tab["pref"][f]
+                sims[f][rows] = (pref[ai, si, di, en_r]
+                                 - pref[ai, si, di, st_r])
+            mn_bits[rows] = tab["mn_pref"][en_r] - tab["mn_pref"][st_r]
+
+        topo = self._topology(v, areas)
+
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            f8 = lambda x: jnp.asarray(x, dtype=jnp.float64)
+            mask = jnp.asarray(nmask)
+            cyc, rd, wr = f8(sims["cycles"]), f8(sims["rd"]), f8(sims["wr"])
+            sram_b, macs = f8(sims["sram"]), f8(sims["macs"])
+            freq = jnp.where(mask, jnp.take(f8(self.t_freq), t_idx), 1.0)
+            eff_bw = f8(topo["eff_bw"])
+            den_bw = jnp.where(eff_bw > 0, eff_bw, 1.0)
+
+            # Eq. 5 term 1: max_i (L_compute,i + L_DRAM_RD,i)
+            l_comp = cyc / (freq * 1e9)
+            l_rd = jnp.where(rd > 0, rd / den_bw, 0.0)
+            l_cr = jnp.max(l_comp + l_rd, axis=1)
+
+            # Eq. 5 term 2: reduction-phase D2D over shared links (Fig. 4)
+            sbits = jnp.where(
+                jnp.arange(C)[None, :] == jnp.asarray(dest)[:, None],
+                0.0, f8(mn_bits))
+            loads = jnp.einsum("plc,pc->pl", f8(topo["inc"]), sbits)
+            l_link = jnp.max(loads / f8(topo["link_bw"]), axis=1)
+            max_hops = jnp.max(
+                jnp.where(sbits > 0, f8(topo["hops"]), 0.0), axis=1)
+            l_d2d = l_link + max_hops * HOP_LATENCY_S
+
+            # Eq. 5 term 3: DRAM write-back (split-K dependent)
+            eff_dest = jnp.take_along_axis(
+                eff_bw, jnp.asarray(dest)[:, None], axis=1)[:, 0]
+            wr_split = float(wl.M * wl.N * OPERAND_BYTES * 8) / eff_dest
+            wr_direct = jnp.max(jnp.where(wr > 0, wr / den_bw, 0.0), axis=1)
+            l_wr = jnp.where(jnp.asarray(split) == 1, wr_split, wr_direct)
+            latency = l_cr + l_d2d + l_wr
+
+            # energy (Eqs. 12-14)
+            mem_idx = jnp.asarray(v[:, COL_MEM])
+            m_rd = jnp.take(f8(self.m_rd), mem_idx)[:, None]
+            m_wr = jnp.take(f8(self.m_wr), mem_idx)[:, None]
+            sram_e = jnp.take(f8(self.t_sram_e), t_idx)
+            mac_e = jnp.take(f8(self.t_mac_e), t_idx)
+            e_comp_pj = jnp.sum(rd * m_rd + wr * m_wr + sram_b * sram_e
+                                + macs * mac_e, axis=1)
+            e_mem_d2d_pj = jnp.sum((rd + wr) * f8(topo["dram_e"]), axis=1)
+            e_link_pj = jnp.sum(loads * f8(topo["link_e"]), axis=1)
+            e_compute_j = e_comp_pj * 1e-12
+            e_d2d_j = (e_link_pj + e_mem_d2d_pj) * 1e-12
+            static_w = jnp.where(
+                mask, f8(self.t_static[a_idx, t_idx, s_idx]), 0.0)
+            e_static_j = jnp.sum(static_w, axis=1) * latency
+            energy = e_compute_j + e_d2d_j + e_static_j
+
+            # area, dollar cost (Eqs. 15-16)
+            area = f8(topo["pkg_area"])
+            chip_cost = jnp.sum(
+                jnp.where(mask, f8(self.t_cost[a_idx, t_idx, s_idx]), 0.0),
+                axis=1)
+            icost = jnp.where(jnp.asarray(topo["interp"]),
+                              _interposer_cost_jnp(area, db), 0.0)
+            package = db.substrate_cost_mm2 * area + f8(topo["assembly"])
+            bond_y = f8(topo["bond_y"])
+            dollar = ((chip_cost + icost + package) / bond_y
+                      + jnp.take(f8(self.m_cost), mem_idx))
+
+            # embodied + operational CFP (Eqs. 2-3)
+            mfg = jnp.sum(
+                jnp.where(mask, f8(self.t_mfg[a_idx, t_idx, s_idx]), 0.0),
+                axis=1)
+            des = jnp.sum(jnp.where(mask, jnp.take(f8(self.t_des), t_idx),
+                                    0.0), axis=1)
+            icfp = jnp.where(
+                jnp.asarray(topo["interp"]),
+                area * db.interposer_cpa / _nb_yield_jnp(
+                    area, db.interposer_defect, db.yield_alpha), 0.0)
+            pkg_cfp_multi = (db.substrate_cfp_mm2 * area
+                             + f8(topo["p25_rate"]) * area + icfp
+                             + f8(topo["p3_bonded"])) / bond_y
+            pkg_cfp = jnp.where(jnp.asarray(topo["is2d"]),
+                                db.substrate_cfp_mm2 * area, pkg_cfp_multi)
+            emb = mfg + des + pkg_cfp
+            active_s = db.lifetime_years * SECONDS_PER_YEAR * db.use_fraction
+            runs = db.duty_runs_per_s * active_s
+            ope = energy * runs / 3.6e6 * db.carbon_intensity
+
+            out = [latency, energy, area, dollar, emb, ope, l_cr, l_d2d,
+                   l_wr, e_compute_j, e_d2d_j, jnp.sum(loads, axis=1),
+                   jnp.sum(macs, axis=1)]
+            out = [np.asarray(x)[:n_real] for x in out]
+        return MetricsBatch(*out)
+
+
+def _interposer_cost_jnp(area, db: TechDB):
+    """Vectorized ``cost.interposer_cost`` (65nm die of the package area)."""
+    import jax.numpy as jnp
+    r = db.wafer_diameter_mm / 2.0
+    dpw = (math.pi * r * r / area
+           - math.pi * db.wafer_diameter_mm / jnp.sqrt(2.0 * area))
+    dpw = jnp.maximum(1.0, jnp.trunc(dpw))
+    y = _nb_yield_jnp(area, db.interposer_defect, db.yield_alpha)
+    return db.interposer_wafer_cost / dpw / y
+
+
+def _nb_yield_jnp(area, d0: float, alpha: float):
+    """Negative-binomial yield, vectorized."""
+    return (1.0 + area * d0 / alpha) ** (-alpha)
+
+
+# ---------------------------------------------------------------------------
+# module-level evaluator cache + functional entry points
+# ---------------------------------------------------------------------------
+
+# key -> (db, evaluator). The TechDB is kept as a strong reference so
+# its id() cannot be recycled by a new allocation while the entry lives;
+# the cache is small and FIFO-bounded (table rebuilds are cheap).
+_EVALUATORS: Dict[tuple, Tuple[TechDB, BatchEvaluator]] = {}
+_EVALUATOR_CACHE_MAX = 16
+
+
+def get_evaluator(wl: GEMMWorkload, db: TechDB = DEFAULT_DB,
+                  tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
+                  space: Optional[DesignSpace] = None) -> BatchEvaluator:
+    # key on the *resolved* chiplet bound so space=None and an equivalent
+    # default DesignSpace share one evaluator (tables + jax warmup)
+    key = (wl, id(db), tile_sizes,
+           space.max_chiplets if space is not None else DEFAULT_MAX_CHIPLETS)
+    hit = _EVALUATORS.get(key)
+    if hit is not None and hit[0] is db:
+        return hit[1]
+    ev = BatchEvaluator(wl, db, tile_sizes, space)
+    while len(_EVALUATORS) >= _EVALUATOR_CACHE_MAX:
+        _EVALUATORS.pop(next(iter(_EVALUATORS)))
+    _EVALUATORS[key] = (db, ev)
+    return ev
+
+
+def evaluate_batch(encoded: np.ndarray, wl: GEMMWorkload,
+                   db: TechDB = DEFAULT_DB,
+                   tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
+                   space: Optional[DesignSpace] = None) -> MetricsBatch:
+    """Batched counterpart of :func:`repro.core.evaluate.evaluate`.
+
+    ``encoded`` is an ``[P, width]`` int array from
+    :class:`DesignSpace` (``encode``/``encode_many``/``sample``). Rows
+    must encode *valid* systems (check with ``space.validity_mask``).
+    """
+    return get_evaluator(wl, db, tile_sizes, space)(encoded)
+
+
+def fit_normalizer_batched(wl: GEMMWorkload, db: TechDB = DEFAULT_DB,
+                           samples: int = 10_000, seed: int = 1234,
+                           space: Optional[DesignSpace] = None,
+                           max_chiplets: int = 6) -> Normalizer:
+    """Batched rebuild of :func:`repro.core.sa.fit_normalizer`: sample a
+    random valid population in one shot, evaluate it as arrays, fit the
+    min/median normalizer (true median, see ``Normalizer.fit_arrays``)."""
+    space = space or DesignSpace(db, max_chiplets)
+    mb = evaluate_batch(space.sample(samples, key=seed), wl, db, space=space)
+    return Normalizer.fit_arrays(mb.fields())

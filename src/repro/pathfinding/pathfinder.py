@@ -1,0 +1,139 @@
+"""The Pathfinder facade — single public entry point for exploration.
+
+Bundles workload + template + TechDB + objective backend + normalizer and
+drives any :class:`SearchStrategy`::
+
+    from repro.pathfinding import Pathfinder, SimulatedAnnealing
+
+    pf = Pathfinder(workload(1), TEMPLATES["T1"])
+    result = pf.search(strategy=SimulatedAnnealing(SAConfig()))
+
+Objective backends replace the seed API's ``evaluate_fn`` swap by name:
+``"carbonpath"`` (full Eqs. 2-17 models, batched evaluation) and
+``"chipletgym"`` (the Sec VI-B baseline assumptions, scalar fallback). A
+callable with the ``evaluate(sys, wl, db, cache=...)`` signature is also
+accepted for custom models.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Union
+
+import numpy as np
+
+from repro.core.chipletgym import evaluate_chipletgym
+from repro.core.evaluate import Metrics, evaluate
+from repro.core.scalesim import SimCache
+from repro.core.system import HISystem
+from repro.core.techdb import DEFAULT_DB, TechDB
+from repro.core.templates import (
+    IDENTITY_NORMALIZER,
+    TEMPLATES,
+    Normalizer,
+    Template,
+)
+from repro.core.workload import GEMMWorkload
+from repro.pathfinding.batch import (
+    MetricsBatch,
+    evaluate_batch,
+    fit_normalizer_batched,
+)
+from repro.pathfinding.space import DesignSpace
+from repro.pathfinding.strategies import (
+    Objective,
+    SearchResult,
+    SearchStrategy,
+    SimulatedAnnealing,
+)
+
+OBJECTIVES = {
+    "carbonpath": evaluate,
+    "chipletgym": evaluate_chipletgym,
+}
+
+
+class Pathfinder:
+    """Carbon-aware design-space exploration over one workload."""
+
+    def __init__(self, wl: GEMMWorkload,
+                 template: Union[Template, str] = "T1",
+                 db: TechDB = DEFAULT_DB,
+                 objective: Union[str, Callable] = "carbonpath",
+                 norm: Optional[Normalizer] = None,
+                 cache: Optional[SimCache] = None,
+                 max_chiplets: int = 6,
+                 space: Optional[DesignSpace] = None):
+        self.wl = wl
+        self.template = (TEMPLATES[template] if isinstance(template, str)
+                         else template)
+        self.db = db
+        self.space = space or DesignSpace(db, max_chiplets)
+        if callable(objective):
+            self.evaluate_fn = objective
+        else:
+            self.evaluate_fn = OBJECTIVES[objective]
+        self.batched = self.evaluate_fn is evaluate
+        self.cache = cache if cache is not None else SimCache()
+        self._norm = norm
+
+    # -- normalizer ---------------------------------------------------------
+
+    def fit_normalizer(self, samples: int = 2000, seed: int = 1234,
+                       method: Optional[str] = None) -> Normalizer:
+        """Fit the Eq. 17 min/median normalizer. ``method="batched"``
+        (default for the CarbonPATH backend) samples and evaluates the
+        population through the array evaluator; ``method="scalar"``
+        reproduces the seed ``sa.fit_normalizer`` loop exactly (same RNG,
+        same per-system evaluation), which the table benchmarks use for
+        bit-stable baselines."""
+        if method is None:
+            method = "batched" if self.batched else "scalar"
+        if method == "batched":
+            if not self.batched:
+                raise ValueError(
+                    "batched normalizer fitting requires the carbonpath "
+                    "objective backend")
+            self._norm = fit_normalizer_batched(
+                self.wl, self.db, samples, seed, space=self.space)
+        elif method == "scalar":
+            from repro.core.sa import fit_normalizer
+            self._norm = fit_normalizer(
+                self.wl, self.db, samples, seed, self.cache,
+                self.evaluate_fn, self.space.max_chiplets)
+        else:
+            raise ValueError(f"unknown normalizer method {method!r}")
+        return self._norm
+
+    @property
+    def norm(self) -> Normalizer:
+        if self._norm is None:
+            self.fit_normalizer()
+        return self._norm
+
+    # -- evaluation ---------------------------------------------------------
+
+    def evaluate(self, sys: HISystem) -> Metrics:
+        """Scalar single-system evaluation under this objective backend."""
+        return self.evaluate_fn(sys, self.wl, self.db, cache=self.cache)
+
+    def evaluate_batch(self, encoded: np.ndarray) -> MetricsBatch:
+        """Batched evaluation of an encoded population. Does not need (or
+        trigger fitting of) a normalizer — metrics are raw."""
+        if self.batched:
+            return evaluate_batch(encoded, self.wl, self.db,
+                                  space=self.space)
+        obj = Objective(self.wl, self.template,
+                        self._norm or IDENTITY_NORMALIZER, self.db,
+                        self.evaluate_fn, self.cache, self.batched)
+        return obj.evaluate_encoded(encoded, self.space)
+
+    def objective(self) -> Objective:
+        return Objective(self.wl, self.template, self.norm, self.db,
+                         self.evaluate_fn, self.cache, self.batched)
+
+    # -- search -------------------------------------------------------------
+
+    def search(self, strategy: Optional[SearchStrategy] = None,
+               budget: Optional[int] = None,
+               key: Optional[int] = None) -> SearchResult:
+        strategy = strategy or SimulatedAnnealing()
+        return strategy.search(self.space, self.objective(), budget, key)

@@ -1,0 +1,294 @@
+"""Encoded design space for CarbonPATH pathfinding (Pathfinder API v2).
+
+The discrete HI design space of Sec V-A — chiplet multiset x integration
+style x package interconnect/protocol x memory x mapping — is canonically
+enumerated from a :class:`TechDB` and represented as fixed-width ``int32``
+vectors so whole populations can be validated, sampled and evaluated as
+arrays (see :mod:`repro.pathfinding.batch`).
+
+Vector layout (one row per system, width ``9 + 3 * max_chiplets``)::
+
+    [0] n_chiplets      [1] style_idx     [2] memory_idx
+    [3] order           [4] dataflow_idx  [5] split_k
+    [6] pair25_idx      (index into valid_pairs_25d(), -1 if none)
+    [7] pair3_idx       (index into valid_pairs_3d(),  -1 if none)
+    [8] stack_mask      (bitmask of 3D-stacked chiplet indices, 0 if none)
+    [9 + 3i .. 11 + 3i] per-chiplet (array_idx, node_idx, sram_idx)
+                        for i < n_chiplets; -1 padding beyond.
+
+``encode``/``decode`` round-trip exactly for every valid system (the
+stack tuple is canonicalized to sorted order, which is what the SA move
+generator produces anyway).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Union
+
+import numpy as np
+
+from repro.core.chiplet import Chiplet
+from repro.core.system import HISystem, is_valid
+from repro.core.techdb import (
+    DATAFLOWS,
+    DEFAULT_DB,
+    INTEGRATION_STYLES,
+    PKG_PROTOCOLS_25D,
+    PKG_PROTOCOLS_3D,
+    TechDB,
+    valid_pairs_25d,
+    valid_pairs_3d,
+)
+from repro.core.workload import Mapping
+
+# column indices of the encoding
+COL_N, COL_STYLE, COL_MEM, COL_ORDER, COL_DATAFLOW, COL_SPLITK = range(6)
+COL_PAIR25, COL_PAIR3, COL_STACK = 6, 7, 8
+COL_CHIP = 9  # first per-chiplet column
+
+S_2D, S_25D, S_3D, S_HYBRID = range(4)  # indices into INTEGRATION_STYLES
+
+
+DEFAULT_MAX_CHIPLETS = 6  # paper Sec V-A chiplet-count bound
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignSpace:
+    """Canonical enumeration of the discrete HI space from a TechDB."""
+
+    db: TechDB = DEFAULT_DB
+    max_chiplets: int = DEFAULT_MAX_CHIPLETS
+
+    def __post_init__(self):
+        db = self.db
+        set_ = object.__setattr__
+        set_(self, "arrays", tuple(db.array_sizes))
+        set_(self, "nodes", tuple(db.tech_nodes))
+        set_(self, "memories", tuple(db.memories))
+        set_(self, "pairs_25d", valid_pairs_25d())
+        set_(self, "pairs_3d", valid_pairs_3d())
+        set_(self, "array_index", {a: i for i, a in enumerate(self.arrays)})
+        set_(self, "node_index", {t: i for i, t in enumerate(self.nodes)})
+        set_(self, "memory_index", {m: i for i, m in enumerate(self.memories)})
+        set_(self, "dataflow_index", {d: i for i, d in enumerate(DATAFLOWS)})
+        set_(self, "style_index",
+             {s: i for i, s in enumerate(INTEGRATION_STYLES)})
+        set_(self, "pair25_index",
+             {p: i for i, p in enumerate(self.pairs_25d)})
+        set_(self, "pair3_index", {p: i for i, p in enumerate(self.pairs_3d)})
+        set_(self, "sram_index",
+             {a: {s: i for i, s in enumerate(db.sram_sizes_kb[a])}
+              for a in self.arrays})
+        # sram option count per array (vector for validity checks)
+        set_(self, "n_sram",
+             np.array([len(db.sram_sizes_kb[a]) for a in self.arrays],
+                      dtype=np.int32))
+        # hierarchical package draw, mirroring sa.random_system: first a
+        # package uniform, then a protocol uniform within the package
+        set_(self, "pkg25_pairs",
+             tuple(tuple(self.pair25_index[(pkg, pr)] for pr in protos)
+                   for pkg, protos in PKG_PROTOCOLS_25D.items()))
+        set_(self, "pkg3_pairs",
+             tuple(tuple(self.pair3_index[(pkg, pr)] for pr in protos)
+                   for pkg, protos in PKG_PROTOCOLS_3D.items()))
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def width(self) -> int:
+        return COL_CHIP + 3 * self.max_chiplets
+
+    def chip_cols(self, i: int):
+        base = COL_CHIP + 3 * i
+        return base, base + 1, base + 2
+
+    def chiplet_choices(self) -> int:
+        """Distinct chiplets in the library (Table II: 80 by default)."""
+        return sum(len(self.db.sram_sizes_kb[a]) for a in self.arrays) * len(
+            self.nodes)
+
+    # -- encode / decode ----------------------------------------------------
+
+    def encode(self, sys: HISystem) -> np.ndarray:
+        vec = np.full(self.width, -1, dtype=np.int32)
+        n = sys.n_chiplets
+        if n > self.max_chiplets:
+            raise ValueError(
+                f"{n} chiplets exceeds space max_chiplets={self.max_chiplets}")
+        vec[COL_N] = n
+        vec[COL_STYLE] = self.style_index[sys.style]
+        vec[COL_MEM] = self.memory_index[sys.memory]
+        vec[COL_ORDER] = sys.mapping.order
+        vec[COL_DATAFLOW] = self.dataflow_index[sys.mapping.dataflow]
+        vec[COL_SPLITK] = sys.mapping.split_k
+        vec[COL_PAIR25] = (self.pair25_index[(sys.pkg_25d, sys.proto_25d)]
+                           if sys.pkg_25d else -1)
+        vec[COL_PAIR3] = (self.pair3_index[(sys.pkg_3d, sys.proto_3d)]
+                          if sys.pkg_3d else -1)
+        stack = sys.stack if sys.style == "2.5D+3D" else ()
+        vec[COL_STACK] = sum(1 << i for i in stack)
+        for i, c in enumerate(sys.chiplets):
+            ca, ct, cs = self.chip_cols(i)
+            vec[ca] = self.array_index[c.array]
+            vec[ct] = self.node_index[c.node]
+            vec[cs] = self.sram_index[c.array][c.sram_kb]
+        return vec
+
+    def encode_many(self, systems: Sequence[HISystem]) -> np.ndarray:
+        out = np.empty((len(systems), self.width), dtype=np.int32)
+        for i, s in enumerate(systems):
+            out[i] = self.encode(s)
+        return out
+
+    def decode(self, vec: np.ndarray) -> HISystem:
+        vec = np.asarray(vec)
+        n = int(vec[COL_N])
+        style = INTEGRATION_STYLES[int(vec[COL_STYLE])]
+        chips = []
+        for i in range(n):
+            ca, ct, cs = self.chip_cols(i)
+            array = self.arrays[int(vec[ca])]
+            chips.append(Chiplet(array, self.nodes[int(vec[ct])],
+                                 self.db.sram_sizes_kb[array][int(vec[cs])]))
+        pkg25 = proto25 = pkg3 = proto3 = None
+        if int(vec[COL_PAIR25]) >= 0:
+            pkg25, proto25 = self.pairs_25d[int(vec[COL_PAIR25])]
+        if int(vec[COL_PAIR3]) >= 0:
+            pkg3, proto3 = self.pairs_3d[int(vec[COL_PAIR3])]
+        mask = int(vec[COL_STACK])
+        stack = tuple(i for i in range(n) if (mask >> i) & 1)
+        return HISystem(
+            chiplets=tuple(chips),
+            style=style,
+            memory=self.memories[int(vec[COL_MEM])],
+            mapping=Mapping(int(vec[COL_ORDER]),
+                            DATAFLOWS[int(vec[COL_DATAFLOW])],
+                            int(vec[COL_SPLITK])),
+            pkg_25d=pkg25, proto_25d=proto25,
+            pkg_3d=pkg3, proto_3d=proto3,
+            stack=stack,
+        )
+
+    def decode_many(self, batch: np.ndarray) -> List[HISystem]:
+        return [self.decode(row) for row in np.asarray(batch)]
+
+    # -- vectorized validity (Sec V-A feasibility rules) --------------------
+
+    def validity_mask(self, batch: np.ndarray) -> np.ndarray:
+        """Boolean mask of rows that encode *valid* systems — the batched
+        rendering of :func:`repro.core.system.validate`."""
+        v = np.atleast_2d(np.asarray(batch, dtype=np.int64))
+        n, style = v[:, COL_N], v[:, COL_STYLE]
+        p25, p3, stack = v[:, COL_PAIR25], v[:, COL_PAIR3], v[:, COL_STACK]
+
+        ok = (n >= 1) & (n <= self.max_chiplets)
+        ok &= (style >= 0) & (style < len(INTEGRATION_STYLES))
+        ok &= (v[:, COL_MEM] >= 0) & (v[:, COL_MEM] < len(self.memories))
+        ok &= (v[:, COL_ORDER] >= 0) & (v[:, COL_ORDER] <= 1)
+        ok &= (v[:, COL_DATAFLOW] >= 0) & (v[:, COL_DATAFLOW] < len(DATAFLOWS))
+        ok &= (v[:, COL_SPLITK] >= 0) & (v[:, COL_SPLITK] <= 1)
+
+        for i in range(self.max_chiplets):
+            ca, ct, cs = self.chip_cols(i)
+            active = i < n
+            a, t, s = v[:, ca], v[:, ct], v[:, cs]
+            a_ok = (a >= 0) & (a < len(self.arrays))
+            chip_ok = (a_ok & (t >= 0) & (t < len(self.nodes)) & (s >= 0)
+                       & (s < self.n_sram[np.where(a_ok, a, 0)]))
+            ok &= np.where(active, chip_ok, True)
+
+        popcount = sum((stack >> i) & 1 for i in range(self.max_chiplets))
+        no3d, no25d, nostack = p3 == -1, p25 == -1, stack == 0
+        has25 = (p25 >= 0) & (p25 < len(self.pairs_25d))
+        has3 = (p3 >= 0) & (p3 < len(self.pairs_3d))
+        in_range = stack < (1 << np.minimum(n, 63))
+
+        ok &= np.where(style == S_2D, (n == 1) & no25d & no3d & nostack, True)
+        ok &= np.where(style == S_25D, (n >= 2) & has25 & no3d & nostack, True)
+        ok &= np.where(style == S_3D, (n >= 2) & has3 & no25d & nostack, True)
+        ok &= np.where(style == S_HYBRID,
+                       (n >= 3) & has25 & has3 & (popcount >= 2)
+                       & (popcount < n) & in_range & (stack >= 0), True)
+        return ok
+
+    # -- batched random sampling -------------------------------------------
+
+    def sample(self, count: int,
+               key: Union[int, np.random.Generator] = 0) -> np.ndarray:
+        """Draw ``count`` random *valid* encoded systems.
+
+        Mirrors :func:`repro.core.sa.random_system`'s hierarchical draw
+        (uniform chiplet count -> style for that count -> package uniform,
+        protocol uniform within the package) but vectorized: systems are
+        valid by construction, no rejection loop.
+        """
+        rng = (key if isinstance(key, np.random.Generator)
+               else np.random.default_rng(key))
+        C = self.max_chiplets
+        v = np.full((count, self.width), -1, dtype=np.int32)
+
+        n = rng.integers(1, C + 1, count)
+        # style per count: n=1 -> 2D; n=2 -> {2.5D, 3D}; n>=3 -> all three
+        style = np.where(
+            n == 1, S_2D,
+            np.where(n == 2, rng.integers(S_25D, S_3D + 1, count),
+                     rng.integers(S_25D, S_HYBRID + 1, count)))
+        v[:, COL_N] = n
+        v[:, COL_STYLE] = style
+        v[:, COL_MEM] = rng.integers(0, len(self.memories), count)
+        v[:, COL_ORDER] = rng.integers(0, 2, count)
+        v[:, COL_DATAFLOW] = rng.integers(0, len(DATAFLOWS), count)
+        v[:, COL_SPLITK] = rng.integers(0, 2, count)
+
+        v[:, COL_PAIR25] = np.where(
+            (style == S_25D) | (style == S_HYBRID),
+            self._draw_pairs(rng, self.pkg25_pairs, count), -1)
+        v[:, COL_PAIR3] = np.where(
+            (style == S_3D) | (style == S_HYBRID),
+            self._draw_pairs(rng, self.pkg3_pairs, count), -1)
+
+        # chiplets: uniform (array, node, sram-option) per active slot
+        a = rng.integers(0, len(self.arrays), (count, C))
+        t = rng.integers(0, len(self.nodes), (count, C))
+        s = (rng.random((count, C))
+             * self.n_sram[a]).astype(np.int32)  # uniform over options
+        active = np.arange(C)[None, :] < n[:, None]
+        for i in range(C):
+            ca, ct, cs = self.chip_cols(i)
+            v[:, ca] = np.where(active[:, i], a[:, i], -1)
+            v[:, ct] = np.where(active[:, i], t[:, i], -1)
+            v[:, cs] = np.where(active[:, i], s[:, i], -1)
+
+        # hybrid stacks: size uniform in [2, n-1], members uniform
+        hyb = style == S_HYBRID
+        size = np.where(n > 2, 2 + (rng.random(count)
+                                    * np.maximum(n - 2, 1)).astype(np.int64),
+                        2)
+        scores = rng.random((count, C))
+        scores[~active] = np.inf
+        picked_order = np.argsort(scores, axis=1)
+        ranks = np.empty_like(picked_order)
+        np.put_along_axis(ranks, picked_order,
+                          np.arange(C)[None, :].repeat(count, 0), axis=1)
+        member = (ranks < size[:, None]).astype(np.int64)
+        mask = (member << np.arange(C)[None, :]).sum(axis=1)
+        v[:, COL_STACK] = np.where(hyb, mask, 0)
+        return v
+
+    @staticmethod
+    def _draw_pairs(rng, pkg_pairs, count: int) -> np.ndarray:
+        pkg = rng.integers(0, len(pkg_pairs), count)
+        out = np.empty(count, dtype=np.int64)
+        for i, protos in enumerate(pkg_pairs):
+            sel = pkg == i
+            out[sel] = np.asarray(protos)[
+                rng.integers(0, len(protos), int(sel.sum()))]
+        return out
+
+    def sample_systems(self, count: int,
+                       key: Union[int, np.random.Generator] = 0
+                       ) -> List[HISystem]:
+        return self.decode_many(self.sample(count, key))
+
+    def is_valid_scalar(self, sys: HISystem) -> bool:
+        return is_valid(sys, self.db, self.max_chiplets)

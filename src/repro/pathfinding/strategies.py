@@ -1,0 +1,335 @@
+"""Pluggable search strategies over the encoded HI design space.
+
+Every strategy implements the :class:`SearchStrategy` protocol::
+
+    search(space, objective, budget, key) -> SearchResult
+
+where ``space`` is a :class:`~repro.pathfinding.space.DesignSpace`,
+``objective`` bundles the workload / cost template / normalizer and the
+evaluation backend (CarbonPATH or ChipletGym models), ``budget`` caps the
+number of evaluations (None = strategy default schedule) and ``key``
+seeds the strategy's RNG.
+
+Strategies:
+
+* :class:`SimulatedAnnealing` — the paper's hierarchical-move annealer
+  (Sec V), moved verbatim from the seed ``repro.core.sa.anneal`` so
+  results are bit-identical for equal seeds/config.
+* :class:`ParallelTempering` — N concurrent chains on a geometric
+  temperature ladder, evaluated per sweep through the *batched* evaluator
+  with periodic replica-exchange swaps.
+* :class:`RandomSearch` — batched uniform sampling of valid systems.
+* :class:`GridSweep` — deterministic sweep of package x protocol x
+  memory x mapping for a fixed chiplet multiset (the Sec V-A 43-combo
+  enumeration the figure benchmarks use).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.chiplet import Chiplet, different_chiplet_system
+from repro.core.evaluate import Metrics, evaluate
+from repro.core.scalesim import SimCache
+from repro.core.system import HISystem
+from repro.core.techdb import DEFAULT_DB, TechDB, valid_pairs_25d, valid_pairs_3d
+from repro.core.templates import (
+    METRIC_FIELDS,
+    Normalizer,
+    Template,
+    sa_cost,
+)
+from repro.core.workload import ALL_MAPPINGS, GEMMWorkload
+from repro.pathfinding.batch import MetricsBatch, evaluate_batch
+from repro.pathfinding.space import DesignSpace
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """What every strategy returns (superset of the seed ``SAResult``)."""
+
+    best: HISystem
+    best_metrics: Metrics
+    best_cost: float
+    history: List[float]
+    evaluations: int
+    cache: Optional[SimCache] = None
+
+
+@dataclasses.dataclass
+class Objective:
+    """Workload + Eq. 17 cost + evaluation backend, scalar and batched."""
+
+    wl: GEMMWorkload
+    template: Template
+    norm: Normalizer
+    db: TechDB = DEFAULT_DB
+    evaluate_fn: object = evaluate          # scalar backend
+    cache: SimCache = dataclasses.field(default_factory=SimCache)
+    # None -> derived: only the CarbonPATH scalar reference has a
+    # parity-guaranteed batched twin; every other backend falls back
+    batched: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.batched is None:
+            self.batched = self.evaluate_fn is evaluate
+
+    def evaluate(self, sys: HISystem) -> Metrics:
+        return self.evaluate_fn(sys, self.wl, self.db, cache=self.cache)
+
+    def cost(self, m: Metrics) -> float:
+        return sa_cost(m, self.template, self.norm)
+
+    def evaluate_encoded(self, encoded: np.ndarray,
+                         space: DesignSpace) -> MetricsBatch:
+        if self.batched:
+            return evaluate_batch(encoded, self.wl, self.db, space=space)
+        # non-vectorized backends (e.g. ChipletGym) fall back to the
+        # scalar model per row but keep the struct-of-arrays interface
+        ms = [self.evaluate(s) for s in space.decode_many(encoded)]
+        return MetricsBatch(**{
+            f.name: np.array([getattr(m, f.name) for m in ms])
+            for f in dataclasses.fields(MetricsBatch)})
+
+    def cost_batch(self, mb: MetricsBatch) -> np.ndarray:
+        mins, medians = self.norm.weights_arrays()
+        w = np.asarray(self.template.weights)
+        x = np.stack([mb.fields()[f] for f in METRIC_FIELDS], axis=1)
+        return ((x - mins) / medians * w).sum(axis=1)
+
+
+class SearchStrategy(Protocol):
+    def search(self, space: DesignSpace, objective: Objective,
+               budget: Optional[int] = None,
+               key: Optional[int] = None) -> SearchResult:
+        ...
+
+
+def _check_budget(budget: Optional[int]) -> None:
+    if budget is not None and budget < 1:
+        raise ValueError(f"budget must be >= 1 or None, got {budget}")
+
+
+# ---------------------------------------------------------------------------
+# Simulated annealing (Sec V) — the seed annealer behind the v2 protocol
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimulatedAnnealing:
+    """The paper's SA engine. For a given config/seed this reproduces the
+    seed ``anneal(...)`` trajectory exactly (same RNG stream, same moves,
+    same scalar evaluations through the shared SimCache)."""
+
+    config: "SAConfig" = None  # type: ignore[assignment]
+    initial: Optional[HISystem] = None
+
+    def search(self, space: DesignSpace, objective: Objective,
+               budget: Optional[int] = None,
+               key: Optional[int] = None) -> SearchResult:
+        from repro.core.sa import SAConfig, propose, random_system
+
+        _check_budget(budget)
+        cfg = self.config or SAConfig(max_chiplets=space.max_chiplets)
+        db = objective.db
+        rng = random.Random(cfg.seed if key is None else key)
+
+        cur = self.initial or random_system(rng, db, cfg.max_chiplets)
+        cur_m = objective.evaluate(cur)
+        cur_c = objective.cost(cur_m)
+        best, best_m, best_c = cur, cur_m, cur_c
+        history = [cur_c]
+        evals = 1
+
+        t = cfg.t_initial
+        while t > cfg.t_final:
+            for _ in range(cfg.moves_per_temp):
+                if budget is not None and evals >= budget:
+                    break
+                cand = propose(cur, rng, db, cfg.max_chiplets)
+                if cand is cur:
+                    continue
+                m = objective.evaluate(cand)
+                c = objective.cost(m)
+                evals += 1
+                delta = c - cur_c
+                if delta <= 0 or rng.random() < math.exp(
+                        -delta / max(t, 1e-12)):
+                    cur, cur_m, cur_c = cand, m, c
+                    if c < best_c:
+                        best, best_m, best_c = cand, m, c
+            history.append(cur_c)
+            t *= cfg.cooling
+            if budget is not None and evals >= budget:
+                break
+        return SearchResult(best, best_m, best_c, history, evals,
+                            objective.cache)
+
+
+# ---------------------------------------------------------------------------
+# Parallel tempering: batched chains + replica exchange
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParallelTempering:
+    """N simultaneous SA chains on a geometric temperature ladder. Every
+    sweep proposes one hierarchical move per chain and evaluates all
+    candidates in a single ``evaluate_batch`` call; every ``swap_every``
+    sweeps adjacent-temperature replicas attempt a Metropolis exchange,
+    letting hot chains tunnel solutions down to cold ones."""
+
+    n_chains: int = 8
+    t_max: float = 4000.0
+    t_min: float = 1.0
+    sweeps: int = 500
+    swap_every: int = 5
+
+    def search(self, space: DesignSpace, objective: Objective,
+               budget: Optional[int] = None,
+               key: Optional[int] = None) -> SearchResult:
+        from repro.core.sa import propose, random_system
+
+        _check_budget(budget)
+        db = objective.db
+        rng = random.Random(0 if key is None else key)
+        # the initial population costs one evaluation per chain, so a
+        # tiny budget bounds the ladder width itself
+        n = self.n_chains if budget is None else min(self.n_chains, budget)
+        ratio = (self.t_min / self.t_max) ** (1.0 / max(1, n - 1))
+        temps = [self.t_max * ratio ** i for i in range(n)]
+
+        chains = [random_system(rng, db, space.max_chiplets)
+                  for _ in range(n)]
+        mb = objective.evaluate_encoded(space.encode_many(chains), space)
+        costs = objective.cost_batch(mb).tolist()
+        evals = n
+        bi = int(np.argmin(costs))
+        best, best_m, best_c = chains[bi], mb.row(bi), costs[bi]
+        history = [best_c]
+
+        for sweep in range(self.sweeps):
+            # honor the budget exactly: a final partial sweep evaluates
+            # only as many chains as evaluations remain
+            k = n if budget is None else min(n, budget - evals)
+            if k <= 0:
+                break
+            cands = [propose(chains[i], rng, db, space.max_chiplets)
+                     for i in range(k)]
+            mb = objective.evaluate_encoded(space.encode_many(cands), space)
+            ccosts = objective.cost_batch(mb).tolist()
+            evals += k
+            for i in range(k):
+                delta = ccosts[i] - costs[i]
+                if delta <= 0 or rng.random() < math.exp(
+                        -delta / max(temps[i], 1e-12)):
+                    chains[i], costs[i] = cands[i], ccosts[i]
+                    if ccosts[i] < best_c:
+                        best, best_m, best_c = cands[i], mb.row(i), ccosts[i]
+            if sweep % self.swap_every == 0:
+                _replica_exchange(temps, chains, costs, rng)
+            history.append(costs[-1])  # coldest chain
+        return SearchResult(best, best_m, best_c, history, evals,
+                            objective.cache)
+
+
+def _replica_exchange(temps: Sequence[float], chains: list, costs: list,
+                      rng: random.Random) -> None:
+    """Metropolis swap between adjacent replicas (detailed balance):
+    accept with min(1, exp[(beta_i - beta_j)(E_i - E_j)]). ``temps`` is
+    descending, so when the hotter chain i holds the lower cost the
+    exponent is positive and the swap is certain — better solutions
+    always flow toward the cold end."""
+    for i in range(len(temps) - 1):
+        d = ((1.0 / temps[i] - 1.0 / temps[i + 1])
+             * (costs[i] - costs[i + 1]))
+        if d >= 0 or rng.random() < math.exp(d):
+            chains[i], chains[i + 1] = chains[i + 1], chains[i]
+            costs[i], costs[i + 1] = costs[i + 1], costs[i]
+
+
+# ---------------------------------------------------------------------------
+# Random search + grid sweep (batched baselines)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RandomSearch:
+    """Uniform sampling of valid systems, evaluated in batches."""
+
+    batch_size: int = 512
+
+    def search(self, space: DesignSpace, objective: Objective,
+               budget: Optional[int] = None,
+               key: Optional[int] = None) -> SearchResult:
+        _check_budget(budget)
+        budget = budget if budget is not None else 2048
+        rng = np.random.default_rng(0 if key is None else key)
+        best = best_m = None
+        best_c = math.inf
+        history: List[float] = []
+        evals = 0
+        while evals < budget:
+            k = min(self.batch_size, budget - evals)
+            enc = space.sample(k, key=rng)
+            mb = objective.evaluate_encoded(enc, space)
+            costs = objective.cost_batch(mb)
+            evals += k
+            i = int(np.argmin(costs))
+            if costs[i] < best_c:
+                best, best_m, best_c = (space.decode(enc[i]), mb.row(i),
+                                        float(costs[i]))
+            history.append(best_c)
+        return SearchResult(best, best_m, best_c, history, evals,
+                            objective.cache)
+
+
+@dataclasses.dataclass
+class GridSweep:
+    """Deterministic sweep: every package-protocol combination (the
+    paper's 10 + 3 + 30 = 43, Sec V-A) x memory x mapping for a fixed
+    chiplet multiset. Hybrid combos stack the ``stack`` indices."""
+
+    chiplets: Optional[Tuple[Chiplet, ...]] = None
+    memories: Optional[Sequence[str]] = None
+    mappings: Sequence = ALL_MAPPINGS
+    stack: Tuple[int, ...] = (1, 2)
+
+    def systems(self, db: TechDB) -> List[HISystem]:
+        chips = tuple(self.chiplets or different_chiplet_system())
+        mems = list(self.memories or db.memories)
+        out = []
+        for mem in mems:
+            for mapping in self.mappings:
+                for pkg, proto in valid_pairs_25d():
+                    out.append(HISystem(chips, "2.5D", mem, mapping,
+                                        pkg_25d=pkg, proto_25d=proto))
+                for pkg, proto in valid_pairs_3d():
+                    out.append(HISystem(chips, "3D", mem, mapping,
+                                        pkg_3d=pkg, proto_3d=proto))
+                for p25, pr25 in valid_pairs_25d():
+                    for p3, pr3 in valid_pairs_3d():
+                        out.append(HISystem(
+                            chips, "2.5D+3D", mem, mapping, pkg_25d=p25,
+                            proto_25d=pr25, pkg_3d=p3, proto_3d=pr3,
+                            stack=self.stack))
+        return out
+
+    def search(self, space: DesignSpace, objective: Objective,
+               budget: Optional[int] = None,
+               key: Optional[int] = None) -> SearchResult:
+        _check_budget(budget)
+        systems = self.systems(objective.db)
+        if budget is not None:
+            systems = systems[:budget]
+        enc = space.encode_many(systems)
+        mb = objective.evaluate_encoded(enc, space)
+        costs = objective.cost_batch(mb)
+        i = int(np.argmin(costs))
+        running = np.minimum.accumulate(costs)
+        return SearchResult(systems[i], mb.row(i), float(costs[i]),
+                            running.tolist(), len(systems), objective.cache)

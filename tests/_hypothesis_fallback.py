@@ -1,0 +1,152 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The tier-1 suite property-tests several models with hypothesis. On
+machines without the package (it is listed in ``requirements-dev.txt``
+but absent from minimal images) the suite must still collect and run, so
+``conftest.py`` registers this module under ``sys.modules["hypothesis"]``
+as a drop-in for the subset of the API the tests use: ``given``,
+``settings``, ``assume`` and the ``integers`` / ``floats`` / ``lists`` /
+``sampled_from`` strategies.
+
+Instead of adaptive random search the fallback draws a fixed, seeded set
+of examples per test — boundary combinations first (min/max and every
+``sampled_from`` element, crossed over all strategies up to the example
+cap) then pseudo-random draws. The example count is capped at
+``MAX_FALLBACK_EXAMPLES`` regardless of ``settings(max_examples=...)``;
+install hypothesis for the full adaptive search.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import random
+
+MAX_FALLBACK_EXAMPLES = 12
+
+
+class _Unsatisfied(Exception):
+    """Raised by ``assume(False)`` to skip one drawn example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Strategy:
+    """Base strategy: subclasses yield deterministic then random draws."""
+
+    def boundary(self):
+        """Fixed boundary examples, tried before random draws."""
+        return []
+
+    def draw(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def boundary(self):
+        return [self.lo, self.hi] if self.lo != self.hi else [self.lo]
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def boundary(self):
+        return [self.lo, self.hi]
+
+    def draw(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def boundary(self):
+        return list(self.elements)
+
+    def draw(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements: _Strategy, min_size: int = 0,
+                 max_size: int = 10):
+        self.elements = elements
+        self.min_size, self.max_size = min_size, max_size
+
+    def boundary(self):
+        out = []
+        rng = random.Random(0)
+        for size in {self.min_size, self.max_size}:
+            out.append([self.elements.draw(rng) for _ in range(size)])
+        return out
+
+    def draw(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        return [self.elements.draw(rng) for _ in range(size)]
+
+
+class strategies:  # noqa: N801 - mirrors the hypothesis module name
+    integers = _Integers
+    floats = _Floats
+    lists = _Lists
+    sampled_from = _SampledFrom
+
+
+def settings(**_kwargs):
+    """Accepted for compatibility; the fallback caps its own example count."""
+
+    def decorate(fn):
+        return fn
+
+    return decorate
+
+
+def given(*strats: _Strategy):
+    """Run the test over boundary examples plus seeded random draws."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            rng = random.Random(fn.__name__)
+            # boundary combinations across every strategy — sampled from
+            # the cross product so no axis is pinned — then seeded random
+            # draws fill the remainder
+            pools = [s.boundary() or [s.draw(rng)] for s in strats]
+            product = list(itertools.islice(itertools.product(*pools), 512))
+            if len(product) > MAX_FALLBACK_EXAMPLES:
+                examples = rng.sample(product, MAX_FALLBACK_EXAMPLES)
+            else:
+                examples = product
+            while len(examples) < MAX_FALLBACK_EXAMPLES:
+                examples.append(tuple(s.draw(rng) for s in strats))
+            ran = 0
+            for ex in examples[:MAX_FALLBACK_EXAMPLES]:
+                try:
+                    fn(*ex)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+            if not ran:
+                # mirror hypothesis' excessive-rejection error: a property
+                # test whose body never executed must not look green
+                raise RuntimeError(
+                    f"{fn.__name__}: assume() rejected every fallback "
+                    "example; the property was never exercised")
+
+        # pytest inspects ``__wrapped__`` to discover fixture parameters;
+        # the strategy-drawn arguments must not look like fixtures.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate

@@ -93,12 +93,12 @@ SUBPROCESS_PROG = textwrap.dedent("""
     from repro.configs.shapes import ShapeCell
     from repro.data import DataConfig, SyntheticTokenPipeline
     from repro.launch.steps import build_train_step, build_serve_step
-    from repro.launch.mesh import _auto
+    from repro.launch.mesh import _mesh_kwargs
     from repro.models.common import DTypePolicy
     from repro.models.transformer import init_model, init_cache
     from repro.optim import adamw
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=_auto(2))
+    mesh = jax.make_mesh((2, 4), ("data", "model"), **_mesh_kwargs(2))
     cfg = get_config("%ARCH%").reduced()
     policy = DTypePolicy()  # fp32 for determinism
     shape = ShapeCell("tiny_train", "train", 64, 4)

@@ -1,0 +1,261 @@
+"""Pathfinder API v2 tests: encoding round-trip, batch-vs-scalar parity,
+normalizer median fix, strategies and the deprecation shims."""
+import random
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SAConfig,
+    SimCache,
+    TEMPLATES,
+    anneal,
+    evaluate,
+    workload,
+)
+from repro.core.evaluate import Metrics
+from repro.core.sa import fit_normalizer, random_system
+from repro.core.system import is_valid
+from repro.core.templates import METRIC_FIELDS, Normalizer
+from repro.core.workload import ALL_MAPPINGS
+from repro.pathfinding import (
+    DesignSpace,
+    GridSweep,
+    ParallelTempering,
+    Pathfinder,
+    RandomSearch,
+    SimulatedAnnealing,
+    evaluate_batch,
+    fit_normalizer_batched,
+)
+
+SPACE = DesignSpace()
+PARITY_FIELDS = METRIC_FIELDS + (
+    "l_compute_rd_s", "l_d2d_s", "l_dram_wr_s", "e_compute_j", "e_d2d_j",
+    "d2d_bits", "macs")
+
+
+# ---------------------------------------------------------------------------
+# DesignSpace: encode/decode round-trip, validity, sampling
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=60, deadline=None)
+def test_encode_decode_roundtrip(seed):
+    """Property: decode(encode(sys)) == sys over random valid systems."""
+    rng = random.Random(seed)
+    sys = random_system(rng)
+    vec = SPACE.encode(sys)
+    assert SPACE.decode(vec) == sys
+    assert SPACE.validity_mask(vec[None, :])[0]
+
+
+def test_sampled_batches_valid():
+    batch = SPACE.sample(512, key=11)
+    assert SPACE.validity_mask(batch).all()
+    for sys in SPACE.decode_many(batch[:64]):
+        assert is_valid(sys)
+
+
+def test_validity_mask_rejects_corruption():
+    batch = SPACE.sample(64, key=3)
+    bad = batch.copy()
+    bad[:, 1] = 3          # claim hybrid without stack/pair fields
+    bad[:, 8] = 0
+    assert not SPACE.validity_mask(bad).any()
+
+
+def test_sampling_covers_all_styles():
+    batch = SPACE.sample(1000, key=5)
+    assert set(np.unique(batch[:, 1]).tolist()) == {0, 1, 2, 3}
+
+
+# ---------------------------------------------------------------------------
+# evaluate_batch parity (the v2 guarantee)
+# ---------------------------------------------------------------------------
+
+
+def test_batch_scalar_parity_100():
+    """>= 100 random systems: every metric field within 1e-6 relative of
+    the scalar evaluator (in practice the match is ~1e-16)."""
+    wl = workload(1)
+    rng = random.Random(42)
+    systems = [random_system(rng) for _ in range(120)]
+    mb = evaluate_batch(SPACE.encode_many(systems), wl, space=SPACE)
+    for i, sys in enumerate(systems):
+        m = evaluate(sys, wl)
+        for f in PARITY_FIELDS:
+            ref = getattr(m, f)
+            got = float(getattr(mb, f)[i])
+            assert got == pytest.approx(ref, rel=1e-6, abs=1e-300), (
+                f"{sys.describe()} field {f}: scalar {ref} batch {got}")
+
+
+def test_batch_parity_other_workloads():
+    rng = random.Random(9)
+    systems = [random_system(rng) for _ in range(40)]
+    enc = SPACE.encode_many(systems)
+    for w in (2, 6):
+        wl = workload(w)
+        mb = evaluate_batch(enc, wl, space=SPACE)
+        for i, sys in enumerate(systems):
+            m = evaluate(sys, wl)
+            for f in METRIC_FIELDS:
+                assert float(getattr(mb, f)[i]) == pytest.approx(
+                    getattr(m, f), rel=1e-6)
+
+
+def test_metrics_batch_row_matches_scalar_type():
+    wl = workload(1)
+    sys = random_system(random.Random(0))
+    mb = evaluate_batch(SPACE.encode(sys)[None, :], wl, space=SPACE)
+    row = mb.row(0)
+    assert isinstance(row, Metrics)
+    assert row.total_cfp == pytest.approx(
+        evaluate(sys, wl).total_cfp, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Normalizer: true median (regression for the len//2 bug) + batched fit
+# ---------------------------------------------------------------------------
+
+
+def _metrics_with(vals, field="latency_s"):
+    base = dict(latency_s=1.0, energy_j=1.0, area_mm2=1.0, dollar=1.0,
+                emb_cfp_kg=1.0, ope_cfp_kg=1.0, l_compute_rd_s=0.0,
+                l_d2d_s=0.0, l_dram_wr_s=0.0, e_compute_j=0.0, e_d2d_j=0.0,
+                d2d_bits=0, macs=0)
+    out = []
+    for v in vals:
+        d = dict(base)
+        d[field] = v
+        out.append(Metrics(**d))
+    return out
+
+
+def test_normalizer_true_median_even_population():
+    """Regression: vals[len//2] returned the upper-middle element; the
+    median of an even-length population is the midpoint average."""
+    pop = _metrics_with([1.0, 2.0, 10.0, 20.0])
+    norm = Normalizer.fit(pop)
+    assert norm.medians["latency_s"] == pytest.approx(6.0)   # (2 + 10) / 2
+    assert norm.mins["latency_s"] == 1.0
+    odd = Normalizer.fit(_metrics_with([1.0, 3.0, 100.0]))
+    assert odd.medians["latency_s"] == 3.0
+
+
+def test_normalizer_fit_arrays_matches_fit():
+    wl = workload(6)
+    rng = random.Random(1)
+    pop = [evaluate(random_system(rng), wl) for _ in range(101)]
+    a = Normalizer.fit(pop)
+    b = Normalizer.fit_arrays(
+        {f: np.array([getattr(m, f) for m in pop]) for f in METRIC_FIELDS})
+    for f in METRIC_FIELDS:
+        assert a.mins[f] == pytest.approx(b.mins[f])
+        assert a.medians[f] == pytest.approx(b.medians[f])
+
+
+def test_fit_normalizer_batched_reasonable():
+    norm = fit_normalizer_batched(workload(1), samples=400, seed=7)
+    for f in METRIC_FIELDS:
+        assert norm.medians[f] > 0
+        assert norm.mins[f] >= 0
+
+
+# ---------------------------------------------------------------------------
+# Strategies + facade + shims
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def pathfinder():
+    wl = workload(6)
+    cache = SimCache()
+    pf = Pathfinder(wl, TEMPLATES["T1"], cache=cache)
+    pf.fit_normalizer(samples=300, seed=1, method="scalar")
+    return pf
+
+
+def test_anneal_shim_matches_v2(pathfinder):
+    """The deprecated anneal() and the v2 facade produce bit-identical
+    trajectories for equal seeds/config."""
+    cfg = SAConfig(t_initial=50, t_final=0.05, cooling=0.85,
+                   moves_per_temp=15, seed=2)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res_old = anneal(pathfinder.wl, TEMPLATES["T1"], config=cfg,
+                         norm=pathfinder.norm, cache=pathfinder.cache)
+        assert any(issubclass(w.category, DeprecationWarning)
+                   for w in caught)
+    res_new = pathfinder.search(strategy=SimulatedAnnealing(cfg))
+    assert res_old.best == res_new.best
+    assert res_old.history == res_new.history
+    assert res_old.evaluations == res_new.evaluations
+
+
+def test_parallel_tempering_valid_and_improves(pathfinder):
+    res = pathfinder.search(
+        strategy=ParallelTempering(n_chains=4, sweeps=30), key=3)
+    assert is_valid(res.best)
+    assert res.evaluations >= 4 * 30
+    assert res.best_cost <= res.history[0] + 1e-12
+
+
+def test_replica_exchange_moves_better_solution_cold():
+    """Detailed balance: when the hotter replica holds the lower cost the
+    swap is certain, so the better solution always flows toward the cold
+    end (regression for an inverted acceptance sign)."""
+    from repro.pathfinding.strategies import _replica_exchange
+    rng = random.Random(0)
+    for _ in range(20):
+        chains = ["hot-better", "cold-worse"]
+        costs = [1.0, 5.0]
+        _replica_exchange([100.0, 1.0], chains, costs, rng)
+        assert chains == ["cold-worse", "hot-better"]
+        assert costs == [5.0, 1.0]
+    # the reverse swap (demoting a better cold solution) must not be
+    # certain: at a large beta gap its probability is ~exp(-large) ~ 0
+    chains = ["hot-worse", "cold-better"]
+    costs = [5.0, 1.0]
+    _replica_exchange([100.0, 0.001], chains, costs, rng)
+    assert chains == ["hot-worse", "cold-better"]
+
+
+def test_random_search_respects_budget(pathfinder):
+    res = pathfinder.search(strategy=RandomSearch(batch_size=128),
+                            budget=256, key=4)
+    assert res.evaluations == 256
+    assert is_valid(res.best)
+
+
+def test_grid_sweep_beats_worst_and_is_deterministic(pathfinder):
+    g = GridSweep(memories=("DDR5",), mappings=ALL_MAPPINGS[:2])
+    r1 = pathfinder.search(strategy=g)
+    r2 = pathfinder.search(strategy=g)
+    assert r1.best == r2.best and r1.best_cost == r2.best_cost
+    assert r1.evaluations == 2 * 43  # 43 package-protocol combos x 2 maps
+    assert min(r1.history) == r1.best_cost
+
+
+def test_chipletgym_backend(pathfinder):
+    pf = Pathfinder(workload(6), TEMPLATES["T1"], objective="chipletgym",
+                    cache=pathfinder.cache)
+    pf.fit_normalizer(samples=150, seed=5)
+    cfg = SAConfig(t_initial=20, t_final=0.1, cooling=0.8,
+                   moves_per_temp=8, seed=6)
+    res = pf.search(strategy=SimulatedAnnealing(cfg))
+    assert res.best_metrics.emb_cfp_kg == 0.0   # gym models no CFP
+    # batched interface works through the scalar fallback
+    mb = pf.evaluate_batch(SPACE.sample(16, key=2))
+    assert (mb.emb_cfp_kg == 0.0).all()
+
+
+def test_budget_caps_sa(pathfinder):
+    cfg = SAConfig(t_initial=100, t_final=0.01, cooling=0.9,
+                   moves_per_temp=50, seed=1)
+    res = pathfinder.search(strategy=SimulatedAnnealing(cfg), budget=40)
+    assert res.evaluations <= 40

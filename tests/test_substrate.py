@@ -194,8 +194,8 @@ def test_checkpoint_elastic_resharding():
     """Restore places leaves onto a different device layout (1-dev CPU
     mesh here; the API contract is sharding_fn controls placement)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mesh_kwargs
+    mesh = jax.make_mesh((1,), ("data",), **_mesh_kwargs(1))
     with tempfile.TemporaryDirectory() as d:
         t = {"w": jnp.arange(16.0).reshape(4, 4)}
         p = save_checkpoint(d, 1, t)
