@@ -29,6 +29,7 @@ from benchmarks import (
     fig12_perfsi_mapping,
     fig13_cfp_vs_cost,
     pathfinder_batch,
+    pathfinder_device,
     roofline,
     table06_sa_flows,
     table11_runtime,
@@ -48,6 +49,7 @@ ALL = [
     ("table11", table11_runtime),
     ("roofline", roofline),
     ("pathfinder_batch", pathfinder_batch),
+    ("pathfinder_device", pathfinder_device),
 ]
 
 OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")

@@ -1,0 +1,4 @@
+from repro.kernels.prefix_gather.ops import prefix_segment_gather
+from repro.kernels.prefix_gather.ref import prefix_segment_ref
+
+__all__ = ["prefix_segment_gather", "prefix_segment_ref"]

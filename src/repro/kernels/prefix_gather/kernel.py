@@ -1,0 +1,64 @@
+"""Pallas kernel: prefix-table gather + per-chiplet-slot segment reduction.
+
+The hottest inner loop of the device evaluator's stage 3
+(:mod:`repro.pathfinding.device`): every system gathers, per chiplet
+slot, the difference of two entries of a per-(array, sram, dataflow)
+prefix-sum table — Algorithm 1 assigns contiguous tile ranges, so a
+core's ScaleSim aggregate is ``pref[row, end] - pref[row, start]`` — and
+reduces the slot values to a per-system total.
+
+Layout: one grid step per system. The three index arrays ride in scalar
+prefetch (SMEM) — the canonical Pallas embedding-gather idiom — while the
+prefix table lives in (V)MEM as a single resident block; the slot loop is
+unrolled (``C`` = max chiplets, 6 by default), each iteration issuing two
+dynamically indexed scalar loads.
+
+CPU containers run this in interpreter mode, which is exact for the
+float64 tables the device evaluator feeds it (prefix magnitudes < 2^53).
+On TPU the same kernel compiles for float32/int32 tables; the f64 parity
+contract then requires rebased (per-range) tables, which is why the
+device evaluator only enables the kernel path explicitly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(rows_ref, start_ref, end_ref, pref_ref, diff_ref,
+                   total_ref, *, nc: int):
+    i = pl.program_id(0)
+    tot = None
+    for c in range(nc):  # static unroll over chiplet slots
+        r = rows_ref[i, c]
+        s = start_ref[i, c]
+        e = end_ref[i, c]
+        d = pref_ref[r, e] - pref_ref[r, s]
+        diff_ref[0, c] = d
+        tot = d if tot is None else tot + d
+    total_ref[0, 0] = tot
+
+
+def prefix_segment(pref, rows, start, end, *, interpret: bool):
+    """(diff [P, C], total [P, 1]) via one grid step per system."""
+    P, C = rows.shape
+    R, T1 = pref.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(P,),
+        in_specs=[pl.BlockSpec((R, T1), lambda i, *_: (0, 0))],
+        out_specs=[pl.BlockSpec((1, C), lambda i, *_: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i, *_: (i, 0))],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, nc=C),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((P, C), pref.dtype),
+                   jax.ShapeDtypeStruct((P, 1), pref.dtype)],
+        interpret=interpret,
+    )(rows.astype(jnp.int32), start.astype(jnp.int32),
+      end.astype(jnp.int32), pref)

@@ -1,0 +1,38 @@
+"""Jitted public wrapper for the prefix-gather kernel.
+
+Dispatches to interpreter mode on non-TPU backends (the kernel body runs
+in Python but stays bit-exact, including for float64 tables) and to the
+compiled path on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.prefix_gather import kernel as K
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefix_segment_gather(pref, rows, start, end,
+                          interpret: Optional[bool] = None):
+    """Per-slot prefix differences + per-row segment totals.
+
+    Args:
+      pref: ``[R, T+1]`` prefix-sum table (one row per (array, sram,
+        dataflow) combination).
+      rows/start/end: ``[P, C]`` int index arrays — table row and the
+        [start, end] tile range per chiplet slot.
+      interpret: force Pallas interpret mode; default on non-TPU backends.
+
+    Returns:
+      ``(diff [P, C], total [P])``.
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    diff, total = K.prefix_segment(pref, rows, start, end, interpret=interp)
+    return diff, total[:, 0]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the prefix-gather + segment-reduction kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def prefix_segment_ref(pref: jnp.ndarray, rows: jnp.ndarray,
+                       start: jnp.ndarray, end: jnp.ndarray):
+    """Per-slot prefix-sum differences and their per-row totals.
+
+    ``pref`` is a ``[R, T+1]`` prefix-sum table; ``rows``/``start``/``end``
+    are ``[P, C]`` index arrays. Returns ``(diff [P, C], total [P])`` with
+    ``diff[p, c] = pref[rows[p, c], end[p, c]] - pref[rows[p, c],
+    start[p, c]]`` — Algorithm 1 assigns each core a contiguous tile
+    range, so a core's simulation aggregate is exactly this difference —
+    and ``total`` the per-system (all-slot) segment reduction.
+    """
+    diff = (jnp.take_along_axis(pref[rows], end[..., None], axis=2)
+            - jnp.take_along_axis(pref[rows], start[..., None], axis=2)
+            )[..., 0]
+    return diff, diff.sum(axis=1)

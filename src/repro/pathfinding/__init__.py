@@ -3,8 +3,11 @@
 The public exploration surface of the repo: an encoded design space
 (:class:`DesignSpace`), a batched struct-of-arrays evaluator
 (:func:`evaluate_batch`, parity-guaranteed against the scalar
-:func:`repro.core.evaluate.evaluate`) and pluggable search strategies
-behind the :class:`Pathfinder` facade.
+:func:`repro.core.evaluate.evaluate`), a device-resident engine
+(:mod:`repro.pathfinding.device`: jitted fused evaluate+cost, vectorized
+hierarchical moves, and a ``lax.scan`` parallel-tempering loop — the
+default for batched strategies via ``Pathfinder(device=True)``) and
+pluggable search strategies behind the :class:`Pathfinder` facade.
 
 Quickstart::
 
@@ -29,6 +32,12 @@ from repro.pathfinding.batch import (
     fit_normalizer_batched,
     get_evaluator,
 )
+from repro.pathfinding.device import (
+    DeviceEvaluator,
+    evaluate_batch_device,
+    get_device_evaluator,
+    propose_batch,
+)
 from repro.pathfinding.pathfinder import OBJECTIVES, Pathfinder
 from repro.pathfinding.space import DesignSpace
 from repro.pathfinding.strategies import (
@@ -42,8 +51,9 @@ from repro.pathfinding.strategies import (
 )
 
 __all__ = [
-    "BatchEvaluator", "MetricsBatch", "evaluate_batch",
-    "fit_normalizer_batched", "get_evaluator", "OBJECTIVES", "Pathfinder",
+    "BatchEvaluator", "DeviceEvaluator", "MetricsBatch", "evaluate_batch",
+    "evaluate_batch_device", "fit_normalizer_batched", "get_device_evaluator",
+    "get_evaluator", "propose_batch", "OBJECTIVES", "Pathfinder",
     "DesignSpace", "GridSweep", "Objective", "ParallelTempering",
     "RandomSearch", "SearchResult", "SearchStrategy", "SimulatedAnnealing",
 ]

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -108,8 +109,11 @@ class MetricsBatch:
             l_dram_wr_s=float(self.l_dram_wr_s[i]),
             e_compute_j=float(self.e_compute_j[i]),
             e_d2d_j=float(self.e_d2d_j[i]),
-            d2d_bits=int(self.d2d_bits[i]),
-            macs=int(self.macs[i]),
+            # the scalar fields are exact integers carried in float64;
+            # round() instead of int() so an epsilon below the true value
+            # (e.g. 41.999...) cannot truncate to the wrong integer
+            d2d_bits=int(round(float(self.d2d_bits[i]))),
+            macs=int(round(float(self.macs[i]))),
         )
 
 
@@ -234,7 +238,9 @@ class BatchEvaluator:
         self.db = db
         self.tile_sizes = tile_sizes
         self.space = space or DesignSpace(db)
-        self._topo_cache: Dict[bytes, tuple] = {}
+        # LRU: long multi-workload runs churn topologies, so evict the
+        # least-recently-used descriptor instead of refusing new inserts
+        self._topo_cache: "OrderedDict[bytes, tuple]" = OrderedDict()
         self._build_chiplet_tables()
         self._build_memory_tables()
         self._build_package_info()
@@ -619,8 +625,11 @@ class BatchEvaluator:
                 desc = self._topo_one(n_l[p], st_l[p], areas_l[p],
                                       p25_l[p], p3_l[p], stack_l[p],
                                       mem_l[p])
-                if len(cache) < _TOPO_CACHE_MAX:
-                    cache[key] = desc
+                cache[key] = desc
+                if len(cache) > _TOPO_CACHE_MAX:
+                    cache.popitem(last=False)  # evict least recently used
+            else:
+                cache.move_to_end(key)
             (d_bw, d_de, d_ho, d_lk, d_inc, d_area, d_bond, d_asm,
              d_interp, d_p25, d_p3b) = desc
             bw_p.extend([p] * len(d_bw[0]))
@@ -831,26 +840,43 @@ def _nb_yield_jnp(area, d0: float, alpha: float):
 
 # key -> (db, evaluator). The TechDB is kept as a strong reference so
 # its id() cannot be recycled by a new allocation while the entry lives;
-# the cache is small and FIFO-bounded (table rebuilds are cheap).
-_EVALUATORS: Dict[tuple, Tuple[TechDB, BatchEvaluator]] = {}
+# the caches are small and FIFO-bounded (table rebuilds are cheap).
+_EVALUATORS: Dict[tuple, Tuple[TechDB, object]] = {}
 _EVALUATOR_CACHE_MAX = 16
+
+
+def evaluator_cache_key(wl: GEMMWorkload, db: TechDB, tile_sizes,
+                        space: Optional[DesignSpace]) -> tuple:
+    """Key on the *resolved* chiplet bound so space=None and an
+    equivalent default DesignSpace share one evaluator (tables + jax
+    warmup)."""
+    return (wl, id(db), tile_sizes,
+            space.max_chiplets if space is not None else
+            DEFAULT_MAX_CHIPLETS)
+
+
+def cached_evaluator(registry: Dict[tuple, Tuple[TechDB, object]],
+                     key: tuple, db: TechDB, factory, max_size: int):
+    """Shared FIFO-bounded registry lookup for the host and device
+    evaluator caches (the id(db) in the key is validated against the
+    live object so a recycled id cannot alias a stale entry)."""
+    hit = registry.get(key)
+    if hit is not None and hit[0] is db:
+        return hit[1]
+    ev = factory()
+    while len(registry) >= max_size:
+        registry.pop(next(iter(registry)))
+    registry[key] = (db, ev)
+    return ev
 
 
 def get_evaluator(wl: GEMMWorkload, db: TechDB = DEFAULT_DB,
                   tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
                   space: Optional[DesignSpace] = None) -> BatchEvaluator:
-    # key on the *resolved* chiplet bound so space=None and an equivalent
-    # default DesignSpace share one evaluator (tables + jax warmup)
-    key = (wl, id(db), tile_sizes,
-           space.max_chiplets if space is not None else DEFAULT_MAX_CHIPLETS)
-    hit = _EVALUATORS.get(key)
-    if hit is not None and hit[0] is db:
-        return hit[1]
-    ev = BatchEvaluator(wl, db, tile_sizes, space)
-    while len(_EVALUATORS) >= _EVALUATOR_CACHE_MAX:
-        _EVALUATORS.pop(next(iter(_EVALUATORS)))
-    _EVALUATORS[key] = (db, ev)
-    return ev
+    return cached_evaluator(
+        _EVALUATORS, evaluator_cache_key(wl, db, tile_sizes, space), db,
+        lambda: BatchEvaluator(wl, db, tile_sizes, space),
+        _EVALUATOR_CACHE_MAX)
 
 
 def evaluate_batch(encoded: np.ndarray, wl: GEMMWorkload,

@@ -1,0 +1,1180 @@
+"""Device-resident pathfinding: jitted fused evaluate+cost, vectorized
+moves, and a ``lax.scan`` parallel-tempering engine.
+
+PR 1's :func:`repro.pathfinding.batch.evaluate_batch` vectorized the
+metric *arithmetic* but kept the search loop host-bound: a per-row Python
+topology pass (``_topo_one``), an un-jitted ``jax.numpy`` stage 3, Python
+``propose()`` per chain and a host<->device round-trip every sweep. This
+module moves the whole explore -> evaluate -> accept loop onto the device:
+
+* :class:`DeviceEvaluator` — a single ``jax.jit``-compiled
+  ``evaluate_cost`` that fuses stages 1-3 of the batched evaluator *and*
+  the Eq. 17 ``sa_cost`` into one XLA program. The per-row Python
+  floorplan/BFS pass is replaced by an exact vectorized rendering (the
+  slicing-floorplan recursion unrolled level-by-level over fixed
+  ``max_chiplets`` slots, BFS with queue-order tie-breaking as a masked
+  fixed-point, link tables in a fixed ``(C*(C-1)/2 + C-1)``-slot layout),
+  so stage 2 becomes gathers + elementwise arithmetic with no data-
+  dependent Python. Populations are padded to power-of-two buckets
+  (>= 64) and the encoded buffer is donated, so repeated sweeps of any
+  size hit the jit compile cache and never re-trace.
+* :func:`propose_batch` / :meth:`DeviceEvaluator.propose` — the
+  hierarchical move distribution of :func:`repro.core.sa.propose`
+  (application / chip-architecture / chiplet / package levels, style
+  repair, hierarchical package-then-protocol draws) applied to encoded
+  ``int32`` rows with ``jax.random``; candidates that fail the vectorized
+  validity rules keep the incumbent row (the batched rendering of the
+  scalar retry loop).
+* :meth:`DeviceEvaluator.parallel_tempering` — the full ParallelTempering
+  sweep (propose, evaluate, Metropolis accept, sequential adjacent-pair
+  replica exchange) fused into one ``jax.lax.scan``; Python is touched
+  only at the start (encode the seed population) and the end (history /
+  best decode). ``record_trace=True`` additionally returns every
+  proposal and uniform draw so a host reference can replay the exact
+  trajectory (the trajectory-equivalence tests).
+
+Numerics: everything runs in float64 (``jax.experimental.enable_x64``
+scoped to this module's entry points) and replicates the host evaluator's
+operation order wherever floating-point ties matter (greedy floorplan
+accumulation order, Algorithm 1's sorted-order power summation), so the
+jitted path stays within the 1e-6 relative parity contract of the scalar
+:func:`repro.core.evaluate.evaluate` — in practice ~1e-15.
+
+The hottest stage-3 inner loop (prefix-table gather + per-chiplet-slot
+segment reduction) can optionally run through the Pallas kernel in
+:mod:`repro.kernels.prefix_gather` (``use_pallas=True`` or
+``REPRO_PATHFINDER_PALLAS=1``; default auto = TPU backends only — on CPU
+the kernel executes in interpreter mode, which is exact but slow).
+
+The scalar fallback (``Pathfinder(device=False)`` or any non-CarbonPATH
+objective backend, e.g. ChipletGym) preserves the PR-1 host path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.carbon import SECONDS_PER_YEAR
+from repro.core.d2d import HOP_LATENCY_S
+from repro.core.scalesim import OPERAND_BYTES
+from repro.core.techdb import DEFAULT_DB, TechDB
+from repro.core.templates import Normalizer, Template
+from repro.core.workload import DEFAULT_TILE, GEMMWorkload
+from repro.pathfinding.batch import (
+    MetricsBatch,
+    _SIM_METRICS,
+    get_evaluator,
+)
+from repro.pathfinding.space import (
+    COL_CHIP,
+    COL_DATAFLOW,
+    COL_MEM,
+    COL_N,
+    COL_ORDER,
+    COL_PAIR25,
+    COL_PAIR3,
+    COL_SPLITK,
+    COL_STACK,
+    COL_STYLE,
+    DEFAULT_MAX_CHIPLETS,
+    DesignSpace,
+    S_25D,
+    S_2D,
+    S_3D,
+    S_HYBRID,
+)
+
+P_APPLICATION = 0.35  # sa.propose's application-level move probability
+
+
+@dataclasses.dataclass(frozen=True)
+class _Cfg:
+    """Static (trace-time) constants baked into the jitted programs."""
+
+    C: int            # max chiplet slots
+    W: int            # encoded row width
+    A: int            # array-size options
+    T_nodes: int      # tech-node options
+    S: int            # max SRAM options
+    M: int            # memory options
+    n_pairs25: int
+    n_pairs3: int
+    n_pkg25: int
+    n_pkg3: int
+    L: int            # fixed link slots: C*(C-1)/2 plane + C-1 chain
+    T0: int           # tiles without split-K
+    T1: int           # tiles with split-K
+    wr_bits: float    # wl.M * wl.N * OPERAND_BYTES * 8
+    acost: float
+    substrate_cost_mm2: float
+    substrate_cfp_mm2: float
+    interposer_cpa: float
+    interposer_defect: float
+    interposer_wafer_cost: float
+    yield_alpha: float
+    wafer_diameter_mm: float
+    carbon_intensity: float
+    lifetime_years: float
+    use_fraction: float
+    duty_runs_per_s: float
+    use_pallas: bool
+
+
+def _popcount(x, bits: int):
+    import jax.numpy as jnp
+
+    out = jnp.zeros_like(x)
+    for i in range(bits):
+        out = out + ((x >> i) & 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: Algorithm 1 tile assignment (exact jnp port of batch._assign)
+# ---------------------------------------------------------------------------
+
+
+def _assign_jax(powers, nmask, order, total, cfg: _Cfg):
+    import jax.numpy as jnp
+
+    C = cfg.C
+    key = jnp.where((order == 0)[:, None], -powers, powers)
+    key = jnp.where(nmask, key, jnp.inf)  # padding sorts last either way
+    pos = jnp.argsort(key, axis=1)  # stable
+    p_sorted = jnp.take_along_axis(powers, pos, axis=1)
+    # sequential fold in sorted order: equal-power cores make the
+    # fractional parts ulp-level ties, so summation order is part of the
+    # parity contract with the scalar/np assigner
+    psum = jnp.zeros(powers.shape[0])
+    for c in range(C):
+        psum = psum + p_sorted[:, c]
+    psum = jnp.where(psum > 0, psum, 1.0)
+    ideal = p_sorted / psum[:, None] * total.astype(jnp.float64)[:, None]
+    counts = jnp.floor(ideal)
+    csum = jnp.zeros_like(psum)
+    for c in range(C):
+        csum = csum + counts[:, c]
+    remaining = (total.astype(jnp.int64) - csum.astype(jnp.int64))
+    frac = ideal - counts
+    frac_pos = jnp.argsort(-frac, axis=1)  # stable
+    rank = jnp.argsort(frac_pos, axis=1)   # exact inverse permutation
+    counts_i = counts.astype(jnp.int64) + (rank < remaining[:, None])
+    starts = jnp.concatenate(
+        [jnp.zeros_like(counts_i[:, :1]),
+         jnp.cumsum(counts_i[:, :-1], axis=1)], axis=1)
+    inv = jnp.argsort(pos, axis=1)
+    start = jnp.take_along_axis(starts, inv, axis=1)
+    count = jnp.take_along_axis(counts_i, inv, axis=1)
+    return start, count
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: vectorized topology (exact rendering of batch._topo_one /
+# batch._topology, incl. the slicing floorplan and sorted-BFS routes)
+# ---------------------------------------------------------------------------
+
+
+def _topology_jax(v, areas, tb, cfg: _Cfg):
+    import jax.numpy as jnp
+    from jax import lax
+
+    C, L = cfg.C, cfg.L
+    P = v.shape[0]
+    rows = jnp.arange(P)
+    slot = jnp.arange(C, dtype=jnp.int32)
+
+    n = v[:, COL_N].astype(jnp.int32)
+    style = v[:, COL_STYLE]
+    is2d = style == S_2D
+    is25 = style == S_25D
+    is3d = style == S_3D
+    ishyb = style == S_HYBRID
+    active = slot[None, :] < n[:, None]
+
+    memtot = tb["m_bw"][jnp.clip(v[:, COL_MEM], 0, cfg.M - 1)]
+    p25i = jnp.clip(v[:, COL_PAIR25], 0, cfg.n_pairs25 - 1)
+    p3i = jnp.clip(v[:, COL_PAIR3], 0, cfg.n_pairs3 - 1)
+    p25row = tb["p25"][p25i]  # one gather for all 7 package fields
+    pitch25, y25, cfp25, scale25, rate25, eta25, ebit25 = [
+        p25row[:, i] for i in range(7)]
+    interp25 = tb["p25_interp"][p25i]
+    p3row = tb["p3"][p3i]
+    pitch3, y3, cfp3, scale3, rate3, eta3, ebit3 = [
+        p3row[:, i] for i in range(7)]
+
+    # -- 3D chain: members sorted by non-increasing area, ties by index ----
+    member = ((v[:, COL_STACK][:, None] >> slot[None, :]) & 1) == 1
+    member = jnp.where(ishyb[:, None], member & active,
+                       jnp.where(is3d[:, None], active, False))
+    chain_len = member.sum(axis=1).astype(jnp.int32)
+    chain_slots = jnp.argsort(
+        jnp.where(member, -areas, jnp.inf), axis=1).astype(jnp.int32)
+    a_chain = jnp.take_along_axis(areas, chain_slots, axis=1)
+    base_slot = chain_slots[:, 0]
+    tier = jnp.arange(C)
+    tmask = (tier[None, :] >= 1) & (tier[None, :] < chain_len[:, None])
+    # Eq. 7 per bond: bumps over the (smaller) upper die's face
+    face = jnp.minimum(a_chain[:, :-1], a_chain[:, 1:])
+    nb3 = jnp.maximum(1.0, jnp.trunc(face * 1e6 / (pitch3 * pitch3)[:, None]))
+    cbw = rate3[:, None] * 1e9 * nb3 * eta3[:, None]
+    bond_exists = ((jnp.arange(C - 1)[None, :] + 1 < chain_len[:, None])
+                   & (is3d | ishyb)[:, None])
+
+    # -- planar set in floorplan input order: non-members asc + base -------
+    planar_mask = active & ~member
+    porder = jnp.argsort(
+        jnp.where(planar_mask, slot[None, :], C + 1), axis=1
+    ).astype(jnp.int32)
+    n_nonmem = planar_mask.sum(axis=1).astype(jnp.int32)
+    porder = jnp.where(ishyb[:, None] & (slot[None, :] == n_nonmem[:, None]),
+                       base_slot[:, None], porder)
+    m_planar = n_nonmem + ishyb.astype(jnp.int32)
+    pvalid = slot[None, :] < m_planar[:, None]
+    ar_p = jnp.where(pvalid, jnp.take_along_axis(areas, porder, axis=1), 0.0)
+
+    # planar-order sequential sums (parity with Python sum())
+    tot = jnp.zeros(P)
+    for j in range(C):
+        tot = tot + ar_p[:, j]
+    side = jnp.sqrt(tot * (1.0 + 0.10))
+
+    # -- slicing floorplan, recursion unrolled level by level --------------
+    # the greedy iteration order (area desc, ties by input position) is
+    # invariant across levels: children receive items already sorted.
+    # groups are tiny (<= C members), so all per-group accumulation is
+    # expressed as pairwise same-group comparisons — pure fusable
+    # elementwise chains, no scatters (the dominant cost on CPU)
+    sorder = jnp.argsort(jnp.where(pvalid, -ar_p, jnp.inf),
+                         axis=1).astype(jnp.int32)
+    inv_sorder = jnp.argsort(sorder, axis=1)
+    a_s = jnp.take_along_axis(ar_p, sorder, axis=1)       # sorted areas
+    v_s = jnp.take_along_axis(pvalid, sorder, axis=1)
+    contrib = [jnp.where(v_s[:, t], a_s[:, t], 0.0) for t in range(C)]
+    g = jnp.zeros((P, C), dtype=jnp.int32)
+    bx = jnp.zeros((P, C))
+    by = jnp.zeros((P, C))
+    bwid = jnp.broadcast_to(side[:, None], (P, C))
+    bhei = jnp.broadcast_to(side[:, None], (P, C))
+    for level in range(max(C - 1, 1)):
+        g_s = jnp.take_along_axis(g, sorder, axis=1)
+        # greedy pass in sorted order: left iff al <= ar of the item's
+        # group so far (prefix sums in the exact scalar iteration order)
+        left_s = []
+        for t in range(C):
+            al_t = jnp.zeros(P)
+            ar_t = jnp.zeros(P)
+            for t2 in range(t):
+                same = g_s[:, t2] == g_s[:, t]
+                al_t = al_t + jnp.where(same & left_s[t2], contrib[t2], 0.0)
+                ar_t = ar_t + jnp.where(same & ~left_s[t2], contrib[t2],
+                                        0.0)
+            left_s.append(al_t <= ar_t)
+        # final per-group totals / counts, accumulated per original
+        # position in the same sorted order as the scalar greedy
+        # (skipped other-group items add 0.0, which is exact)
+        frac_cols, split_cols = [], []
+        for j in range(C):
+            gj = g[:, j]
+            al_j = jnp.zeros(P)
+            ar_j = jnp.zeros(P)
+            cnt_j = jnp.zeros(P, dtype=jnp.int32)
+            for t2 in range(C):
+                same = g_s[:, t2] == gj
+                al_j = al_j + jnp.where(same & left_s[t2], contrib[t2], 0.0)
+                ar_j = ar_j + jnp.where(same & ~left_s[t2], contrib[t2],
+                                        0.0)
+                cnt_j = cnt_j + (same & v_s[:, t2]).astype(jnp.int32)
+            den = al_j + ar_j
+            frac_cols.append(al_j / jnp.where(den > 0, den, 1.0))
+            split_cols.append(cnt_j >= 2)
+        frac_j = jnp.stack(frac_cols, axis=1)
+        split_j = jnp.stack(split_cols, axis=1) & pvalid
+        goleft = jnp.take_along_axis(jnp.stack(left_s, axis=1),
+                                     inv_sorder, axis=1)
+        if level % 2 == 0:  # vertical cut, alternating by depth
+            wl_ = bwid * frac_j
+            bx = jnp.where(split_j & ~goleft, bx + wl_, bx)
+            bwid = jnp.where(split_j,
+                             jnp.where(goleft, wl_, bwid - wl_), bwid)
+        else:
+            hl_ = bhei * frac_j
+            by = jnp.where(split_j & ~goleft, by + hl_, by)
+            bhei = jnp.where(split_j,
+                             jnp.where(goleft, hl_, bhei - hl_), bhei)
+        g = jnp.where(split_j, g * 2 + (~goleft).astype(jnp.int32), g * 2)
+    width = jnp.max(jnp.where(pvalid, bx + bwid, -jnp.inf), axis=1)
+    height = jnp.max(jnp.where(pvalid, by + bhei, -jnp.inf), axis=1)
+    bbox = width * height
+
+    # -- links in a fixed slot layout: plane pairs then chain bonds --------
+    # per-link values are computed as fusable elementwise [P] chains and
+    # scattered into the slot-space adjacency/link tables in one batched
+    # op each (valid links never collide: plane links have at most one
+    # stacked endpoint — the base — while chain bonds have two)
+    pairs = [(j1, j2) for j1 in range(C) for j2 in range(j1 + 1, C)]
+    plane_row = is25 | ishyb
+    tol = 1e-9
+    j1v = jnp.asarray([j1 for j1, _ in pairs], dtype=jnp.int32)
+    j2v = jnp.asarray([j2 for _, j2 in pairs], dtype=jnp.int32)
+    x1, y1, w1, h1 = bx[:, j1v], by[:, j1v], bwid[:, j1v], bhei[:, j1v]
+    x2, y2, w2, h2 = bx[:, j2v], by[:, j2v], bwid[:, j2v], bhei[:, j2v]
+    cond_v = (jnp.abs(x1 + w1 - x2) < tol) | (jnp.abs(x2 + w2 - x1) < tol)
+    lo_v = jnp.where(y1 > y2, y1, y2)
+    hi_v = jnp.minimum(y1 + h1, y2 + h2)
+    edge_v = jnp.where(hi_v > lo_v, hi_v - lo_v, 0.0)
+    cond_h = (jnp.abs(y1 + h1 - y2) < tol) | (jnp.abs(y2 + h2 - y1) < tol)
+    lo_h = jnp.where(x1 > x2, x1, x2)
+    hi_h = jnp.minimum(x1 + w1, x2 + w2)
+    edge_h = jnp.where(hi_h > lo_h, hi_h - lo_h, 0.0)
+    edge = jnp.where(cond_v, edge_v, jnp.where(cond_h, edge_h, 0.0))
+    r25 = (rate25 * 1e9)[:, None]
+    e25 = eta25[:, None]
+    pit25 = pitch25[:, None]
+    bwk = r25 * jnp.maximum(1.0, jnp.trunc(edge * 1e3 / pit25)) * e25
+    for aa in (ar_p[:, j1v], ar_p[:, j2v]):  # Eq. 6 endpoint perimeter cap
+        perim = 4.0 * jnp.sqrt(aa)
+        bwk = jnp.minimum(
+            bwk, r25 * jnp.maximum(1.0, jnp.trunc(perim * 1e3 / pit25))
+            * e25)
+    s1a = jnp.concatenate([porder[:, j1v], chain_slots[:, :C - 1]], axis=1)
+    s2a = jnp.concatenate([porder[:, j2v], chain_slots[:, 1:]], axis=1)
+    exa = jnp.concatenate(
+        [plane_row[:, None] & (j2v[None, :] < m_planar[:, None])
+         & (edge > 1e-9), bond_exists], axis=1)
+    link_bw = jnp.where(exa, jnp.concatenate([bwk, cbw], axis=1), jnp.inf)
+    link_e = jnp.where(
+        exa, jnp.concatenate(
+            [jnp.broadcast_to(ebit25[:, None], bwk.shape),
+             jnp.broadcast_to(ebit3[:, None], cbw.shape)], axis=1), 0.0)
+    # one-hot reduction instead of scatters (cheaper than scatter thunks
+    # on CPU; valid links never collide, so the sum packs exact link ids)
+    pm_half = ((s1a[:, :, None] == slot[None, None, :])[:, :, :, None]
+               & (s2a[:, :, None] == slot[None, None, :])[:, :, None, :]
+               & exa[:, :, None, None])                 # [P, L, C, C]
+    kplus1 = jnp.arange(1, L + 1, dtype=jnp.int32)[None, :, None, None]
+    lid_half = jnp.sum(pm_half * kplus1, axis=1)
+    lid = lid_half + jnp.swapaxes(lid_half, 1, 2) - 1
+    adj = lid >= 0
+
+    # -- DRAM attach: planar shares, base-die-mediated chain (Eqs. 8-10) ---
+    # both scatters target permutations (porder / chain_slots), so a
+    # single batched .add per table is collision-free
+    share = memtot[:, None] * ar_p / jnp.where(tot > 0, tot, 1.0)[:, None]
+    base_share = jnp.take_along_axis(share, n_nonmem[:, None], axis=1)[:, 0]
+    base_bw0 = jnp.where(ishyb, base_share, memtot)
+    cmin = lax.cummin(jnp.where(bond_exists, cbw, jnp.inf), axis=1)
+    eff_chain = jnp.minimum(base_bw0[:, None], cmin)
+    plane_val = jnp.where(pvalid & plane_row[:, None], share, 0.0)
+    chain_val = jnp.concatenate(
+        [jnp.where((chain_len > 0) & is3d, memtot, 0.0)[:, None],
+         jnp.where(tmask[:, 1:] & (is3d | ishyb)[:, None],
+                   eff_chain, 0.0)], axis=1)
+    rl1 = rows[:, None]
+    eff_bw = (jnp.zeros((P, C)).at[rl1, porder].add(plane_val)
+              .at[rl1, chain_slots].add(chain_val))
+    dram_val = jnp.where(tmask & (is3d | ishyb)[:, None],
+                         jnp.arange(C)[None, :] * ebit3[:, None], 0.0)
+    dram_e = jnp.zeros((P, C)).at[rl1, chain_slots].add(dram_val)
+    eff_bw = eff_bw.at[:, 0].set(jnp.where(is2d, memtot, eff_bw[:, 0]))
+
+    # -- reduction routes: BFS per source, queue-order tie-breaking --------
+    dest = jnp.argmax(jnp.where(active, areas, -1.0), axis=1
+                      ).astype(jnp.int32)
+    INF_I = jnp.int32(10 ** 6)
+    eye = jnp.eye(C, dtype=bool)[None]
+    ordv = jnp.where(eye, 0, jnp.full((P, C, C), INF_I, dtype=jnp.int32))
+    prev = jnp.where(eye, slot[None, :, None],
+                     jnp.full((P, C, C), -1, dtype=jnp.int32))
+    counter = jnp.ones((P, C), dtype=jnp.int32)
+    # step k processes the (unique) node with discovery rank k — exactly
+    # the scalar queue pop order. C-1 steps suffice: a node with rank k
+    # is found while processing rank k-1 <= C-2, so the last rank
+    # discovers nothing
+    for k in range(max(C - 1, 1)):
+        at_k = ordv == k
+        u = jnp.argmax(at_k, axis=2).astype(jnp.int32)
+        valid_u = jnp.any(at_k, axis=2)
+        adj_u = adj[rows[:, None], u]  # [P, src, node]
+        # expand u's neighbours in ascending slot order: discovery rank
+        # within this expansion is the exclusive prefix count of newly
+        # discovered nodes (identical to the scalar queue-append order)
+        newly = valid_u[..., None] & adj_u & (ordv == INF_I)
+        ni = newly.astype(jnp.int32)
+        offs = jnp.cumsum(ni, axis=2) - ni
+        prev = jnp.where(newly, u[..., None], prev)
+        ordv = jnp.where(newly, counter[..., None] + offs, ordv)
+        counter = counter + jnp.sum(ni, axis=2)
+
+    srcs = jnp.broadcast_to(slot[None, :], (P, C))
+    route_on = (~is2d)[:, None] & active & (srcs != dest[:, None])
+    node = jnp.broadcast_to(dest[:, None], (P, C)).astype(jnp.int32)
+    hops = jnp.zeros((P, C), dtype=jnp.int64)
+    inc_s = jnp.zeros((P, C, L))
+    for _ in range(C - 1):
+        pu = jnp.take_along_axis(prev, node[..., None], axis=2)[..., 0]
+        go = route_on & (node != srcs) & (pu >= 0)
+        lk = lid[rows[:, None], jnp.where(go, pu, 0), node]
+        inc_s = inc_s + ((jnp.arange(L)[None, None, :] == lk[..., None])
+                         & go[..., None]).astype(jnp.float64)
+        hops = hops + go
+        node = jnp.where(go, pu, node)
+    inc = jnp.swapaxes(inc_s, 1, 2)  # [P, link, src]
+
+    # -- bonding yield / assembly / carbon rates (Eqs. 15-16, 2) -----------
+    n_f = n.astype(jnp.float64)
+    m_f = m_planar.astype(jnp.float64)
+    cl_f = chain_len.astype(jnp.float64)
+    bond_y = jnp.where(
+        is2d, 1.0,
+        jnp.where(is25, y25 ** n_f,
+                  jnp.where(is3d, y3 ** (n_f - 1.0),
+                            (y25 ** m_f) * (y3 ** (cl_f - 1.0)))))
+    assembly = jnp.where(
+        is2d, cfg.acost,
+        jnp.where(is25, n_f * cfg.acost * scale25,
+                  jnp.where(is3d, n_f * cfg.acost * scale3,
+                            m_f * cfg.acost * scale25
+                            + cl_f * cfg.acost * scale3)))
+    p3_bonded = jnp.where(is3d | ishyb,
+                          cfp3 * jnp.sum(jnp.where(tmask, a_chain, 0.0),
+                                         axis=1), 0.0)
+    pkg_area = jnp.where(is2d, areas[:, 0],
+                         jnp.where(is3d, a_chain[:, 0], bbox))
+    return dict(
+        eff_bw=eff_bw, dram_e=dram_e, hops=hops, link_bw=link_bw,
+        link_e=link_e, inc=inc, pkg_area=pkg_area, bond_y=bond_y,
+        assembly=assembly, interp=(is25 | ishyb) & interp25,
+        p25_rate=jnp.where(is25 | ishyb, cfp25, 0.0),
+        p3_bonded=p3_bonded, is2d=is2d)
+
+
+# ---------------------------------------------------------------------------
+# Stage 3 + cost: the fused jitted evaluator
+# ---------------------------------------------------------------------------
+
+
+def _gather_sims(v, a_idx, s_idx, di, start, end, tb, cfg: _Cfg):
+    """Prefix-table gathers for both split-K tables + per-row select.
+
+    With ``cfg.use_pallas`` the gather + per-slot segment reduction runs
+    through :func:`repro.kernels.prefix_gather.prefix_segment_gather`
+    (flattened ``[A*S*3, T+1]`` tables); otherwise plain jnp gathers.
+    """
+    import jax.numpy as jnp
+
+    split1 = (v[:, COL_SPLITK] == 1)[:, None]
+    sims = {}
+    if cfg.use_pallas:
+        from repro.kernels.prefix_gather import prefix_segment_gather
+
+        ridx = ((a_idx * cfg.S + s_idx) * 3 + di).astype(jnp.int32)
+        for fi, f in enumerate(_SIM_METRICS):
+            d0, _ = prefix_segment_gather(
+                tb["pref0_flat"][fi], ridx,
+                jnp.clip(start, 0, cfg.T0).astype(jnp.int32),
+                jnp.clip(end, 0, cfg.T0).astype(jnp.int32))
+            d1, _ = prefix_segment_gather(
+                tb["pref1_flat"][fi], ridx,
+                jnp.clip(start, 0, cfg.T1).astype(jnp.int32),
+                jnp.clip(end, 0, cfg.T1).astype(jnp.int32))
+            sims[f] = jnp.where(split1, d1, d0).astype(jnp.int64)
+    else:
+        s0 = jnp.clip(start, 0, cfg.T0)
+        e0 = jnp.clip(end, 0, cfg.T0)
+        s1 = jnp.clip(start, 0, cfg.T1)
+        e1 = jnp.clip(end, 0, cfg.T1)
+        # tables carry the 5 sim metrics in the trailing axis, so each
+        # (split, bound) pair is a single gather of [P, C, 5]
+        t0, t1 = tb["pref0"], tb["pref1"]
+        g0 = t0[a_idx, s_idx, di, e0] - t0[a_idx, s_idx, di, s0]
+        g1 = t1[a_idx, s_idx, di, e1] - t1[a_idx, s_idx, di, s1]
+        sel = jnp.where(split1[..., None], g1, g0)
+        for fi, f in enumerate(_SIM_METRICS):
+            sims[f] = sel[..., fi]
+    mn0 = tb["mn0"][jnp.clip(end, 0, cfg.T0)] - tb["mn0"][
+        jnp.clip(start, 0, cfg.T0)]
+    mn1 = tb["mn1"][jnp.clip(end, 0, cfg.T1)] - tb["mn1"][
+        jnp.clip(start, 0, cfg.T1)]
+    mn_bits = jnp.where(split1, mn1, mn0)
+    return sims, mn_bits
+
+
+def _metrics_jax(v, tb, cfg: _Cfg):
+    """The 13 MetricsBatch arrays for an encoded population, fully jitted.
+
+    Mirrors ``BatchEvaluator.__call__`` stage by stage (same operation
+    order where floating-point ties matter)."""
+    import jax.numpy as jnp
+
+    C = cfg.C
+    P = v.shape[0]
+    slot = jnp.arange(C, dtype=jnp.int32)
+    n = v[:, COL_N]
+    nmask = slot[None, :] < n[:, None]
+    chip = v[:, COL_CHIP:COL_CHIP + 3 * C].reshape(P, C, 3)
+    a_idx = jnp.where(nmask, chip[:, :, 0], 0)
+    t_idx = jnp.where(nmask, chip[:, :, 1], 0)
+    s_idx = jnp.where(nmask, chip[:, :, 2], 0)
+
+    cphys = tb["chiplet"][a_idx, t_idx, s_idx]  # [P, C, 4] physicals
+    areas = jnp.where(nmask, cphys[:, :, 0], 0.0)
+    dest = jnp.argmax(jnp.where(nmask, areas, -1.0), axis=1)
+
+    powers = jnp.where(nmask, tb["t_power"][a_idx, t_idx], 0.0)
+    split = v[:, COL_SPLITK]
+    total = jnp.where(split == 1, cfg.T1, cfg.T0)
+    start, count = _assign_jax(powers, nmask, v[:, COL_ORDER], total, cfg)
+    end = start + count
+    di = jnp.broadcast_to(v[:, COL_DATAFLOW][:, None], (P, C))
+    sims, mn_bits = _gather_sims(v, a_idx, s_idx, di, start, end, tb, cfg)
+
+    topo = _topology_jax(v, areas, tb, cfg)
+
+    f8 = lambda x: jnp.asarray(x, dtype=jnp.float64)  # noqa: E731
+    mask = nmask
+    cyc, rd, wr = f8(sims["cycles"]), f8(sims["rd"]), f8(sims["wr"])
+    sram_b, macs = f8(sims["sram"]), f8(sims["macs"])
+    nphys = tb["node"][t_idx]  # [P, C, 4] node-scaled rates
+    freq = jnp.where(mask, nphys[:, :, 0], 1.0)
+    eff_bw = topo["eff_bw"]
+    den_bw = jnp.where(eff_bw > 0, eff_bw, 1.0)
+
+    # Eq. 5 term 1: max_i (L_compute,i + L_DRAM_RD,i)
+    l_comp = cyc / (freq * 1e9)
+    l_rd = jnp.where(rd > 0, rd / den_bw, 0.0)
+    l_cr = jnp.max(l_comp + l_rd, axis=1)
+
+    # Eq. 5 term 2: reduction-phase D2D over shared links (Fig. 4)
+    sbits = jnp.where(slot[None, :] == dest[:, None], 0.0, f8(mn_bits))
+    loads = jnp.einsum("plc,pc->pl", topo["inc"], sbits)
+    l_link = jnp.max(loads / topo["link_bw"], axis=1)
+    max_hops = jnp.max(jnp.where(sbits > 0, f8(topo["hops"]), 0.0), axis=1)
+    l_d2d = l_link + max_hops * HOP_LATENCY_S
+
+    # Eq. 5 term 3: DRAM write-back (split-K dependent)
+    eff_dest = jnp.take_along_axis(eff_bw, dest[:, None], axis=1)[:, 0]
+    wr_split = cfg.wr_bits / eff_dest
+    wr_direct = jnp.max(jnp.where(wr > 0, wr / den_bw, 0.0), axis=1)
+    l_wr = jnp.where(split == 1, wr_split, wr_direct)
+    latency = l_cr + l_d2d + l_wr
+
+    # energy (Eqs. 12-14)
+    mem_idx = jnp.clip(v[:, COL_MEM], 0, cfg.M - 1)
+    mrow = tb["mem3"][mem_idx]  # [P, 3]: rd/wr energy + cost
+    m_rd = mrow[:, 0][:, None]
+    m_wr = mrow[:, 1][:, None]
+    sram_e = nphys[:, :, 1]
+    mac_e = nphys[:, :, 2]
+    e_comp_pj = jnp.sum(rd * m_rd + wr * m_wr + sram_b * sram_e
+                        + macs * mac_e, axis=1)
+    e_mem_d2d_pj = jnp.sum((rd + wr) * topo["dram_e"], axis=1)
+    e_link_pj = jnp.sum(loads * topo["link_e"], axis=1)
+    e_compute_j = e_comp_pj * 1e-12
+    e_d2d_j = (e_link_pj + e_mem_d2d_pj) * 1e-12
+    static_w = jnp.where(mask, cphys[:, :, 1], 0.0)
+    e_static_j = jnp.sum(static_w, axis=1) * latency
+    energy = e_compute_j + e_d2d_j + e_static_j
+
+    # area, dollar cost (Eqs. 15-16)
+    area = topo["pkg_area"]
+    chip_cost = jnp.sum(jnp.where(mask, cphys[:, :, 2], 0.0), axis=1)
+    icost = jnp.where(topo["interp"], _interposer_cost(area, cfg), 0.0)
+    package = cfg.substrate_cost_mm2 * area + topo["assembly"]
+    bond_y = topo["bond_y"]
+    dollar = ((chip_cost + icost + package) / bond_y + mrow[:, 2])
+
+    # embodied + operational CFP (Eqs. 2-3)
+    mfg = jnp.sum(jnp.where(mask, cphys[:, :, 3], 0.0), axis=1)
+    des = jnp.sum(jnp.where(mask, nphys[:, :, 3], 0.0), axis=1)
+    icfp = jnp.where(
+        topo["interp"],
+        area * cfg.interposer_cpa / _nb_yield(
+            area, cfg.interposer_defect, cfg.yield_alpha), 0.0)
+    pkg_cfp_multi = (cfg.substrate_cfp_mm2 * area
+                     + topo["p25_rate"] * area + icfp
+                     + topo["p3_bonded"]) / bond_y
+    pkg_cfp = jnp.where(topo["is2d"], cfg.substrate_cfp_mm2 * area,
+                        pkg_cfp_multi)
+    emb = mfg + des + pkg_cfp
+    active_s = cfg.lifetime_years * SECONDS_PER_YEAR * cfg.use_fraction
+    runs = cfg.duty_runs_per_s * active_s
+    ope = energy * runs / 3.6e6 * cfg.carbon_intensity
+
+    return (latency, energy, area, dollar, emb, ope, l_cr, l_d2d, l_wr,
+            e_compute_j, e_d2d_j, jnp.sum(loads, axis=1),
+            jnp.sum(macs, axis=1))
+
+
+def _interposer_cost(area, cfg: _Cfg):
+    import jax.numpy as jnp
+    import math
+
+    r = cfg.wafer_diameter_mm / 2.0
+    dpw = (math.pi * r * r / area
+           - math.pi * cfg.wafer_diameter_mm / jnp.sqrt(2.0 * area))
+    dpw = jnp.maximum(1.0, jnp.trunc(dpw))
+    y = _nb_yield(area, cfg.interposer_defect, cfg.yield_alpha)
+    return cfg.interposer_wafer_cost / dpw / y
+
+
+def _nb_yield(area, d0: float, alpha: float):
+    return (1.0 + area * d0 / alpha) ** (-alpha)
+
+
+def _eval_cost_jax(v, mins, medians, w, tb, cfg: _Cfg):
+    """Fused metrics + Eq. 17 cost (METRIC_FIELDS column order)."""
+    import jax.numpy as jnp
+
+    mets = _metrics_jax(v, tb, cfg)
+    x = jnp.stack([mets[1], mets[2], mets[0], mets[3], mets[4], mets[5]],
+                  axis=1)
+    cost = ((x - mins[None, :]) / medians[None, :] * w[None, :]).sum(axis=1)
+    return mets, cost
+
+
+# ---------------------------------------------------------------------------
+# Vectorized hierarchical moves (device rendering of sa.propose)
+# ---------------------------------------------------------------------------
+
+
+def _validity_jax(v, tb, cfg: _Cfg):
+    """jnp port of :meth:`DesignSpace.validity_mask`."""
+    import jax.numpy as jnp
+
+    C = cfg.C
+    n = v[:, COL_N]
+    style = v[:, COL_STYLE]
+    p25, p3, stck = v[:, COL_PAIR25], v[:, COL_PAIR3], v[:, COL_STACK]
+    ok = (n >= 1) & (n <= C)
+    ok &= (style >= 0) & (style < 4)
+    ok &= (v[:, COL_MEM] >= 0) & (v[:, COL_MEM] < cfg.M)
+    ok &= (v[:, COL_ORDER] >= 0) & (v[:, COL_ORDER] <= 1)
+    ok &= (v[:, COL_DATAFLOW] >= 0) & (v[:, COL_DATAFLOW] < 3)
+    ok &= (v[:, COL_SPLITK] >= 0) & (v[:, COL_SPLITK] <= 1)
+    chip = v[:, COL_CHIP:COL_CHIP + 3 * C].reshape(-1, C, 3)
+    active = jnp.arange(C, dtype=jnp.int32)[None, :] < n[:, None]
+    a, t, s = chip[:, :, 0], chip[:, :, 1], chip[:, :, 2]
+    a_ok = (a >= 0) & (a < cfg.A)
+    chip_ok = (a_ok & (t >= 0) & (t < cfg.T_nodes) & (s >= 0)
+               & (s < tb["n_sram"][jnp.where(a_ok, a, 0)]))
+    ok &= jnp.all(chip_ok | ~active, axis=1)
+    pc = _popcount(stck, C)
+    no3d, no25, nostk = p3 == -1, p25 == -1, stck == 0
+    has25 = (p25 >= 0) & (p25 < cfg.n_pairs25)
+    has3 = (p3 >= 0) & (p3 < cfg.n_pairs3)
+    in_range = stck < jnp.left_shift(1, jnp.minimum(n, 30))
+    ok &= jnp.where(style == S_2D, (n == 1) & no25 & no3d & nostk, True)
+    ok &= jnp.where(style == S_25D, (n >= 2) & has25 & no3d & nostk, True)
+    ok &= jnp.where(style == S_3D, (n >= 2) & has3 & no25 & nostk, True)
+    ok &= jnp.where(style == S_HYBRID,
+                    (n >= 3) & has25 & has3 & (pc >= 2) & (pc < n)
+                    & in_range & (stck >= 0), True)
+    return ok
+
+
+def _propose_jax(key, v, tb, cfg: _Cfg):
+    """One hierarchical move per encoded row, mirroring the level/branch
+    distribution of :func:`repro.core.sa.propose` with ``jax.random``.
+
+    Chiplet redraw-until-different uses two resamples instead of an
+    unbounded loop (residual collision probability ~ (1/80)^3); rows whose
+    candidate fails validity keep the incumbent (the batched rendering of
+    the scalar retry loop)."""
+    import jax
+    import jax.numpy as jnp
+
+    C = cfg.C
+    P = v.shape[0]
+    slot = jnp.arange(C, dtype=jnp.int32)
+    # one threefry pass supplies every draw of the sweep: row i is the
+    # i-th logical random stream (uniform ints come from floor(u * m))
+    U = jax.random.uniform(key, (31 + C, P), dtype=jnp.float64)
+
+    def uni(i):
+        return U[i]
+
+    def ri(i, maxv):
+        return jnp.floor(U[i] * maxv).astype(jnp.int32)
+
+    n = v[:, COL_N]
+    style = v[:, COL_STYLE]
+    mem = v[:, COL_MEM]
+    order = v[:, COL_ORDER]
+    df = v[:, COL_DATAFLOW]
+    sk = v[:, COL_SPLITK]
+    p25 = v[:, COL_PAIR25]
+    p3 = v[:, COL_PAIR3]
+    stck = v[:, COL_STACK]
+    chip = v[:, COL_CHIP:COL_CHIP + 3 * C].reshape(P, C, 3)
+
+    # -- application level: dataflow | split-K | order ----------------------
+    which = ri(0, 3)
+    cand_app = (
+        v.at[:, COL_DATAFLOW].set(
+            jnp.where(which == 0, (df + 1 + ri(1, 2)) % 3, df))
+        .at[:, COL_SPLITK].set(jnp.where(which == 1, 1 - sk, sk))
+        .at[:, COL_ORDER].set(jnp.where(which == 2, 1 - order, order)))
+
+    # -- memory move --------------------------------------------------------
+    cand_mem = v.at[:, COL_MEM].set((mem + 1 + ri(2, cfg.M - 1)) % cfg.M)
+
+    # -- chiplet replacement ------------------------------------------------
+    def draw_chiplet(ia, it, iu):
+        a = ri(ia, cfg.A)
+        t = ri(it, cfg.T_nodes)
+        s = jnp.floor(uni(iu)
+                      * tb["n_sram"][a].astype(jnp.float64)).astype(jnp.int32)
+        return jnp.stack([a, t, s], axis=1)
+
+    r_rep = jnp.floor(uni(3) * n.astype(jnp.float64)).astype(jnp.int32)
+    old = jnp.take_along_axis(
+        chip, jnp.broadcast_to(r_rep[:, None, None], (P, 1, 3)),
+        axis=1)[:, 0]
+    new = draw_chiplet(4, 5, 6)
+    for ia, it, iu in ((7, 8, 9), (10, 11, 12)):
+        new = jnp.where(jnp.all(new == old, axis=1)[:, None],
+                        draw_chiplet(ia, it, iu), new)
+    chip_rep = jnp.where(slot[None, :, None] == r_rep[:, None, None],
+                         new[:, None, :], chip)
+    cand_rep = v.at[:, COL_CHIP:].set(
+        chip_rep.reshape(P, -1).astype(jnp.int32))
+
+    # -- chip-architecture: grow / shrink + dynamic HI-type repair ----------
+    dlt = jnp.where(uni(13) < 0.5, -1, 1).astype(jnp.int32)
+    n2a = jnp.clip(n + dlt, 1, C)
+    n2 = jnp.where(n2a == n, jnp.clip(n - dlt, 1, C), n2a)
+    grow = n2 > n
+    r_del = jnp.floor(uni(14) * n.astype(jnp.float64)).astype(jnp.int32)
+    idx_shift = jnp.minimum(
+        slot[None, :] + (slot[None, :] >= r_del[:, None]), C - 1)
+    chip_shr = jnp.take_along_axis(
+        chip, jnp.broadcast_to(idx_shift[:, :, None], (P, C, 3)), axis=1)
+    chip_grow = jnp.where(slot[None, :, None] == n[:, None, None],
+                          draw_chiplet(15, 16, 17)[:, None, :], chip)
+    chip_gs = jnp.where(grow[:, None, None], chip_grow, chip_shr)
+    chip_gs = jnp.where((slot[None, :] < n2[:, None])[:, :, None],
+                        chip_gs, -1)
+    style2 = jnp.where(
+        n2 == 1, S_2D,
+        jnp.where((n2 == 2) & (style == S_HYBRID), S_3D,
+                  jnp.where((n2 >= 2) & (style == S_2D), S_25D, style)))
+    need25 = (style2 == S_25D) | (style2 == S_HYBRID)
+    need3 = (style2 == S_3D) | (style2 == S_HYBRID)
+    pkg_d = ri(18, cfg.n_pkg25)
+    pr_d = jnp.floor(
+        uni(19) * tb["p25_cnt"][pkg_d].astype(jnp.float64)).astype(jnp.int32)
+    pair25_draw = tb["p25_flat"][tb["p25_off"][pkg_d] + pr_d]
+    pair3_draw = tb["pair3_of_pkg"][ri(20, cfg.n_pkg3)]
+    p25_2 = jnp.where(need25, jnp.where(p25 < 0, pair25_draw, p25), -1)
+    p3_2 = jnp.where(need3, jnp.where(p3 < 0, pair3_draw, p3), -1)
+    keep = stck & (jnp.left_shift(1, n2) - 1)
+    pc = _popcount(keep, C)
+    bad = (pc < 2) | (pc >= n2)
+    size = jnp.where(
+        n2 > 2,
+        2 + jnp.floor(uni(21)
+                      * (n2 - 2).astype(jnp.float64)).astype(jnp.int32), 2)
+    scores = jnp.where(slot[None, :] < n2[:, None],
+                       U[31:31 + C].T, jnp.inf)
+    rank = jnp.argsort(jnp.argsort(scores, axis=1), axis=1)
+    mask_new = jnp.sum(
+        (rank < size[:, None]).astype(jnp.int32) << slot[None, :], axis=1)
+    stack2 = jnp.where(style2 == S_HYBRID,
+                       jnp.where(bad, mask_new, keep), 0)
+    head = jnp.stack([n2, style2, mem, order, df, sk, p25_2, p3_2, stack2],
+                     axis=1)
+    cand_gs = jnp.concatenate(
+        [head, chip_gs.reshape(P, -1)], axis=1).astype(jnp.int32)
+
+    # -- package level ------------------------------------------------------
+    cur_pkg25 = tb["pair25_pkg"][jnp.maximum(p25, 0)]
+    new_pkg25 = (cur_pkg25 + 1 + ri(23, cfg.n_pkg25 - 1)) % cfg.n_pkg25
+    kept = tb["pair25_by_pkg_proto"][new_pkg25,
+                                     tb["pair25_proto"][jnp.maximum(p25, 0)]]
+    cnt_np = tb["p25_cnt"][new_pkg25]
+    rnd_pair = tb["p25_flat"][
+        tb["p25_off"][new_pkg25]
+        + jnp.floor(uni(24) * cnt_np.astype(jnp.float64)).astype(jnp.int32)]
+    pkg25_res = jnp.where(kept >= 0, kept, rnd_pair)
+    cnt_cur = tb["p25_cnt"][cur_pkg25]
+    others = cnt_cur - 1
+    loc = tb["pair25_local"][jnp.maximum(p25, 0)]
+    j_o = jnp.floor(
+        uni(25) * jnp.maximum(others, 1).astype(jnp.float64)
+    ).astype(jnp.int32)
+    proto25_res = tb["p25_flat"][
+        tb["p25_off"][cur_pkg25]
+        + (loc + 1 + j_o) % jnp.maximum(cnt_cur, 1)]
+    cur_pkg3 = tb["pair3_pkg"][jnp.maximum(p3, 0)]
+    pkg3_res = tb["pair3_of_pkg"][
+        (cur_pkg3 + 1 + ri(26, cfg.n_pkg3 - 1)) % cfg.n_pkg3]
+    n_opts = jnp.where(style == S_25D, 2,
+                       jnp.where(style == S_HYBRID, 3, 1))
+    pick = jnp.floor(uni(27) * n_opts.astype(jnp.float64)).astype(jnp.int32)
+    has_plane = (style == S_25D) | (style == S_HYBRID)
+    sel_pkg25 = has_plane & (pick == 0)
+    sel_proto25 = has_plane & (pick == 1) & (others > 0)
+    sel_pkg3 = (style == S_3D) | ((style == S_HYBRID) & (pick == 2))
+    cand_pkg = (
+        v.at[:, COL_PAIR25].set(
+            jnp.where(sel_pkg25, pkg25_res,
+                      jnp.where(sel_proto25, proto25_res, p25)))
+        .at[:, COL_PAIR3].set(jnp.where(sel_pkg3, pkg3_res, p3)))
+
+    # -- hierarchical branch selection + validity gate ----------------------
+    is_app = uni(28) < P_APPLICATION
+    level = ri(29, 3)
+    coin = uni(30)
+    cand = jnp.where(
+        is_app[:, None], cand_app,
+        jnp.where((level == 0)[:, None],
+                  jnp.where((coin < 0.5)[:, None], cand_gs, cand_mem),
+                  jnp.where((level == 1)[:, None], cand_rep, cand_pkg)))
+    ok = _validity_jax(cand, tb, cfg)
+    return jnp.where(ok[:, None], cand, v).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# The device evaluator + lax.scan tempering engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DevicePTResult:
+    """Output of the fused parallel-tempering scan."""
+
+    best_enc: np.ndarray          # encoded best row
+    best_cost: float
+    history: List[float]          # [initial best] + coldest-chain per sweep
+    evaluations: int
+    final_enc: np.ndarray         # [n_chains, width] final population
+    final_costs: np.ndarray
+    trace: Optional[Dict[str, np.ndarray]] = None
+
+
+def _resolve_pallas(use_pallas: Optional[bool]) -> bool:
+    if use_pallas is not None:
+        return use_pallas
+    env = os.environ.get("REPRO_PATHFINDER_PALLAS", "auto").lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
+class DeviceEvaluator:
+    """Jit-compiled fused evaluate+cost + scan engine for one workload.
+
+    Reuses the host :class:`~repro.pathfinding.batch.BatchEvaluator`'s
+    numpy tables (chiplet physicals, tile prefix sums, package info) and
+    re-expresses stages 2-3 as a single jitted XLA program.
+    """
+
+    def __init__(self, wl: GEMMWorkload, db: TechDB = DEFAULT_DB,
+                 tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
+                 space: Optional[DesignSpace] = None,
+                 use_pallas: Optional[bool] = None):
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        self.wl, self.db, self.tile_sizes = wl, db, tile_sizes
+        host = get_evaluator(wl, db, tile_sizes, space)
+        self.host = host
+        self.space = host.space
+        sp = self.space
+        use_pallas = _resolve_pallas(use_pallas)
+        self.cfg = _Cfg(
+            C=sp.max_chiplets, W=sp.width, A=len(sp.arrays),
+            T_nodes=len(sp.nodes), S=int(sp.n_sram.max()),
+            M=len(sp.memories), n_pairs25=len(sp.pairs_25d),
+            n_pairs3=len(sp.pairs_3d),
+            n_pkg25=len(sp.pkg25_pairs), n_pkg3=len(sp.pkg3_pairs),
+            L=sp.max_chiplets * (sp.max_chiplets - 1) // 2
+            + sp.max_chiplets - 1,
+            T0=host.tiles[0]["T"], T1=host.tiles[1]["T"],
+            wr_bits=float(wl.M * wl.N * OPERAND_BYTES * 8),
+            acost=db.assembly_cost,
+            substrate_cost_mm2=db.substrate_cost_mm2,
+            substrate_cfp_mm2=db.substrate_cfp_mm2,
+            interposer_cpa=db.interposer_cpa,
+            interposer_defect=db.interposer_defect,
+            interposer_wafer_cost=db.interposer_wafer_cost,
+            yield_alpha=db.yield_alpha,
+            wafer_diameter_mm=db.wafer_diameter_mm,
+            carbon_intensity=db.carbon_intensity,
+            lifetime_years=db.lifetime_years,
+            use_fraction=db.use_fraction,
+            duty_runs_per_s=db.duty_runs_per_s,
+            use_pallas=use_pallas,
+        )
+        mt = sp.move_tables()
+        with enable_x64():
+            tb = dict(
+                # per-chiplet physicals / node rates / memory energies are
+                # stacked along a trailing axis: one gather per site
+                chiplet=jnp.asarray(np.stack(
+                    [host.t_area, host.t_static, host.t_cost, host.t_mfg],
+                    axis=-1)),
+                node=jnp.asarray(np.stack(
+                    [host.t_freq, host.t_sram_e, host.t_mac_e, host.t_des],
+                    axis=-1)),
+                mem3=jnp.asarray(np.stack(
+                    [host.m_rd, host.m_wr, host.m_cost], axis=-1)),
+                t_power=jnp.asarray(host.t_power),
+                m_bw=jnp.asarray(host.m_bw),
+                p25=jnp.asarray([i[:7] for i in host.p25_info]),
+                p25_interp=jnp.asarray([i[7] for i in host.p25_info]),
+                p3=jnp.asarray([i[:7] for i in host.p3_info]),
+                # [A, S, 3, T+1, 5]: the 5 sim metrics ride in the
+                # trailing axis so one gather fetches all of them
+                pref0=jnp.asarray(np.stack(
+                    [host.tiles[0]["pref"][f] for f in _SIM_METRICS],
+                    axis=-1)),
+                pref1=jnp.asarray(np.stack(
+                    [host.tiles[1]["pref"][f] for f in _SIM_METRICS],
+                    axis=-1)),
+                mn0=jnp.asarray(host.tiles[0]["mn_pref"]),
+                mn1=jnp.asarray(host.tiles[1]["mn_pref"]),
+                n_sram=jnp.asarray(sp.n_sram),
+                **{k: jnp.asarray(a) for k, a in mt.items()},
+            )
+            if use_pallas:
+                # flattened [(A*S*3), T+1] float64 copies for the kernel
+                # (prefix magnitudes < 2^53, so float64 is exact)
+                for sk, name in ((0, "pref0_flat"), (1, "pref1_flat")):
+                    pref = np.stack(
+                        [host.tiles[sk]["pref"][f] for f in _SIM_METRICS])
+                    tb[name] = jnp.asarray(
+                        pref.reshape(len(_SIM_METRICS), -1,
+                                     pref.shape[-1]).astype(np.float64))
+        self.tables = tb
+        cfg = self.cfg
+        # donate the padded population buffer (no-op on CPU, where XLA
+        # cannot reuse host-backed int buffers and would warn)
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        self._eval_cost_jit = jax.jit(
+            lambda v, mins, med, w: _eval_cost_jax(v, mins, med, w, tb, cfg),
+            donate_argnums=donate)
+        self._propose_jit = jax.jit(
+            lambda key, v: _propose_jax(key, v, tb, cfg))
+        self._pt_cache: Dict[tuple, object] = {}
+
+    # -- bucketed fused evaluation -----------------------------------------
+
+    @staticmethod
+    def _pad(encoded: np.ndarray) -> Tuple[np.ndarray, int]:
+        v = np.atleast_2d(np.asarray(encoded, dtype=np.int32))
+        n_real = v.shape[0]
+        bucket = max(64, 1 << (n_real - 1).bit_length())
+        if bucket != n_real:
+            v = np.vstack(
+                [v, np.zeros((bucket - n_real, v.shape[1]), dtype=v.dtype)])
+        return v, n_real
+
+    def evaluate_cost(self, encoded: np.ndarray, norm: Normalizer,
+                      template: Template
+                      ) -> Tuple[MetricsBatch, np.ndarray]:
+        """Fused metrics + Eq. 17 cost for an encoded population.
+
+        Pads to a power-of-two bucket (>= 64) so repeated calls of any
+        size reuse a handful of compiled programs; the padded buffer is
+        donated to the program."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            v, n_real = self._pad(encoded)
+            mins, medians = norm.weights_arrays()
+            mets, cost = self._eval_cost_jit(
+                jnp.asarray(v), jnp.asarray(mins), jnp.asarray(medians),
+                jnp.asarray(np.asarray(template.weights, dtype=np.float64)))
+            arrs = [np.asarray(m)[:n_real] for m in mets]
+            return MetricsBatch(*arrs), np.asarray(cost)[:n_real]
+
+    def metrics(self, encoded: np.ndarray) -> MetricsBatch:
+        """Raw metrics through the jitted path (identity normalizer)."""
+        from repro.core.templates import IDENTITY_NORMALIZER, TEMPLATES
+
+        return self.evaluate_cost(encoded, IDENTITY_NORMALIZER,
+                                  TEMPLATES["T1"])[0]
+
+    def propose(self, encoded: np.ndarray, seed: int = 0) -> np.ndarray:
+        """One vectorized hierarchical move per row (valid rows only)."""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            v = np.atleast_2d(np.asarray(encoded, dtype=np.int32))
+            out = self._propose_jit(jax.random.PRNGKey(seed),
+                                    jnp.asarray(v))
+            return np.asarray(out)
+
+    # -- the fused tempering engine ----------------------------------------
+
+    def _pt_fn(self, n: int, sweeps: int, swap_every: int,
+               record_trace: bool):
+        key_t = (n, sweeps, swap_every, record_trace)
+        fn = self._pt_cache.get(key_t)
+        if fn is not None:
+            return fn
+        import jax
+        import jax.numpy as jnp
+
+        tb, cfg = self.tables, self.cfg
+
+        def run(v0, temps, key, mins, med, w):
+            _, cost0 = _eval_cost_jax(v0, mins, med, w, tb, cfg)
+            bi = jnp.argmin(cost0)
+            inv_t = 1.0 / temps
+
+            def body(carry, sweep):
+                v, costs, best_v, best_c, key = carry
+                key, kp, ka, ksw = jax.random.split(key, 4)
+                prop = _propose_jax(kp, v, tb, cfg)
+                _, pcost = _eval_cost_jax(prop, mins, med, w, tb, cfg)
+                u = jax.random.uniform(ka, (n,), dtype=jnp.float64)
+                delta = pcost - costs
+                accept = (delta <= 0) | (
+                    u < jnp.exp(-delta / jnp.maximum(temps, 1e-12)))
+                v = jnp.where(accept[:, None], prop, v)
+                costs = jnp.where(accept, pcost, costs)
+                acc = jnp.where(accept, pcost, jnp.inf)
+                i = jnp.argmin(acc)
+                better = acc[i] < best_c
+                best_c = jnp.where(better, acc[i], best_c)
+                best_v = jnp.where(better, prop[i], best_v)
+                us = jax.random.uniform(ksw, (max(n - 1, 1),),
+                                        dtype=jnp.float64)
+                do_swap = (sweep % swap_every) == 0
+
+                def ex_body(j, vc):
+                    vv, cc = vc
+                    ci, cj = cc[j], cc[j + 1]
+                    d = (inv_t[j] - inv_t[j + 1]) * (ci - cj)
+                    # d >= 0 short-circuits in the host loop, so only
+                    # exp of non-positive d is ever compared
+                    sw = (d >= 0) | (us[j] < jnp.exp(jnp.minimum(d, 0.0)))
+                    cc = cc.at[j].set(jnp.where(sw, cj, ci)) \
+                           .at[j + 1].set(jnp.where(sw, ci, cj))
+                    vi, vj = vv[j], vv[j + 1]
+                    vv = vv.at[j].set(jnp.where(sw, vj, vi)) \
+                           .at[j + 1].set(jnp.where(sw, vi, vj))
+                    return (vv, cc)
+
+                v, costs = jax.lax.cond(
+                    do_swap,
+                    lambda vc: jax.lax.fori_loop(0, n - 1, ex_body, vc),
+                    lambda vc: vc, (v, costs))
+                ys = (costs[-1], best_c)
+                if record_trace:
+                    ys = ys + (prop, pcost, u, us, accept, costs)
+                return (v, costs, best_v, best_c, key), ys
+
+            carry, ys = jax.lax.scan(
+                body, (v0, cost0, v0[bi], cost0[bi], key),
+                jnp.arange(sweeps))
+            return carry, ys, cost0
+
+        fn = jax.jit(run)
+        self._pt_cache[key_t] = fn
+        return fn
+
+    def parallel_tempering(self, v0: np.ndarray, temps, sweeps: int,
+                           swap_every: int, seed: int, norm: Normalizer,
+                           template: Template,
+                           record_trace: bool = False) -> DevicePTResult:
+        """Run the fused propose/evaluate/accept/exchange scan.
+
+        ``v0`` is the encoded seed population (one row per chain, coldest
+        chain last as in the host strategy); ``temps`` the matching
+        temperature ladder. Python is re-entered only after all sweeps."""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            v0 = np.atleast_2d(np.asarray(v0, dtype=np.int32))
+            n = v0.shape[0]
+            sweeps = int(sweeps)
+            fn = self._pt_fn(n, sweeps, int(swap_every), bool(record_trace))
+            mins, medians = norm.weights_arrays()
+            carry, ys, cost0 = fn(
+                jnp.asarray(v0), jnp.asarray(np.asarray(temps, np.float64)),
+                jax.random.PRNGKey(seed), jnp.asarray(mins),
+                jnp.asarray(medians),
+                jnp.asarray(np.asarray(template.weights, np.float64)))
+            v_fin, costs_fin, best_v, best_c, _ = carry
+            coldest, best_hist = ys[0], ys[1]
+            history = ([float(np.min(np.asarray(cost0)))]
+                       + np.asarray(coldest).tolist())
+            trace = None
+            if record_trace:
+                trace = dict(
+                    proposals=np.asarray(ys[2]),
+                    proposal_costs=np.asarray(ys[3]),
+                    u_accept=np.asarray(ys[4]),
+                    u_swap=np.asarray(ys[5]),
+                    accepted=np.asarray(ys[6]),
+                    costs=np.asarray(ys[7]),
+                    initial_costs=np.asarray(cost0),
+                    best_per_sweep=np.asarray(best_hist),
+                )
+            return DevicePTResult(
+                best_enc=np.asarray(best_v), best_cost=float(best_c),
+                history=history, evaluations=n + n * sweeps,
+                final_enc=np.asarray(v_fin),
+                final_costs=np.asarray(costs_fin), trace=trace)
+
+
+# ---------------------------------------------------------------------------
+# module-level evaluator cache + functional entry points
+# ---------------------------------------------------------------------------
+
+_DEVICE_EVALUATORS: Dict[tuple, Tuple[TechDB, DeviceEvaluator]] = {}
+_DEVICE_EVALUATOR_CACHE_MAX = 8
+
+
+def get_device_evaluator(wl: GEMMWorkload, db: TechDB = DEFAULT_DB,
+                         tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
+                         space: Optional[DesignSpace] = None
+                         ) -> DeviceEvaluator:
+    """Cached :class:`DeviceEvaluator` (jit warmup is expensive — share
+    one per (workload, db, tiles, chiplet bound) like ``get_evaluator``).
+
+    The resolved Pallas setting is part of the key, so flipping
+    ``REPRO_PATHFINDER_PALLAS`` mid-process builds a fresh evaluator
+    instead of silently returning the cached other-path one."""
+    from repro.pathfinding.batch import cached_evaluator, evaluator_cache_key
+
+    use_pallas = _resolve_pallas(None)
+    key = evaluator_cache_key(wl, db, tile_sizes, space) + (use_pallas,)
+    return cached_evaluator(
+        _DEVICE_EVALUATORS, key, db,
+        lambda: DeviceEvaluator(wl, db, tile_sizes, space, use_pallas),
+        _DEVICE_EVALUATOR_CACHE_MAX)
+
+
+def evaluate_batch_device(encoded: np.ndarray, wl: GEMMWorkload,
+                          db: TechDB = DEFAULT_DB,
+                          tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
+                          space: Optional[DesignSpace] = None
+                          ) -> MetricsBatch:
+    """Jitted counterpart of :func:`repro.pathfinding.evaluate_batch`."""
+    return get_device_evaluator(wl, db, tile_sizes, space).metrics(encoded)
+
+
+def propose_batch(encoded: np.ndarray, wl: GEMMWorkload,
+                  db: TechDB = DEFAULT_DB,
+                  space: Optional[DesignSpace] = None,
+                  seed: int = 0) -> np.ndarray:
+    """Vectorized hierarchical moves over encoded rows (see
+    :func:`_propose_jax`); invalid candidates keep the incumbent row."""
+    return get_device_evaluator(wl, db, space=space).propose(encoded, seed)

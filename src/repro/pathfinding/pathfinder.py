@@ -61,7 +61,13 @@ class Pathfinder:
                  norm: Optional[Normalizer] = None,
                  cache: Optional[SimCache] = None,
                  max_chiplets: int = 6,
-                 space: Optional[DesignSpace] = None):
+                 space: Optional[DesignSpace] = None,
+                 device: bool = True):
+        """``device=True`` (default) routes batched strategies through the
+        jitted fused evaluator + lax.scan tempering engine of
+        :mod:`repro.pathfinding.device`. It only takes effect for the
+        CarbonPATH backend — scalar-only backends (e.g. ``chipletgym``)
+        always use the host fallback, as does ``device=False``."""
         self.wl = wl
         self.template = (TEMPLATES[template] if isinstance(template, str)
                          else template)
@@ -72,6 +78,7 @@ class Pathfinder:
         else:
             self.evaluate_fn = OBJECTIVES[objective]
         self.batched = self.evaluate_fn is evaluate
+        self.device = bool(device) and self.batched
         self.cache = cache if cache is not None else SimCache()
         self._norm = norm
 
@@ -123,12 +130,14 @@ class Pathfinder:
                                   space=self.space)
         obj = Objective(self.wl, self.template,
                         self._norm or IDENTITY_NORMALIZER, self.db,
-                        self.evaluate_fn, self.cache, self.batched)
+                        self.evaluate_fn, self.cache, self.batched,
+                        self.device)
         return obj.evaluate_encoded(encoded, self.space)
 
     def objective(self) -> Objective:
         return Objective(self.wl, self.template, self.norm, self.db,
-                         self.evaluate_fn, self.cache, self.batched)
+                         self.evaluate_fn, self.cache, self.batched,
+                         self.device)
 
     # -- search -------------------------------------------------------------
 

@@ -35,6 +35,7 @@ from repro.core.techdb import (
     INTEGRATION_STYLES,
     PKG_PROTOCOLS_25D,
     PKG_PROTOCOLS_3D,
+    PROTOCOLS_25D,
     TechDB,
     valid_pairs_25d,
     valid_pairs_3d,
@@ -91,6 +92,63 @@ class DesignSpace:
         set_(self, "pkg3_pairs",
              tuple(tuple(self.pair3_index[(pkg, pr)] for pr in protos)
                    for pkg, protos in PKG_PROTOCOLS_3D.items()))
+
+    # -- flat lookup tables for vectorized (device) hierarchical moves ------
+
+    def move_tables(self) -> dict:
+        """Flat ``int32`` tables that let :mod:`repro.pathfinding.device`
+        mirror the hierarchical package/protocol draws of
+        :func:`repro.core.sa.propose` with pure gathers:
+
+        * ``p25_off``/``p25_cnt``/``p25_flat`` — CSR layout of pair-25D ids
+          grouped by package (draw a package uniformly, then a protocol
+          uniformly within it);
+        * ``pair25_pkg``/``pair25_local``/``pair25_proto`` — reverse maps
+          from a pair id to its package, its position within the package
+          and its global protocol index;
+        * ``pair25_by_pkg_proto`` — pair id for (package, protocol) or -1
+          when incompatible (the "keep the protocol if the new package
+          supports it" rule of ``_move_package``);
+        * ``pair3_pkg``/``pair3_of_pkg`` — the 3D equivalents (every 3D
+          package carries exactly UCIe-3D).
+        """
+        cached = getattr(self, "_move_tables", None)
+        if cached is not None:
+            return cached
+        n25 = len(self.pairs_25d)
+        pair_pkg = np.empty(n25, dtype=np.int32)
+        pair_local = np.empty(n25, dtype=np.int32)
+        pair_proto = np.empty(n25, dtype=np.int32)
+        by_pkg_proto = np.full(
+            (len(PKG_PROTOCOLS_25D), len(PROTOCOLS_25D)), -1, dtype=np.int32)
+        off, cnt, flat = [0], [], []
+        for pi, (pkg, protos) in enumerate(PKG_PROTOCOLS_25D.items()):
+            for li, proto in enumerate(protos):
+                pid = self.pair25_index[(pkg, proto)]
+                gp = PROTOCOLS_25D.index(proto)
+                pair_pkg[pid] = pi
+                pair_local[pid] = li
+                pair_proto[pid] = gp
+                by_pkg_proto[pi, gp] = pid
+                flat.append(pid)
+            cnt.append(len(protos))
+            off.append(len(flat))
+        pair3_pkg = np.empty(len(self.pairs_3d), dtype=np.int32)
+        pair3_of_pkg = np.empty(len(PKG_PROTOCOLS_3D), dtype=np.int32)
+        for pi, pkg in enumerate(PKG_PROTOCOLS_3D):
+            pid = self.pair3_index[(pkg, "UCIe-3D")]
+            pair3_pkg[pid] = pi
+            pair3_of_pkg[pi] = pid
+        tables = dict(
+            p25_off=np.asarray(off, dtype=np.int32),
+            p25_cnt=np.asarray(cnt, dtype=np.int32),
+            p25_flat=np.asarray(flat, dtype=np.int32),
+            pair25_pkg=pair_pkg, pair25_local=pair_local,
+            pair25_proto=pair_proto, pair25_by_pkg_proto=by_pkg_proto,
+            pair3_pkg=pair3_pkg, pair3_of_pkg=pair3_of_pkg,
+        )
+        object.__setattr__(self, "_move_tables", tables)
+        return tables
 
     # -- geometry -----------------------------------------------------------
 

@@ -73,10 +73,22 @@ class Objective:
     # None -> derived: only the CarbonPATH scalar reference has a
     # parity-guaranteed batched twin; every other backend falls back
     batched: Optional[bool] = None
+    # None -> follows ``batched``: the jitted device evaluator is the
+    # same CarbonPATH math, so any batched-capable objective can use it
+    device: Optional[bool] = None
 
     def __post_init__(self):
         if self.batched is None:
             self.batched = self.evaluate_fn is evaluate
+        if self.device is None:
+            self.device = self.batched
+        self.device = self.device and self.batched
+        # hoisted out of cost_batch: the dict -> array restacking ran on
+        # every sweep
+        mins, medians = self.norm.weights_arrays()
+        self._cost_mins = mins
+        self._cost_medians = medians
+        self._cost_w = np.asarray(self.template.weights, dtype=np.float64)
 
     def evaluate(self, sys: HISystem) -> Metrics:
         return self.evaluate_fn(sys, self.wl, self.db, cache=self.cache)
@@ -95,11 +107,23 @@ class Objective:
             f.name: np.array([getattr(m, f.name) for m in ms])
             for f in dataclasses.fields(MetricsBatch)})
 
+    def eval_cost_encoded(self, encoded: np.ndarray, space: DesignSpace
+                          ) -> Tuple[MetricsBatch, np.ndarray]:
+        """Metrics + Eq. 17 cost in one call. On the device path this is
+        a single fused jitted program (metrics never leave the device
+        between evaluation and cost)."""
+        if self.device:
+            from repro.pathfinding.device import get_device_evaluator
+
+            dev = get_device_evaluator(self.wl, self.db, space=space)
+            return dev.evaluate_cost(encoded, self.norm, self.template)
+        mb = self.evaluate_encoded(encoded, space)
+        return mb, self.cost_batch(mb)
+
     def cost_batch(self, mb: MetricsBatch) -> np.ndarray:
-        mins, medians = self.norm.weights_arrays()
-        w = np.asarray(self.template.weights)
         x = np.stack([mb.fields()[f] for f in METRIC_FIELDS], axis=1)
-        return ((x - mins) / medians * w).sum(axis=1)
+        return ((x - self._cost_mins) / self._cost_medians
+                * self._cost_w).sum(axis=1)
 
 
 class SearchStrategy(Protocol):
@@ -179,9 +203,17 @@ class SimulatedAnnealing:
 class ParallelTempering:
     """N simultaneous SA chains on a geometric temperature ladder. Every
     sweep proposes one hierarchical move per chain and evaluates all
-    candidates in a single ``evaluate_batch`` call; every ``swap_every``
-    sweeps adjacent-temperature replicas attempt a Metropolis exchange,
-    letting hot chains tunnel solutions down to cold ones."""
+    candidates in a single batched call; every ``swap_every`` sweeps
+    adjacent-temperature replicas attempt a Metropolis exchange, letting
+    hot chains tunnel solutions down to cold ones.
+
+    With a device-capable objective (``Pathfinder(device=True)``, the
+    default for the CarbonPATH backend) the whole sweep loop — propose,
+    evaluate, Metropolis accept, replica exchange — runs as one fused
+    ``jax.lax.scan`` on the device (:mod:`repro.pathfinding.device`);
+    Python is only re-entered at the end for history/best decode. The
+    host path below is preserved as the scalar fallback and as the
+    replayable reference."""
 
     n_chains: int = 8
     t_max: float = 4000.0
@@ -205,6 +237,9 @@ class ParallelTempering:
 
         chains = [random_system(rng, db, space.max_chiplets)
                   for _ in range(n)]
+        if objective.device:
+            return self._search_device(space, objective, budget, key,
+                                       chains, temps)
         mb = objective.evaluate_encoded(space.encode_many(chains), space)
         costs = objective.cost_batch(mb).tolist()
         evals = n
@@ -234,6 +269,34 @@ class ParallelTempering:
                 _replica_exchange(temps, chains, costs, rng)
             history.append(costs[-1])  # coldest chain
         return SearchResult(best, best_m, best_c, history, evals,
+                            objective.cache)
+
+    def _search_device(self, space: DesignSpace, objective: Objective,
+                       budget: Optional[int], key: Optional[int],
+                       chains, temps) -> SearchResult:
+        """The fused lax.scan path. Proposals come from the device move
+        generator (same hierarchical distribution, jax.random stream), so
+        trajectories are deterministic per key but differ from the host
+        Python-RNG path; with a budget, only whole sweeps run (search
+        evaluations stay <= budget). Re-materializing the winner's
+        Metrics costs one scalar evaluation of an already-searched row
+        (through the shared SimCache, outside the budget accounting)."""
+        from repro.pathfinding.device import get_device_evaluator
+
+        n = len(chains)
+        dev = get_device_evaluator(objective.wl, objective.db, space=space)
+        sweeps = self.sweeps
+        if budget is not None:
+            sweeps = min(sweeps, max(0, budget - n) // n)
+        res = dev.parallel_tempering(
+            space.encode_many(chains), np.asarray(temps), sweeps,
+            self.swap_every, seed=0 if key is None else key,
+            norm=objective.norm, template=objective.template)
+        best = space.decode(res.best_enc)
+        # one scalar evaluation beats paying a fresh bucket compile of
+        # the fused evaluator just to materialize the winning row
+        return SearchResult(best, objective.evaluate(best),
+                            res.best_cost, res.history, res.evaluations,
                             objective.cache)
 
 
@@ -276,8 +339,7 @@ class RandomSearch:
         while evals < budget:
             k = min(self.batch_size, budget - evals)
             enc = space.sample(k, key=rng)
-            mb = objective.evaluate_encoded(enc, space)
-            costs = objective.cost_batch(mb)
+            mb, costs = objective.eval_cost_encoded(enc, space)
             evals += k
             i = int(np.argmin(costs))
             if costs[i] < best_c:
@@ -327,8 +389,7 @@ class GridSweep:
         if budget is not None:
             systems = systems[:budget]
         enc = space.encode_many(systems)
-        mb = objective.evaluate_encoded(enc, space)
-        costs = objective.cost_batch(mb)
+        mb, costs = objective.eval_cost_encoded(enc, space)
         i = int(np.argmin(costs))
         running = np.minimum.accumulate(costs)
         return SearchResult(systems[i], mb.row(i), float(costs[i]),

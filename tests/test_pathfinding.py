@@ -118,6 +118,30 @@ def test_metrics_batch_row_matches_scalar_type():
         evaluate(sys, wl).total_cfp, rel=1e-6)
 
 
+def test_metrics_batch_row_integers_exact():
+    """Regression: ``row()`` used ``int()`` on the float64 ``d2d_bits`` /
+    ``macs`` arrays, which truncates an epsilon-below value to the wrong
+    integer. The batched integers must equal the scalar ones exactly."""
+    wl = workload(2)
+    rng = random.Random(77)
+    systems = [random_system(rng) for _ in range(60)]
+    mb = evaluate_batch(SPACE.encode_many(systems), wl, space=SPACE)
+    for i, sys in enumerate(systems):
+        m = evaluate(sys, wl)
+        r = mb.row(i)
+        assert r.d2d_bits == m.d2d_bits
+        assert r.macs == m.macs
+    # synthetic epsilon-below float: round-trips to the true integer
+    import dataclasses as _dc
+    import numpy as np
+    fields = {f.name: np.array([1.0]) for f in _dc.fields(mb)}
+    fields["d2d_bits"] = np.array([41.999999999999996])
+    fields["macs"] = np.array([7.000000000000001])
+    from repro.pathfinding import MetricsBatch
+    r = MetricsBatch(**fields).row(0)
+    assert r.d2d_bits == 42 and r.macs == 7
+
+
 # ---------------------------------------------------------------------------
 # Normalizer: true median (regression for the len//2 bug) + batched fit
 # ---------------------------------------------------------------------------
