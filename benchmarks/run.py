@@ -28,6 +28,7 @@ from benchmarks import (
     fig11_perfsi_cost_scatter,
     fig12_perfsi_mapping,
     fig13_cfp_vs_cost,
+    pareto_frontier,
     pathfinder_batch,
     pathfinder_device,
     roofline,
@@ -50,6 +51,7 @@ ALL = [
     ("roofline", roofline),
     ("pathfinder_batch", pathfinder_batch),
     ("pathfinder_device", pathfinder_device),
+    ("pareto_frontier", pareto_frontier),
 ]
 
 OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")

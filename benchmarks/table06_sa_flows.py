@@ -43,7 +43,9 @@ def run(out=print, full: bool = False) -> str:
 
     def compute():
         rows = []
-        sa = SimulatedAnnealing(cfg)
+        # frontier collection off: the table compares scalar SA flows and
+        # never reads the archive
+        sa = SimulatedAnnealing(cfg, frontier_size=0)
         for wl_idx in range(1, 7):
             wl = workload(wl_idx)
             pf = Pathfinder(wl, TEMPLATES["T1"], cache=cache)

@@ -62,6 +62,29 @@ class SAResult:
 
 
 # ---------------------------------------------------------------------------
+# Multi-objective cost vector (the Fig. 13 / Pareto axes)
+# ---------------------------------------------------------------------------
+
+# The three trade-off axes the paper's frontier figures plot: performance
+# (latency), system cost (dollars) and carbon footprint (embodied +
+# operational). Every scalarized Eq. 17 cost collapses these; the Pareto
+# machinery in :mod:`repro.pathfinding.pareto` keeps them separate.
+OBJECTIVE_AXES: Tuple[str, str, str] = ("latency_s", "dollar", "total_cfp")
+
+
+def cost_vector(m: Metrics) -> Tuple[float, float, float]:
+    """Per-axis ``(latency_s, dollar, total_cfp)`` objective vector.
+
+    The scalar reference for the batched/device renderings
+    (:meth:`repro.pathfinding.Objective.cost_vector_batch` and the fused
+    jit program in :mod:`repro.pathfinding.device`): all three must agree
+    within 1e-6 relative. All axes are *minimized*; unlike the Eq. 17
+    scalar cost the vector is unnormalized (raw metric units), so
+    frontiers are comparable across normalizers and templates."""
+    return (m.latency_s, m.dollar, m.total_cfp)
+
+
+# ---------------------------------------------------------------------------
 # Random valid system generation
 # ---------------------------------------------------------------------------
 
@@ -311,6 +334,9 @@ def anneal(
                               cfg.max_chiplets)
     pf = Pathfinder(wl, template, db=db, objective=evaluate_fn, norm=norm,
                     cache=cache, max_chiplets=cfg.max_chiplets)
-    res = pf.search(strategy=SimulatedAnnealing(cfg, initial=initial))
+    # SAResult has no frontier field, so collecting one here would be
+    # pure per-move overhead (and would dilute cache-speedup ratios)
+    res = pf.search(strategy=SimulatedAnnealing(cfg, initial=initial,
+                                                frontier_size=0))
     return SAResult(res.best, res.best_metrics, res.best_cost, res.history,
                     res.evaluations, cache)

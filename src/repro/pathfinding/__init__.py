@@ -6,8 +6,14 @@ The public exploration surface of the repo: an encoded design space
 :func:`repro.core.evaluate.evaluate`), a device-resident engine
 (:mod:`repro.pathfinding.device`: jitted fused evaluate+cost, vectorized
 hierarchical moves, and a ``lax.scan`` parallel-tempering loop — the
-default for batched strategies via ``Pathfinder(device=True)``) and
-pluggable search strategies behind the :class:`Pathfinder` facade.
+default for batched strategies via ``Pathfinder(device=True)``),
+pluggable search strategies behind the :class:`Pathfinder` facade, and
+first-class multi-objective frontiers (:mod:`repro.pathfinding.pareto`:
+a bounded :class:`ParetoArchive` over the ``(latency, dollar,
+total_cfp)`` axes fed by every strategy through
+``SearchResult.frontier``, plus :class:`ScalarizationSweep` /
+:class:`ScenarioSweep` for frontier mapping across weight directions,
+deployment regions and workloads).
 
 Quickstart::
 
@@ -38,6 +44,17 @@ from repro.pathfinding.device import (
     get_device_evaluator,
     propose_batch,
 )
+from repro.pathfinding.pareto import (
+    ParetoArchive,
+    ScalarizationSweep,
+    ScenarioSweep,
+    crowding_distance,
+    hypervolume,
+    non_dominated_mask,
+    non_dominated_mask_jnp,
+    simplex_directions,
+    workloads_from_configs,
+)
 from repro.pathfinding.pathfinder import OBJECTIVES, Pathfinder
 from repro.pathfinding.space import DesignSpace
 from repro.pathfinding.strategies import (
@@ -55,5 +72,8 @@ __all__ = [
     "evaluate_batch_device", "fit_normalizer_batched", "get_device_evaluator",
     "get_evaluator", "propose_batch", "OBJECTIVES", "Pathfinder",
     "DesignSpace", "GridSweep", "Objective", "ParallelTempering",
-    "RandomSearch", "SearchResult", "SearchStrategy", "SimulatedAnnealing",
+    "ParetoArchive", "RandomSearch", "ScalarizationSweep", "ScenarioSweep",
+    "SearchResult", "SearchStrategy", "SimulatedAnnealing",
+    "crowding_distance", "hypervolume", "non_dominated_mask",
+    "non_dominated_mask_jnp", "simplex_directions", "workloads_from_configs",
 ]

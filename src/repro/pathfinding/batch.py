@@ -96,6 +96,15 @@ class MetricsBatch:
             "emb_cfp_kg": self.emb_cfp_kg, "ope_cfp_kg": self.ope_cfp_kg,
         }
 
+    def objective_vectors(self) -> np.ndarray:
+        """``[P, 3]`` multi-objective vectors in
+        :data:`repro.core.sa.OBJECTIVE_AXES` order ``(latency_s, dollar,
+        total_cfp)`` — the Pareto-archive input."""
+        return np.stack(
+            [np.asarray(self.latency_s, dtype=np.float64),
+             np.asarray(self.dollar, dtype=np.float64),
+             np.asarray(self.total_cfp, dtype=np.float64)], axis=1)
+
     def row(self, i: int) -> Metrics:
         return Metrics(
             latency_s=float(self.latency_s[i]),

@@ -625,14 +625,21 @@ def _nb_yield(area, d0: float, alpha: float):
 
 
 def _eval_cost_jax(v, mins, medians, w, tb, cfg: _Cfg):
-    """Fused metrics + Eq. 17 cost (METRIC_FIELDS column order)."""
+    """Fused metrics + Eq. 17 cost (METRIC_FIELDS column order) + the
+    ``OBJECTIVE_AXES`` vector ``(latency_s, dollar, total_cfp)``.
+
+    ``w`` is either a single ``[6]`` weight row or a per-row ``[P, 6]``
+    matrix (the scalarization-sweep case: every chain scalarizes with
+    its own direction inside the same program)."""
     import jax.numpy as jnp
 
     mets = _metrics_jax(v, tb, cfg)
     x = jnp.stack([mets[1], mets[2], mets[0], mets[3], mets[4], mets[5]],
                   axis=1)
-    cost = ((x - mins[None, :]) / medians[None, :] * w[None, :]).sum(axis=1)
-    return mets, cost
+    cost = ((x - mins[None, :]) / medians[None, :]
+            * jnp.atleast_2d(w)).sum(axis=1)
+    vec = jnp.stack([mets[0], mets[3], mets[4] + mets[5]], axis=1)
+    return mets, cost, vec
 
 
 # ---------------------------------------------------------------------------
@@ -853,6 +860,10 @@ class DevicePTResult:
     final_enc: np.ndarray         # [n_chains, width] final population
     final_costs: np.ndarray
     trace: Optional[Dict[str, np.ndarray]] = None
+    # every evaluated design + its OBJECTIVE_AXES vector (seed population
+    # first): enc [1 + sweeps, n, width], vec [1 + sweeps, n, 3] — the
+    # Pareto archive's input
+    samples: Optional[Dict[str, np.ndarray]] = None
 
 
 def _resolve_pallas(use_pallas: Optional[bool]) -> bool:
@@ -989,14 +1000,27 @@ class DeviceEvaluator:
         import jax.numpy as jnp
         from jax.experimental import enable_x64
 
+        mb, cost, _ = self.evaluate_cost_vector(encoded, norm, template)
+        return mb, cost
+
+    def evaluate_cost_vector(self, encoded: np.ndarray, norm: Normalizer,
+                             template: Template
+                             ) -> Tuple[MetricsBatch, np.ndarray,
+                                        np.ndarray]:
+        """Fused metrics + cost + ``(latency, dollar, total_cfp)`` vectors
+        — all three outputs of one jitted program."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
         with enable_x64():
             v, n_real = self._pad(encoded)
             mins, medians = norm.weights_arrays()
-            mets, cost = self._eval_cost_jit(
+            mets, cost, vec = self._eval_cost_jit(
                 jnp.asarray(v), jnp.asarray(mins), jnp.asarray(medians),
                 jnp.asarray(np.asarray(template.weights, dtype=np.float64)))
             arrs = [np.asarray(m)[:n_real] for m in mets]
-            return MetricsBatch(*arrs), np.asarray(cost)[:n_real]
+            return (MetricsBatch(*arrs), np.asarray(cost)[:n_real],
+                    np.asarray(vec)[:n_real])
 
     def metrics(self, encoded: np.ndarray) -> MetricsBatch:
         """Raw metrics through the jitted path (identity normalizer)."""
@@ -1020,8 +1044,8 @@ class DeviceEvaluator:
     # -- the fused tempering engine ----------------------------------------
 
     def _pt_fn(self, n: int, sweeps: int, swap_every: int,
-               record_trace: bool):
-        key_t = (n, sweeps, swap_every, record_trace)
+               record_trace: bool, collect_samples: bool):
+        key_t = (n, sweeps, swap_every, record_trace, collect_samples)
         fn = self._pt_cache.get(key_t)
         if fn is not None:
             return fn
@@ -1030,8 +1054,8 @@ class DeviceEvaluator:
 
         tb, cfg = self.tables, self.cfg
 
-        def run(v0, temps, key, mins, med, w):
-            _, cost0 = _eval_cost_jax(v0, mins, med, w, tb, cfg)
+        def run(v0, temps, key, mins, med, w, pair_ok):
+            _, cost0, vec0 = _eval_cost_jax(v0, mins, med, w, tb, cfg)
             bi = jnp.argmin(cost0)
             inv_t = 1.0 / temps
 
@@ -1039,7 +1063,7 @@ class DeviceEvaluator:
                 v, costs, best_v, best_c, key = carry
                 key, kp, ka, ksw = jax.random.split(key, 4)
                 prop = _propose_jax(kp, v, tb, cfg)
-                _, pcost = _eval_cost_jax(prop, mins, med, w, tb, cfg)
+                _, pcost, pvec = _eval_cost_jax(prop, mins, med, w, tb, cfg)
                 u = jax.random.uniform(ka, (n,), dtype=jnp.float64)
                 delta = pcost - costs
                 accept = (delta <= 0) | (
@@ -1060,8 +1084,11 @@ class DeviceEvaluator:
                     ci, cj = cc[j], cc[j + 1]
                     d = (inv_t[j] - inv_t[j + 1]) * (ci - cj)
                     # d >= 0 short-circuits in the host loop, so only
-                    # exp of non-positive d is ever compared
-                    sw = (d >= 0) | (us[j] < jnp.exp(jnp.minimum(d, 0.0)))
+                    # exp of non-positive d is ever compared; pair_ok
+                    # gates swaps across independent ladders (the
+                    # scalarization sweep's direction boundaries)
+                    sw = pair_ok[j] & (
+                        (d >= 0) | (us[j] < jnp.exp(jnp.minimum(d, 0.0))))
                     cc = cc.at[j].set(jnp.where(sw, cj, ci)) \
                            .at[j + 1].set(jnp.where(sw, ci, cj))
                     vi, vj = vv[j], vv[j + 1]
@@ -1074,6 +1101,8 @@ class DeviceEvaluator:
                     lambda vc: jax.lax.fori_loop(0, n - 1, ex_body, vc),
                     lambda vc: vc, (v, costs))
                 ys = (costs[-1], best_c)
+                if collect_samples:
+                    ys = ys + (prop, pvec)
                 if record_trace:
                     ys = ys + (prop, pcost, u, us, accept, costs)
                 return (v, costs, best_v, best_c, key), ys
@@ -1081,7 +1110,7 @@ class DeviceEvaluator:
             carry, ys = jax.lax.scan(
                 body, (v0, cost0, v0[bi], cost0[bi], key),
                 jnp.arange(sweeps))
-            return carry, ys, cost0
+            return carry, ys, cost0, vec0
 
         fn = jax.jit(run)
         self._pt_cache[key_t] = fn
@@ -1090,12 +1119,24 @@ class DeviceEvaluator:
     def parallel_tempering(self, v0: np.ndarray, temps, sweeps: int,
                            swap_every: int, seed: int, norm: Normalizer,
                            template: Template,
-                           record_trace: bool = False) -> DevicePTResult:
+                           record_trace: bool = False,
+                           weights: Optional[np.ndarray] = None,
+                           pair_mask: Optional[np.ndarray] = None,
+                           collect_samples: bool = True) -> DevicePTResult:
         """Run the fused propose/evaluate/accept/exchange scan.
 
         ``v0`` is the encoded seed population (one row per chain, coldest
         chain last as in the host strategy); ``temps`` the matching
-        temperature ladder. Python is re-entered only after all sweeps."""
+        temperature ladder. Python is re-entered only after all sweeps.
+
+        ``weights`` (``[n, 6]``) gives every chain its own Eq. 17
+        scalarization row (default: ``template.weights`` for all) and
+        ``pair_mask`` (``[max(n-1, 1)]`` bool) disables replica exchange
+        across selected adjacent pairs — together they run K independent
+        scalarization ladders in one program (the
+        :class:`~repro.pathfinding.pareto.ScalarizationSweep` engine).
+        ``collect_samples`` returns every evaluated design + its
+        objective vector in ``.samples`` for Pareto-archive feeding."""
         import jax
         import jax.numpy as jnp
         from jax.experimental import enable_x64
@@ -1104,26 +1145,50 @@ class DeviceEvaluator:
             v0 = np.atleast_2d(np.asarray(v0, dtype=np.int32))
             n = v0.shape[0]
             sweeps = int(sweeps)
-            fn = self._pt_fn(n, sweeps, int(swap_every), bool(record_trace))
+            fn = self._pt_fn(n, sweeps, int(swap_every), bool(record_trace),
+                             bool(collect_samples))
             mins, medians = norm.weights_arrays()
-            carry, ys, cost0 = fn(
+            if weights is None:
+                w = np.tile(np.asarray(template.weights, np.float64), (n, 1))
+            else:
+                w = np.asarray(weights, np.float64)
+                if w.shape != (n, 6):
+                    raise ValueError(
+                        f"weights must be [{n}, 6], got {w.shape}")
+            if pair_mask is None:
+                pair_ok = np.ones(max(n - 1, 1), dtype=bool)
+            else:
+                pair_ok = np.asarray(pair_mask, dtype=bool)
+                if pair_ok.shape != (max(n - 1, 1),):
+                    raise ValueError(
+                        f"pair_mask must be [{max(n - 1, 1)}], "
+                        f"got {pair_ok.shape}")
+            carry, ys, cost0, vec0 = fn(
                 jnp.asarray(v0), jnp.asarray(np.asarray(temps, np.float64)),
                 jax.random.PRNGKey(seed), jnp.asarray(mins),
-                jnp.asarray(medians),
-                jnp.asarray(np.asarray(template.weights, np.float64)))
+                jnp.asarray(medians), jnp.asarray(w), jnp.asarray(pair_ok))
             v_fin, costs_fin, best_v, best_c, _ = carry
             coldest, best_hist = ys[0], ys[1]
             history = ([float(np.min(np.asarray(cost0)))]
                        + np.asarray(coldest).tolist())
+            off = 2
+            samples = None
+            if collect_samples:
+                samples = dict(
+                    enc=np.concatenate(
+                        [np.asarray(v0)[None], np.asarray(ys[off])]),
+                    vec=np.concatenate(
+                        [np.asarray(vec0)[None], np.asarray(ys[off + 1])]))
+                off += 2
             trace = None
             if record_trace:
                 trace = dict(
-                    proposals=np.asarray(ys[2]),
-                    proposal_costs=np.asarray(ys[3]),
-                    u_accept=np.asarray(ys[4]),
-                    u_swap=np.asarray(ys[5]),
-                    accepted=np.asarray(ys[6]),
-                    costs=np.asarray(ys[7]),
+                    proposals=np.asarray(ys[off]),
+                    proposal_costs=np.asarray(ys[off + 1]),
+                    u_accept=np.asarray(ys[off + 2]),
+                    u_swap=np.asarray(ys[off + 3]),
+                    accepted=np.asarray(ys[off + 4]),
+                    costs=np.asarray(ys[off + 5]),
                     initial_costs=np.asarray(cost0),
                     best_per_sweep=np.asarray(best_hist),
                 )
@@ -1131,7 +1196,8 @@ class DeviceEvaluator:
                 best_enc=np.asarray(best_v), best_cost=float(best_c),
                 history=history, evaluations=n + n * sweeps,
                 final_enc=np.asarray(v_fin),
-                final_costs=np.asarray(costs_fin), trace=trace)
+                final_costs=np.asarray(costs_fin), trace=trace,
+                samples=samples)
 
 
 # ---------------------------------------------------------------------------

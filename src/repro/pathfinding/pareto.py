@@ -1,0 +1,648 @@
+"""Pareto-frontier pathfinding: multi-objective archive + frontier sweeps.
+
+CarbonPATH's central claim is the *trade-off* between performance, cost
+and carbon — not any single scalarization of it. This module makes the
+frontier a first-class search output instead of an ad-hoc rescan:
+
+* :func:`non_dominated_mask` / :func:`non_dominated_mask_jnp` — exact
+  host reference and vectorized ``jax.numpy`` renderings of the
+  non-dominated (minimization) filter. Both use exact float comparisons,
+  so they agree *exactly* on any input (asserted over 1k random fronts by
+  ``benchmarks/pareto_frontier.py``).
+* :class:`ParetoArchive` — a bounded archive of non-dominated
+  ``(encoded design, objective vector)`` pairs over the
+  :data:`repro.core.sa.OBJECTIVE_AXES` axes ``(latency_s, dollar,
+  total_cfp)``. Inserts are chunked (pairwise filtering stays cheap),
+  storage order is canonical (lexicographic), duplicates are dropped, and
+  the archive is pruned to ``max_size`` by NSGA-II crowding distance —
+  all deterministic, so inserting an archive into itself is a no-op.
+* :func:`hypervolume` — exact 2-D/3-D dominated hypervolume w.r.t. a
+  reference point (the frontier-quality scalar the benchmark tracks
+  against evaluation budget).
+* :class:`ScalarizationSweep` — K scalarization directions x N
+  parallel-tempering chains in **one** batched device program: per-chain
+  Eq. 17 weight rows and a replica-exchange pair mask keep each
+  direction's temperature ladder independent inside a single fused
+  ``lax.scan`` (reusing the PR-2 engine). Every evaluation feeds the
+  archive, so one call maps the frontier.
+* :class:`ScenarioSweep` — the deployment axis: the same frontier sweep
+  repeated over a grid of ``TechDB.carbon_intensity`` values (regions)
+  and multiple workloads (Table IV GEMMs or MLP GEMMs derived from
+  ``repro/configs`` model configs via :func:`workloads_from_configs`).
+
+Every search strategy now returns its archive through
+``SearchResult.frontier``::
+
+    from repro.core import TEMPLATES, workload
+    from repro.pathfinding import Pathfinder, ScalarizationSweep
+
+    pf = Pathfinder(workload(1), TEMPLATES["T1"])
+    res = pf.search(ScalarizationSweep(directions=16, n_chains=4,
+                                       sweeps=60))
+    lat, cost, cfp = res.frontier.vectors.T     # the Pareto points
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.sa import OBJECTIVE_AXES, random_system
+from repro.core.techdb import DEFAULT_DB, TechDB
+from repro.core.templates import TEMPLATES, Template
+from repro.core.workload import GEMMWorkload
+from repro.pathfinding.space import DesignSpace
+
+N_AXES = len(OBJECTIVE_AXES)
+
+# pairwise-filter block size: chunked inserts keep the O(n^2) dominance
+# comparison bounded at (chunk + max_size)^2 regardless of how many
+# samples a sweep feeds in; total work scales as n_samples * chunk, so
+# smaller chunks are *cheaper* for bulk feeds (each chunk is pre-filtered
+# on its own before the merge — search batches are mostly dominated)
+_INSERT_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# Non-dominated filtering: exact host reference + vectorized jnp rendering
+# ---------------------------------------------------------------------------
+
+
+def non_dominated_mask(points: np.ndarray) -> np.ndarray:
+    """Exact host reference: boolean mask of non-dominated rows.
+
+    Minimization on every axis. Row ``j`` is dominated iff some row ``i``
+    is <= on all axes and < on at least one; exact duplicates do not
+    dominate each other (both survive — dedup is the archive's job)."""
+    p = np.atleast_2d(np.asarray(points, dtype=np.float64))
+    if p.shape[0] == 0:
+        return np.zeros(0, dtype=bool)
+    le = np.all(p[:, None, :] <= p[None, :, :], axis=2)   # i <= j per pair
+    lt = np.any(p[:, None, :] < p[None, :, :], axis=2)    # i < j somewhere
+    return ~(le & lt).any(axis=0)
+
+
+def non_dominated_mask_jnp(points) -> np.ndarray:
+    """Vectorized ``jax.numpy`` non-dominated filter.
+
+    Same exact comparisons as :func:`non_dominated_mask` (float64 under
+    ``enable_x64``), so the two agree bit-for-bit on any front. Supports
+    leading batch dimensions: ``[..., n, d] -> [..., n]``."""
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        p = jnp.asarray(np.asarray(points, dtype=np.float64))
+        if p.shape[-2] == 0:
+            return np.zeros(p.shape[:-1], dtype=bool)
+        le = jnp.all(p[..., :, None, :] <= p[..., None, :, :], axis=-1)
+        lt = jnp.any(p[..., :, None, :] < p[..., None, :, :], axis=-1)
+        return np.asarray(~jnp.any(le & lt, axis=-2))
+
+
+def crowding_distance(points: np.ndarray) -> np.ndarray:
+    """NSGA-II crowding distance per row (boundary rows get ``inf``).
+
+    Deterministic: per-axis sorting is stable, so exact ties contribute
+    identically regardless of input order."""
+    p = np.atleast_2d(np.asarray(points, dtype=np.float64))
+    n, d = p.shape
+    dist = np.zeros(n)
+    if n <= 2:
+        return np.full(n, np.inf)
+    for a in range(d):
+        order = np.argsort(p[:, a], kind="stable")
+        v = p[order, a]
+        span = v[-1] - v[0]
+        dist[order[0]] = dist[order[-1]] = np.inf
+        if span > 0:
+            gaps = (v[2:] - v[:-2]) / span
+            np.add.at(dist, order[1:-1], gaps)
+    return dist
+
+
+def hypervolume(points: np.ndarray, ref: Sequence[float]) -> float:
+    """Exact dominated hypervolume (minimization) w.r.t. ``ref``.
+
+    Supports 1/2/3 objectives — 3-D uses slicing along the last axis
+    (each z-slab contributes its active points' 2-D area). Points not
+    strictly better than ``ref`` on every axis contribute nothing."""
+    p = np.atleast_2d(np.asarray(points, dtype=np.float64))
+    r = np.asarray(ref, dtype=np.float64)
+    if p.shape[0] == 0:
+        return 0.0
+    p = p[np.all(p < r, axis=1)]
+    if p.shape[0] == 0:
+        return 0.0
+    d = p.shape[1]
+    if d == 1:
+        return float(r[0] - p[:, 0].min())
+    if d == 2:
+        return _hv2(p, r)
+    if d == 3:
+        order = np.argsort(p[:, 2], kind="stable")
+        p = p[order]
+        zs = np.unique(p[:, 2])
+        uppers = np.append(zs[1:], r[2])
+        hv = 0.0
+        for z, hi in zip(zs, uppers):
+            hv += _hv2(p[p[:, 2] <= z, :2], r[:2]) * (hi - z)
+        return float(hv)
+    raise NotImplementedError(f"hypervolume supports <= 3 axes, got {d}")
+
+
+def _hv2(p: np.ndarray, r: np.ndarray) -> float:
+    """2-D dominated area: sweep x ascending with a falling y staircase."""
+    p = p[np.lexsort((p[:, 1], p[:, 0]))]
+    hv, y_best = 0.0, r[1]
+    for x, y in p:
+        if y < y_best:
+            hv += (r[0] - x) * (y_best - y)
+            y_best = y
+    return float(hv)
+
+
+def simplex_directions(k: int, d: int = N_AXES) -> np.ndarray:
+    """``k`` deterministic weight directions on the ``d``-simplex.
+
+    Simplex-lattice design: the smallest resolution ``H`` whose lattice
+    has >= ``k`` points, thinned to exactly ``k`` by even index spacing
+    (lexicographic order), so every call with the same ``k`` returns the
+    same spread — corners (single-objective directions) always included."""
+    if k < 1:
+        raise ValueError(f"need k >= 1 directions, got {k}")
+    h = 1
+    while _lattice_size(h, d) < k:
+        h += 1
+    grid = np.array([c for c in _lattice(h, d)], dtype=np.float64) / h
+    idx = np.unique(np.round(np.linspace(0, len(grid) - 1, k)).astype(int))
+    # rounding collisions can drop below k: backfill with unused indices
+    if len(idx) < k:
+        unused = np.setdiff1d(np.arange(len(grid)), idx)
+        idx = np.sort(np.concatenate([idx, unused[:k - len(idx)]]))
+    return grid[idx]
+
+
+def _lattice_size(h: int, d: int) -> int:
+    from math import comb
+
+    return comb(h + d - 1, d - 1)
+
+
+def _lattice(h: int, d: int):
+    if d == 1:
+        yield (h,)
+        return
+    for i in range(h + 1):
+        for rest in _lattice(h - i, d - 1):
+            yield (i,) + rest
+
+
+# ---------------------------------------------------------------------------
+# The archive
+# ---------------------------------------------------------------------------
+
+
+class ParetoArchive:
+    """Bounded deterministic archive of non-dominated designs.
+
+    Stores ``(encoded row, objective vector)`` pairs; every insert
+    re-filters to the non-dominated set (``backend="jnp"`` uses the
+    vectorized filter, ``"numpy"`` the exact host reference — they agree
+    exactly), drops duplicate rows, prunes to ``max_size`` by largest
+    crowding distance (stable index tie-break) and canonicalizes storage
+    to lexicographic ``(vector, encoding)`` order.
+
+    Determinism: the same insert sequence always yields the identical
+    archive, re-inserting the archive into itself is a no-op, and while
+    the bound is not hit the contents are independent of insertion order
+    entirely. Once crowding pruning engages, chunked feeds may retain a
+    (deterministic) subset that differs from a single-shot insert —
+    pruning is greedy and pruned points cannot return."""
+
+    def __init__(self, max_size: int = 256, n_axes: int = N_AXES,
+                 width: Optional[int] = None, backend: str = "numpy"):
+        if max_size < 1:
+            raise ValueError(f"max_size must be >= 1, got {max_size}")
+        if backend not in ("numpy", "jnp"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.max_size = max_size
+        self.n_axes = n_axes
+        self.backend = backend
+        self._vec = np.zeros((0, n_axes), dtype=np.float64)
+        self._enc = np.zeros((0, 0 if width is None else width),
+                             dtype=np.int32)
+
+    # -- views --------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return self._vec.shape[0]
+
+    def __repr__(self) -> str:
+        return (f"ParetoArchive(size={len(self)}/{self.max_size}, "
+                f"axes={OBJECTIVE_AXES[:self.n_axes]})")
+
+    @property
+    def vectors(self) -> np.ndarray:
+        """``[m, n_axes]`` objective vectors, canonical order."""
+        return self._vec.copy()
+
+    @property
+    def encoded(self) -> np.ndarray:
+        """``[m, width]`` encoded design rows, canonical order."""
+        return self._enc.copy()
+
+    def systems(self, space: DesignSpace) -> List:
+        return space.decode_many(self._enc)
+
+    # -- mutation -----------------------------------------------------------
+
+    def insert(self, encoded: np.ndarray, vectors: np.ndarray) -> int:
+        """Insert a batch; returns the archive size afterwards."""
+        enc = np.atleast_2d(np.asarray(encoded, dtype=np.int32))
+        vec = np.atleast_2d(np.asarray(vectors, dtype=np.float64))
+        if enc.shape[0] != vec.shape[0]:
+            raise ValueError(
+                f"{enc.shape[0]} encodings vs {vec.shape[0]} vectors")
+        if vec.shape[1] != self.n_axes:
+            raise ValueError(
+                f"expected {self.n_axes} axes, got {vec.shape[1]}")
+        if self._enc.shape[1] == 0 and enc.shape[1] > 0:
+            self._enc = np.zeros((0, enc.shape[1]), dtype=np.int32)
+        if enc.shape[1] != self._enc.shape[1]:
+            raise ValueError(
+                f"row width {enc.shape[1]} != archive {self._enc.shape[1]}")
+        for lo in range(0, enc.shape[0], _INSERT_CHUNK):
+            self._insert_chunk(enc[lo:lo + _INSERT_CHUNK],
+                               vec[lo:lo + _INSERT_CHUNK])
+        return len(self)
+
+    def merge(self, other: "ParetoArchive") -> int:
+        return self.insert(other._enc, other._vec)
+
+    def _insert_chunk(self, enc: np.ndarray, vec: np.ndarray) -> None:
+        if vec.shape[0] > 64:
+            # pre-reduce the incoming block alone: dominated rows can
+            # never enter the archive, and dropping them first keeps the
+            # merge pairwise tiny
+            pre = (non_dominated_mask_jnp(vec) if self.backend == "jnp"
+                   else non_dominated_mask(vec))
+            enc, vec = enc[pre], vec[pre]
+        all_enc = np.vstack([self._enc, enc])
+        all_vec = np.vstack([self._vec, vec])
+        # canonical order + exact-duplicate dedup in one pass (int32
+        # encodings are exact in float64, so the combined key is lossless)
+        key = np.hstack([all_vec, all_enc.astype(np.float64)])
+        # np.unique returns first-occurrence indices in sorted-key order:
+        # dedup + canonical lexicographic order in one pass
+        _, uniq = np.unique(key, axis=0, return_index=True)
+        all_enc, all_vec = all_enc[uniq], all_vec[uniq]
+        mask = (non_dominated_mask_jnp(all_vec) if self.backend == "jnp"
+                else non_dominated_mask(all_vec))
+        all_enc, all_vec = all_enc[mask], all_vec[mask]
+        if all_vec.shape[0] > self.max_size:
+            cd = crowding_distance(all_vec)
+            keep = np.argsort(-cd, kind="stable")[:self.max_size]
+            keep.sort()
+            all_enc, all_vec = all_enc[keep], all_vec[keep]
+        self._enc, self._vec = all_enc, all_vec
+
+    # -- analysis -----------------------------------------------------------
+
+    def reference_point(self, margin: float = 0.1) -> np.ndarray:
+        """Nadir + ``margin`` * range per axis (a usable default HV ref)."""
+        if len(self) == 0:
+            return np.ones(self.n_axes)
+        lo, hi = self._vec.min(axis=0), self._vec.max(axis=0)
+        span = np.where(hi > lo, hi - lo, np.maximum(np.abs(hi), 1.0))
+        return hi + margin * span
+
+    def hypervolume(self, ref: Optional[Sequence[float]] = None) -> float:
+        return hypervolume(self._vec,
+                           self.reference_point() if ref is None else ref)
+
+    def project(self, axes: Sequence[int]) -> np.ndarray:
+        """Re-filtered 2-D (or 1-D) front over a subset of axes — e.g.
+        ``project((1, 2))`` is the Fig. 13 CFP-vs-cost frontier."""
+        sub = self._vec[:, list(axes)]
+        return sub[non_dominated_mask(sub)]
+
+
+class FrontierFeed:
+    """Buffered (encoded, vector) accumulator in front of an archive.
+
+    Scalar strategies evaluate one candidate at a time; inserting rows
+    singly would re-run the dominance filter per evaluation. The feed
+    buffers rows and flushes in blocks. ``size=0`` disables collection
+    (``archive`` stays ``None``)."""
+
+    def __init__(self, size: int = 256, chunk: int = 512):
+        self.archive = ParetoArchive(max_size=size) if size > 0 else None
+        self._enc: List[np.ndarray] = []
+        self._vec: List[np.ndarray] = []
+        self._chunk = chunk
+        self._pending = 0
+
+    def add(self, encoded: np.ndarray, vectors: np.ndarray) -> None:
+        if self.archive is None:
+            return
+        enc = np.atleast_2d(np.asarray(encoded, dtype=np.int32))
+        self._enc.append(enc)
+        self._vec.append(np.atleast_2d(np.asarray(vectors)))
+        self._pending += enc.shape[0]
+        if self._pending >= self._chunk:
+            self._flush()
+
+    def _flush(self) -> None:
+        if self._pending:
+            self.archive.insert(np.vstack(self._enc), np.vstack(self._vec))
+            self._enc, self._vec, self._pending = [], [], 0
+
+    def done(self) -> Optional[ParetoArchive]:
+        if self.archive is not None:
+            self._flush()
+        return self.archive
+
+
+# ---------------------------------------------------------------------------
+# ScalarizationSweep: K directions x N chains in one device program
+# ---------------------------------------------------------------------------
+
+
+def directions_to_weights(w3: np.ndarray) -> np.ndarray:
+    """Map ``[K, 3]`` (latency, cost, CFP) simplex directions to ``[K, 6]``
+    Eq. 17 weight rows (METRIC_FIELDS order): latency -> gamma, dollar ->
+    theta, and the CFP weight applied in full to *both* zeta (embodied)
+    and eta (operational) — total CFP is their sum, so weighting each
+    component by the full direction weight scalarizes ``w * total_cfp``;
+    energy/area weights stay 0 so the scalarization moves only along the
+    frontier axes."""
+    w3 = np.atleast_2d(np.asarray(w3, dtype=np.float64))
+    w6 = np.zeros((w3.shape[0], 6))
+    w6[:, 2] = w3[:, 0]            # gamma: latency_s
+    w6[:, 3] = w3[:, 1]            # theta: dollar
+    w6[:, 4] = w3[:, 2]            # zeta: emb_cfp_kg
+    w6[:, 5] = w3[:, 2]            # eta:  ope_cfp_kg
+    return w6
+
+
+@dataclasses.dataclass
+class ScalarizationSweep:
+    """K scalarization directions x N tempering chains, one fused scan.
+
+    Each direction is an Eq. 17 weight row (from
+    :func:`simplex_directions` over the latency/cost/CFP axes, or
+    ``weights`` for custom rows); each runs its own ``n_chains``-wide
+    geometric temperature ladder. On a device-capable objective all
+    ``K * N`` chains advance in a single ``lax.scan`` — per-chain weight
+    rows ride through the fused evaluate+cost program, and the
+    replica-exchange pair mask blocks swaps across direction boundaries,
+    so ladders stay independent without leaving the device. Every
+    proposal (plus the seed population) feeds the returned
+    ``SearchResult.frontier`` archive.
+
+    ``budget`` caps total evaluations: sweeps are truncated to whole
+    multiples of ``K * N``. The scalar/host fallback runs one
+    :class:`~repro.pathfinding.strategies.ParallelTempering` per
+    direction and merges the frontiers.
+
+    Unlike the single-objective strategies, ``frontier_size=0`` is
+    rejected here: the frontier archive *is* this strategy's output
+    (``best`` is re-derived from it)."""
+
+    directions: int = 16
+    n_chains: int = 4
+    sweeps: int = 100
+    swap_every: int = 5
+    # Eq. 17 costs are O(1) after min/median normalization, so the sweep
+    # ladder defaults to an *exploitative* range (the SA schedule's 4000
+    # top is for cooling to 1e-3 over thousands of moves; at a fixed hot
+    # ladder every chain is a pure random walk and the scalarization
+    # directions never bite)
+    t_max: float = 5.0
+    t_min: float = 0.005
+    frontier_size: int = 256
+    weights: Optional[np.ndarray] = None   # [K, 6] override
+
+    def weight_rows(self) -> np.ndarray:
+        if self.weights is not None:
+            w = np.atleast_2d(np.asarray(self.weights, dtype=np.float64))
+            if w.shape[1] != 6:
+                raise ValueError(f"weights must be [K, 6], got {w.shape}")
+            return w
+        return directions_to_weights(simplex_directions(self.directions))
+
+    def search(self, space: DesignSpace, objective, budget=None, key=None):
+        from repro.pathfinding.strategies import (
+            ParallelTempering,
+            SearchResult,
+            _check_budget,
+        )
+
+        _check_budget(budget)
+        if self.frontier_size < 1:
+            raise ValueError(
+                "ScalarizationSweep requires frontier_size >= 1: the "
+                "frontier archive is the strategy's output (best is "
+                f"re-derived from it), got {self.frontier_size}")
+        w6 = self.weight_rows()
+        k, n = w6.shape[0], self.n_chains
+        total = k * n
+        sweeps = self.sweeps
+        if budget is not None:
+            if budget < total:
+                raise ValueError(
+                    f"budget {budget} < one chain population {total} "
+                    f"({k} directions x {n} chains)")
+            sweeps = min(sweeps, (budget - total) // total)
+        ratio = (self.t_min / self.t_max) ** (1.0 / max(1, n - 1))
+        ladder = [self.t_max * ratio ** i for i in range(n)]
+
+        if objective.device:
+            return self._search_device(space, objective, w6, ladder,
+                                       sweeps, key)
+
+        # host fallback: one PT run per direction, frontiers merged
+        archive = ParetoArchive(max_size=self.frontier_size)
+        evals = 0
+        history: List[float] = []
+        base = 0 if key is None else key
+        for i in range(k):
+            obj_i = dataclasses.replace(
+                objective,
+                template=Template(f"dir{i}", *w6[i]))
+            pt = ParallelTempering(
+                n_chains=n, t_max=self.t_max, t_min=self.t_min,
+                sweeps=sweeps, swap_every=self.swap_every,
+                frontier_size=self.frontier_size)
+            res = pt.search(space, obj_i, None, key=base * 7919 + i)
+            evals += res.evaluations
+            history.append(res.best_cost)
+            if res.frontier is not None:
+                archive.merge(res.frontier)
+        return self._finalize(space, objective, archive, history, evals)
+
+    def _search_device(self, space: DesignSpace, objective, w6, ladder,
+                       sweeps: int, key):
+        from repro.pathfinding.device import get_device_evaluator
+        from repro.pathfinding.strategies import SearchResult  # noqa: F401
+
+        k, n = w6.shape[0], self.n_chains
+        total = k * n
+        rng = random.Random(0 if key is None else key)
+        chains = [random_system(rng, objective.db, space.max_chiplets)
+                  for _ in range(total)]
+        temps = np.tile(np.asarray(ladder, dtype=np.float64), k)
+        weights = np.repeat(w6, n, axis=0)                    # [K*N, 6]
+        # block replica exchange across direction boundaries: pair (j,
+        # j+1) may swap only when both chains share a direction
+        pair_ok = (np.arange(total - 1) + 1) % n != 0 if total > 1 \
+            else np.ones(1, dtype=bool)
+        dev = get_device_evaluator(objective.wl, objective.db, space=space)
+        res = dev.parallel_tempering(
+            space.encode_many(chains), temps, sweeps, self.swap_every,
+            seed=0 if key is None else key, norm=objective.norm,
+            template=objective.template, weights=weights,
+            pair_mask=np.asarray(pair_ok, dtype=bool))
+        archive = ParetoArchive(max_size=self.frontier_size)
+        if res.samples is not None:
+            archive.insert(res.samples["enc"].reshape(-1, space.width),
+                           res.samples["vec"].reshape(-1, N_AXES))
+        return self._finalize(space, objective, archive,
+                              res.history, res.evaluations)
+
+    def _finalize(self, space, objective, archive, history, evals):
+        """Best-by-template from the archive (one batched re-evaluation of
+        <= max_size frontier rows — not counted against the budget, like
+        the PT winner re-materialization)."""
+        from repro.pathfinding.strategies import SearchResult
+
+        if len(archive) == 0:
+            raise RuntimeError("scalarization sweep produced no samples")
+        mb, cost = objective.eval_cost_encoded(archive.encoded, space)
+        i = int(np.argmin(cost))
+        best = space.decode(archive.encoded[i])
+        return SearchResult(best, mb.row(i), float(cost[i]),
+                            list(history), evals, objective.cache,
+                            frontier=archive)
+
+
+# ---------------------------------------------------------------------------
+# ScenarioSweep: frontier x deployment region x workload
+# ---------------------------------------------------------------------------
+
+# representative grid carbon intensities, kg CO2 / kWh (world-average
+# default matches techdb.CARBON_INTENSITY_KG_PER_KWH)
+REGION_INTENSITIES: Dict[str, float] = {
+    "hydro": 0.024,        # e.g. NO/IS grids
+    "nuclear-heavy": 0.085,
+    "eu-avg": 0.276,
+    "world-avg": 0.475,
+    "coal-heavy": 0.820,
+}
+
+
+def workloads_from_configs(names: Sequence[str],
+                           tokens: int = 512) -> List[GEMMWorkload]:
+    """MLP up-projection GEMMs (``tokens x d_model x d_ff``) for model
+    configs from :mod:`repro.configs` — the dominant GEMM shape of each
+    architecture, usable anywhere a Table IV workload is."""
+    from repro.configs import get_config
+
+    out = []
+    for name in names:
+        cfg = get_config(name)
+        out.append(GEMMWorkload(f"{cfg.name}-mlp{tokens}", tokens,
+                                cfg.d_model, cfg.d_ff))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One (workload, deployment region) cell of a sweep."""
+
+    workload: GEMMWorkload
+    region: str
+    carbon_intensity: float
+
+    @property
+    def key(self) -> Tuple[str, str]:
+        return (self.workload.name, self.region)
+
+
+@dataclasses.dataclass
+class ScenarioFrontier:
+    """Results of a :class:`ScenarioSweep`: one ``SearchResult`` (and
+    frontier archive) per scenario."""
+
+    scenarios: List[Scenario]
+    results: Dict[Tuple[str, str], "object"]   # key -> SearchResult
+
+    def frontier(self, workload_name: str, region: str) -> ParetoArchive:
+        return self.results[(workload_name, region)].frontier
+
+    def merged(self, workload_name: str,
+               max_size: int = 512) -> ParetoArchive:
+        """Union frontier across regions for one workload (the envelope a
+        deployment-portfolio planner optimizes against)."""
+        out = ParetoArchive(max_size=max_size)
+        for s in self.scenarios:
+            if s.workload.name == workload_name:
+                out.merge(self.results[s.key].frontier)
+        return out
+
+    def rows(self):
+        """Flat (workload, region, ci, latency, dollar, cfp) rows for
+        CSV/JSON reporting."""
+        for s in self.scenarios:
+            arch = self.results[s.key].frontier
+            for v in arch.vectors:
+                yield (s.workload.name, s.region, s.carbon_intensity,
+                       float(v[0]), float(v[1]), float(v[2]))
+
+
+@dataclasses.dataclass
+class ScenarioSweep:
+    """Map the Pareto frontier across deployment regions and workloads.
+
+    For each (workload, carbon-intensity) cell this builds a ``TechDB``
+    with the region's grid intensity (operational CFP scales with it, so
+    both the frontier *and* the region-fitted normalizer shift), fits a
+    normalizer, and runs the inner strategy — by default a
+    :class:`ScalarizationSweep`, so each cell yields a full frontier in
+    one device program."""
+
+    strategy: ScalarizationSweep = dataclasses.field(
+        default_factory=lambda: ScalarizationSweep(directions=8,
+                                                   n_chains=4, sweeps=40))
+    regions: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict(REGION_INTENSITIES))
+    norm_samples: int = 400
+    norm_seed: int = 1234
+
+    def run(self, workloads: Union[GEMMWorkload, Sequence[GEMMWorkload]],
+            template: Union[str, Template] = "T1",
+            db: TechDB = DEFAULT_DB, device: bool = True,
+            budget: Optional[int] = None,
+            key: Optional[int] = None) -> ScenarioFrontier:
+        from repro.pathfinding.pathfinder import Pathfinder
+
+        if isinstance(workloads, GEMMWorkload):
+            workloads = [workloads]
+        tpl = TEMPLATES[template] if isinstance(template, str) else template
+        scenarios: List[Scenario] = []
+        results: Dict[Tuple[str, str], object] = {}
+        for wl in workloads:
+            for region, ci in self.regions.items():
+                db_s = dataclasses.replace(db, carbon_intensity=ci)
+                pf = Pathfinder(wl, tpl, db=db_s, device=device)
+                pf.fit_normalizer(samples=self.norm_samples,
+                                  seed=self.norm_seed)
+                res = pf.search(strategy=self.strategy, budget=budget,
+                                key=key)
+                sc = Scenario(wl, region, ci)
+                scenarios.append(sc)
+                results[sc.key] = res
+        return ScenarioFrontier(scenarios, results)

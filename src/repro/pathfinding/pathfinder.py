@@ -139,6 +139,12 @@ class Pathfinder:
                          self.evaluate_fn, self.cache, self.batched,
                          self.device)
 
+    def evaluate_cost_vector(self, encoded: np.ndarray):
+        """Metrics + Eq. 17 cost + ``(latency, dollar, total_cfp)``
+        objective vectors for an encoded population (fused on device)."""
+        return self.objective().eval_cost_vector_encoded(encoded,
+                                                         self.space)
+
     # -- search -------------------------------------------------------------
 
     def search(self, strategy: Optional[SearchStrategy] = None,
@@ -146,3 +152,15 @@ class Pathfinder:
                key: Optional[int] = None) -> SearchResult:
         strategy = strategy or SimulatedAnnealing()
         return strategy.search(self.space, self.objective(), budget, key)
+
+    def pareto_front(self, strategy: Optional[SearchStrategy] = None,
+                     budget: Optional[int] = None,
+                     key: Optional[int] = None):
+        """Run a search and return its Pareto archive directly (see
+        :mod:`repro.pathfinding.pareto`). Defaults to a
+        :class:`~repro.pathfinding.pareto.ScalarizationSweep`."""
+        if strategy is None:
+            from repro.pathfinding.pareto import ScalarizationSweep
+
+            strategy = ScalarizationSweep()
+        return self.search(strategy, budget, key).frontier

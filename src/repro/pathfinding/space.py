@@ -23,7 +23,7 @@ generator produces anyway).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Union
+from typing import List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -164,6 +164,40 @@ class DesignSpace:
         """Distinct chiplets in the library (Table II: 80 by default)."""
         return sum(len(self.db.sram_sizes_kb[a]) for a in self.arrays) * len(
             self.nodes)
+
+    def bounds(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-column ``(lo, hi)`` inclusive int bounds of the encoding.
+
+        Loose bounds: every valid row satisfies them, but not every row
+        inside them is valid (e.g. the SRAM index bound is the max across
+        arrays, and pair/stack columns depend on the style). Useful for
+        cheap in-bounds assertions over move-generator outputs — the
+        tight check remains :meth:`validity_mask`."""
+        lo = np.full(self.width, -1, dtype=np.int64)
+        hi = np.empty(self.width, dtype=np.int64)
+        hi[COL_N] = self.max_chiplets
+        lo[COL_N] = 1
+        hi[COL_STYLE] = len(INTEGRATION_STYLES) - 1
+        lo[COL_STYLE] = 0
+        hi[COL_MEM] = len(self.memories) - 1
+        lo[COL_MEM] = 0
+        hi[COL_ORDER] = 1
+        lo[COL_ORDER] = 0
+        hi[COL_DATAFLOW] = len(DATAFLOWS) - 1
+        lo[COL_DATAFLOW] = 0
+        hi[COL_SPLITK] = 1
+        lo[COL_SPLITK] = 0
+        hi[COL_PAIR25] = len(self.pairs_25d) - 1
+        hi[COL_PAIR3] = len(self.pairs_3d) - 1
+        hi[COL_STACK] = (1 << self.max_chiplets) - 1
+        lo[COL_STACK] = 0
+        n_sram_max = int(self.n_sram.max())
+        for i in range(self.max_chiplets):
+            ca, ct, cs = self.chip_cols(i)
+            hi[ca] = len(self.arrays) - 1
+            hi[ct] = len(self.nodes) - 1
+            hi[cs] = n_sram_max - 1
+        return lo, hi
 
     # -- encode / decode ----------------------------------------------------
 

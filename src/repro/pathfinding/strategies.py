@@ -50,7 +50,12 @@ from repro.pathfinding.space import DesignSpace
 
 @dataclasses.dataclass
 class SearchResult:
-    """What every strategy returns (superset of the seed ``SAResult``)."""
+    """What every strategy returns (superset of the seed ``SAResult``).
+
+    ``frontier`` is the Pareto archive of every design the strategy
+    evaluated, over the :data:`repro.core.sa.OBJECTIVE_AXES` axes
+    ``(latency_s, dollar, total_cfp)`` — ``None`` only when collection
+    was disabled (``frontier_size=0``)."""
 
     best: HISystem
     best_metrics: Metrics
@@ -58,6 +63,13 @@ class SearchResult:
     history: List[float]
     evaluations: int
     cache: Optional[SimCache] = None
+    frontier: Optional["object"] = None   # ParetoArchive
+
+    def __repr__(self) -> str:
+        front = "none" if self.frontier is None else len(self.frontier)
+        return (f"SearchResult(best_cost={self.best_cost:.6g}, "
+                f"evaluations={self.evaluations}, "
+                f"history={len(self.history)} pts, frontier={front})")
 
 
 @dataclasses.dataclass
@@ -95,6 +107,35 @@ class Objective:
 
     def cost(self, m: Metrics) -> float:
         return sa_cost(m, self.template, self.norm)
+
+    # -- multi-objective vector (OBJECTIVE_AXES order) ----------------------
+
+    def cost_vector(self, m: Metrics) -> np.ndarray:
+        """Scalar-path ``(latency_s, dollar, total_cfp)`` vector."""
+        from repro.core.sa import cost_vector
+
+        return np.asarray(cost_vector(m), dtype=np.float64)
+
+    def cost_vector_batch(self, mb: MetricsBatch) -> np.ndarray:
+        """``[P, 3]`` objective vectors for a batch (raw metric units —
+        normalizer/template independent, so frontiers merge across
+        scalarization directions)."""
+        return mb.objective_vectors()
+
+    def eval_cost_vector_encoded(self, encoded: np.ndarray,
+                                 space: DesignSpace
+                                 ) -> Tuple[MetricsBatch, np.ndarray,
+                                            np.ndarray]:
+        """Metrics + Eq. 17 cost + objective vectors in one call; on the
+        device path all three come out of the same fused jit program."""
+        if self.device:
+            from repro.pathfinding.device import get_device_evaluator
+
+            dev = get_device_evaluator(self.wl, self.db, space=space)
+            return dev.evaluate_cost_vector(encoded, self.norm,
+                                            self.template)
+        mb = self.evaluate_encoded(encoded, space)
+        return mb, self.cost_batch(mb), self.cost_vector_batch(mb)
 
     def evaluate_encoded(self, encoded: np.ndarray,
                          space: DesignSpace) -> MetricsBatch:
@@ -134,7 +175,16 @@ class SearchStrategy(Protocol):
 
 
 def _check_budget(budget: Optional[int]) -> None:
-    if budget is not None and budget < 1:
+    """Every strategy's first line: ``budget`` is None (strategy default
+    schedule) or a positive integer evaluation cap. 0/negative budgets
+    and non-integers (a float silently truncates in slicing/floordiv
+    arithmetic) are rejected up front."""
+    if budget is None:
+        return
+    if isinstance(budget, bool) or not isinstance(budget, (int, np.integer)):
+        raise TypeError(
+            f"budget must be an int or None, got {type(budget).__name__}")
+    if budget < 1:
         raise ValueError(f"budget must be >= 1 or None, got {budget}")
 
 
@@ -151,20 +201,27 @@ class SimulatedAnnealing:
 
     config: "SAConfig" = None  # type: ignore[assignment]
     initial: Optional[HISystem] = None
+    frontier_size: int = 256
 
     def search(self, space: DesignSpace, objective: Objective,
                budget: Optional[int] = None,
                key: Optional[int] = None) -> SearchResult:
         from repro.core.sa import SAConfig, propose, random_system
+        from repro.pathfinding.pareto import FrontierFeed
 
         _check_budget(budget)
         cfg = self.config or SAConfig(max_chiplets=space.max_chiplets)
         db = objective.db
         rng = random.Random(cfg.seed if key is None else key)
+        feed = FrontierFeed(self.frontier_size)
+
+        collect = feed.archive is not None
 
         cur = self.initial or random_system(rng, db, cfg.max_chiplets)
         cur_m = objective.evaluate(cur)
         cur_c = objective.cost(cur_m)
+        if collect:
+            feed.add(space.encode(cur), objective.cost_vector(cur_m))
         best, best_m, best_c = cur, cur_m, cur_c
         history = [cur_c]
         evals = 1
@@ -180,6 +237,8 @@ class SimulatedAnnealing:
                 m = objective.evaluate(cand)
                 c = objective.cost(m)
                 evals += 1
+                if collect:
+                    feed.add(space.encode(cand), objective.cost_vector(m))
                 delta = c - cur_c
                 if delta <= 0 or rng.random() < math.exp(
                         -delta / max(t, 1e-12)):
@@ -191,7 +250,7 @@ class SimulatedAnnealing:
             if budget is not None and evals >= budget:
                 break
         return SearchResult(best, best_m, best_c, history, evals,
-                            objective.cache)
+                            objective.cache, frontier=feed.done())
 
 
 # ---------------------------------------------------------------------------
@@ -220,11 +279,13 @@ class ParallelTempering:
     t_min: float = 1.0
     sweeps: int = 500
     swap_every: int = 5
+    frontier_size: int = 256
 
     def search(self, space: DesignSpace, objective: Objective,
                budget: Optional[int] = None,
                key: Optional[int] = None) -> SearchResult:
         from repro.core.sa import propose, random_system
+        from repro.pathfinding.pareto import FrontierFeed
 
         _check_budget(budget)
         db = objective.db
@@ -240,8 +301,11 @@ class ParallelTempering:
         if objective.device:
             return self._search_device(space, objective, budget, key,
                                        chains, temps)
-        mb = objective.evaluate_encoded(space.encode_many(chains), space)
+        feed = FrontierFeed(self.frontier_size)
+        enc0 = space.encode_many(chains)
+        mb = objective.evaluate_encoded(enc0, space)
         costs = objective.cost_batch(mb).tolist()
+        feed.add(enc0, objective.cost_vector_batch(mb))
         evals = n
         bi = int(np.argmin(costs))
         best, best_m, best_c = chains[bi], mb.row(bi), costs[bi]
@@ -255,8 +319,10 @@ class ParallelTempering:
                 break
             cands = [propose(chains[i], rng, db, space.max_chiplets)
                      for i in range(k)]
-            mb = objective.evaluate_encoded(space.encode_many(cands), space)
+            enc = space.encode_many(cands)
+            mb = objective.evaluate_encoded(enc, space)
             ccosts = objective.cost_batch(mb).tolist()
+            feed.add(enc, objective.cost_vector_batch(mb))
             evals += k
             for i in range(k):
                 delta = ccosts[i] - costs[i]
@@ -269,7 +335,7 @@ class ParallelTempering:
                 _replica_exchange(temps, chains, costs, rng)
             history.append(costs[-1])  # coldest chain
         return SearchResult(best, best_m, best_c, history, evals,
-                            objective.cache)
+                            objective.cache, frontier=feed.done())
 
     def _search_device(self, space: DesignSpace, objective: Objective,
                        budget: Optional[int], key: Optional[int],
@@ -282,6 +348,7 @@ class ParallelTempering:
         Metrics costs one scalar evaluation of an already-searched row
         (through the shared SimCache, outside the budget accounting)."""
         from repro.pathfinding.device import get_device_evaluator
+        from repro.pathfinding.pareto import N_AXES, ParetoArchive
 
         n = len(chains)
         dev = get_device_evaluator(objective.wl, objective.db, space=space)
@@ -291,13 +358,19 @@ class ParallelTempering:
         res = dev.parallel_tempering(
             space.encode_many(chains), np.asarray(temps), sweeps,
             self.swap_every, seed=0 if key is None else key,
-            norm=objective.norm, template=objective.template)
+            norm=objective.norm, template=objective.template,
+            collect_samples=self.frontier_size > 0)
+        archive = None
+        if res.samples is not None and self.frontier_size > 0:
+            archive = ParetoArchive(max_size=self.frontier_size)
+            archive.insert(res.samples["enc"].reshape(-1, space.width),
+                           res.samples["vec"].reshape(-1, N_AXES))
         best = space.decode(res.best_enc)
         # one scalar evaluation beats paying a fresh bucket compile of
         # the fused evaluator just to materialize the winning row
         return SearchResult(best, objective.evaluate(best),
                             res.best_cost, res.history, res.evaluations,
-                            objective.cache)
+                            objective.cache, frontier=archive)
 
 
 def _replica_exchange(temps: Sequence[float], chains: list, costs: list,
@@ -325,13 +398,17 @@ class RandomSearch:
     """Uniform sampling of valid systems, evaluated in batches."""
 
     batch_size: int = 512
+    frontier_size: int = 256
 
     def search(self, space: DesignSpace, objective: Objective,
                budget: Optional[int] = None,
                key: Optional[int] = None) -> SearchResult:
+        from repro.pathfinding.pareto import FrontierFeed
+
         _check_budget(budget)
         budget = budget if budget is not None else 2048
         rng = np.random.default_rng(0 if key is None else key)
+        feed = FrontierFeed(self.frontier_size)
         best = best_m = None
         best_c = math.inf
         history: List[float] = []
@@ -339,7 +416,8 @@ class RandomSearch:
         while evals < budget:
             k = min(self.batch_size, budget - evals)
             enc = space.sample(k, key=rng)
-            mb, costs = objective.eval_cost_encoded(enc, space)
+            mb, costs, vec = objective.eval_cost_vector_encoded(enc, space)
+            feed.add(enc, vec)
             evals += k
             i = int(np.argmin(costs))
             if costs[i] < best_c:
@@ -347,7 +425,7 @@ class RandomSearch:
                                         float(costs[i]))
             history.append(best_c)
         return SearchResult(best, best_m, best_c, history, evals,
-                            objective.cache)
+                            objective.cache, frontier=feed.done())
 
 
 @dataclasses.dataclass
@@ -360,6 +438,7 @@ class GridSweep:
     memories: Optional[Sequence[str]] = None
     mappings: Sequence = ALL_MAPPINGS
     stack: Tuple[int, ...] = (1, 2)
+    frontier_size: int = 256
 
     def systems(self, db: TechDB) -> List[HISystem]:
         chips = tuple(self.chiplets or different_chiplet_system())
@@ -384,13 +463,18 @@ class GridSweep:
     def search(self, space: DesignSpace, objective: Objective,
                budget: Optional[int] = None,
                key: Optional[int] = None) -> SearchResult:
+        from repro.pathfinding.pareto import FrontierFeed
+
         _check_budget(budget)
         systems = self.systems(objective.db)
         if budget is not None:
             systems = systems[:budget]
         enc = space.encode_many(systems)
-        mb, costs = objective.eval_cost_encoded(enc, space)
+        mb, costs, vec = objective.eval_cost_vector_encoded(enc, space)
+        feed = FrontierFeed(self.frontier_size)
+        feed.add(enc, vec)
         i = int(np.argmin(costs))
         running = np.minimum.accumulate(costs)
         return SearchResult(systems[i], mb.row(i), float(costs[i]),
-                            running.tolist(), len(systems), objective.cache)
+                            running.tolist(), len(systems), objective.cache,
+                            frontier=feed.done())

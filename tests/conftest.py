@@ -23,4 +23,6 @@ except ImportError:
 
 def pytest_configure(config):
     config.addinivalue_line(
-        "markers", "slow: multi-device subprocess tests (deselect with -m 'not slow')")
+        "markers",
+        "slow: multi-device subprocess tests and jit-compile-heavy device "
+        "searches (deselect with -m 'not slow')")

@@ -1,0 +1,95 @@
+"""Golden-trajectory regression tests.
+
+Seeded searches are pinned to checked-in accepted-cost histories so any
+silent change to the RNG streams, move distribution, evaluator numerics
+or accept/exchange logic fails loudly. To regenerate after an
+*intentional* behaviour change::
+
+    REPRO_UPDATE_GOLDENS=1 PYTHONPATH=src python -m pytest tests/test_goldens.py
+
+(the run rewrites ``tests/goldens/*.json`` and reports the tests as
+skipped; commit the refreshed files alongside the change).
+
+Tolerances: the scalar SA path is plain float64 host math (1e-9); the
+device path crosses XLA codegen, which may fuse differently across CPU
+generations (1e-6 — still far below any behavioural change).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import SAConfig, TEMPLATES, workload
+from repro.pathfinding import (
+    DesignSpace,
+    ParallelTempering,
+    Pathfinder,
+    SimulatedAnnealing,
+    fit_normalizer_batched,
+)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "goldens")
+
+
+def _check_golden(name: str, data: dict, rtol: float) -> None:
+    path = os.path.join(GOLDEN_DIR, f"{name}.json")
+    if os.environ.get("REPRO_UPDATE_GOLDENS") == "1":
+        with open(path, "w") as f:
+            json.dump(data, f, indent=2)
+        pytest.skip(f"regenerated golden {name}")
+    if not os.path.exists(path):
+        pytest.fail(f"golden {path} missing — run with "
+                    "REPRO_UPDATE_GOLDENS=1 to create it")
+    with open(path) as f:
+        golden = json.load(f)
+    assert set(golden) == set(data), (
+        f"golden {name} fields changed: {sorted(golden)} vs {sorted(data)}")
+    for field, ref in golden.items():
+        got = data[field]
+        if isinstance(ref, (int, str)):
+            assert got == ref, f"{name}.{field}: {got!r} != golden {ref!r}"
+        else:
+            np.testing.assert_allclose(
+                got, ref, rtol=rtol,
+                err_msg=f"{name}.{field} deviates from golden")
+
+
+def test_golden_simulated_annealing_trajectory():
+    """Seeded scalar SA: the full accepted-cost history is pinned."""
+    pf = Pathfinder(workload(6), TEMPLATES["T1"])
+    pf.fit_normalizer(samples=200, seed=1, method="scalar")
+    cfg = SAConfig(t_initial=50.0, t_final=0.05, cooling=0.85,
+                   moves_per_temp=15, seed=2)
+    res = pf.search(strategy=SimulatedAnnealing(cfg))
+    _check_golden("sa_wl6_t1", {
+        "history": res.history,
+        "best_cost": res.best_cost,
+        "evaluations": res.evaluations,
+        "best": res.best.describe(),
+    }, rtol=1e-9)
+
+
+@pytest.mark.slow
+def test_golden_device_parallel_tempering_trajectory():
+    """Seeded device PT (the fused lax.scan engine): coldest-chain
+    history, best cost and frontier size are pinned."""
+    space = DesignSpace()
+    wl = workload(1)
+    norm = fit_normalizer_batched(wl, samples=400, seed=7, space=space)
+    pf = Pathfinder(wl, TEMPLATES["T1"], norm=norm, space=space)
+    assert pf.device, "device engine unavailable — golden requires it"
+    res = pf.search(strategy=ParallelTempering(n_chains=4, sweeps=20),
+                    key=3)
+    # the archive size itself is NOT pinned: membership rides on exact
+    # float dominance ties, so an ulp of cross-platform drift could
+    # legitimately shift it by one — only bound it, pin the extremes
+    assert len(res.frontier) >= 3
+    _check_golden("device_pt_wl1_t1", {
+        "history": res.history,
+        "best_cost": res.best_cost,
+        "evaluations": res.evaluations,
+        "frontier_latency_min": float(res.frontier.vectors[:, 0].min()),
+        "frontier_cfp_min": float(res.frontier.vectors[:, 2].min()),
+    }, rtol=1e-6)

@@ -1,0 +1,392 @@
+"""Pareto-frontier machinery tests: host-vs-jnp non-dominated filter
+equivalence, archive idempotence/determinism/crowding, hypervolume,
+cost-vector parity across the scalar/batched/device paths, and the
+ScalarizationSweep / ScenarioSweep strategies."""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import TEMPLATES, workload
+from repro.core.evaluate import evaluate
+from repro.core.sa import OBJECTIVE_AXES, cost_vector, random_system
+from repro.core.system import is_valid
+from repro.pathfinding import (
+    DesignSpace,
+    ParallelTempering,
+    ParetoArchive,
+    Pathfinder,
+    ScalarizationSweep,
+    ScenarioSweep,
+    crowding_distance,
+    fit_normalizer_batched,
+    get_device_evaluator,
+    hypervolume,
+    non_dominated_mask,
+    non_dominated_mask_jnp,
+    simplex_directions,
+    workloads_from_configs,
+)
+from repro.pathfinding.pareto import (
+    FrontierFeed,
+    directions_to_weights,
+)
+
+SPACE = DesignSpace()
+WL = workload(1)
+
+
+@pytest.fixture(scope="module")
+def norm():
+    return fit_normalizer_batched(WL, samples=400, seed=7, space=SPACE)
+
+
+def _fronts(n_fronts=200, size=24, seed=3):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n_fronts, size, 3))
+    pts[:, ::5] = pts[:, 1::5]          # exact duplicate rows
+    pts[:, 2::4, 1] = pts[:, 3::4, 1]   # single-axis ties
+    return pts
+
+
+# ---------------------------------------------------------------------------
+# Non-dominated filtering: host reference vs jnp
+# ---------------------------------------------------------------------------
+
+
+def test_filter_host_jnp_equivalence_random_fronts():
+    """The vectorized jnp filter matches the host reference *exactly*
+    on random fronts with duplicates and per-axis ties."""
+    fronts = _fronts()
+    host = np.stack([non_dominated_mask(f) for f in fronts])
+    dev = non_dominated_mask_jnp(fronts)   # batched leading dim
+    assert host.shape == dev.shape
+    assert (host == dev).all()
+    # and per-front calls agree with the batched call
+    for f in fronts[:10]:
+        assert (non_dominated_mask_jnp(f) == non_dominated_mask(f)).all()
+
+
+def test_filter_known_cases():
+    pts = np.array([[1.0, 1.0, 1.0],
+                    [2.0, 2.0, 2.0],    # dominated
+                    [0.5, 3.0, 1.0],    # trade-off: survives
+                    [1.0, 1.0, 1.0]])   # duplicate: survives (dedup later)
+    m = non_dominated_mask(pts)
+    assert m.tolist() == [True, False, True, True]
+    assert (non_dominated_mask_jnp(pts) == m).all()
+    assert non_dominated_mask(np.zeros((0, 3))).shape == (0,)
+
+
+def test_hypervolume_exact_values():
+    # one point: a single box
+    assert hypervolume([[0.0, 0.0]], [1.0, 1.0]) == pytest.approx(1.0)
+    # two staircase points with overlap
+    assert hypervolume([[0.0, 0.5], [0.5, 0.0]],
+                       [1.0, 1.0]) == pytest.approx(0.75)
+    # 3D: unit box minus nothing
+    assert hypervolume([[0.0, 0.0, 0.0]], [1, 1, 1]) == pytest.approx(1.0)
+    # 3D staircase: two boxes of 0.5 volume overlapping in 0.25
+    assert hypervolume([[0.5, 0.0, 0.0], [0.0, 0.5, 0.0]],
+                       [1, 1, 1]) == pytest.approx(0.75)
+    # points at/behind the reference contribute nothing
+    assert hypervolume([[1.0, 1.0, 1.0], [2, 2, 2]], [1, 1, 1]) == 0.0
+    # dominated points do not change the volume
+    a = hypervolume([[0.2, 0.2, 0.2]], [1, 1, 1])
+    b = hypervolume([[0.2, 0.2, 0.2], [0.6, 0.6, 0.6]], [1, 1, 1])
+    assert a == pytest.approx(b)
+
+
+def test_crowding_distance_boundaries_inf():
+    pts = np.array([[0.0, 1.0], [0.25, 0.75], [0.5, 0.5], [1.0, 0.0]])
+    cd = crowding_distance(pts)
+    assert np.isinf(cd[0]) and np.isinf(cd[-1])
+    assert np.isfinite(cd[1]) and np.isfinite(cd[2])
+    assert crowding_distance(pts[:2]).tolist() == [np.inf, np.inf]
+
+
+# ---------------------------------------------------------------------------
+# The archive
+# ---------------------------------------------------------------------------
+
+
+def _random_batch(n, seed=0, width=12):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 9, (n, width)).astype(np.int32),
+            rng.random((n, 3)))
+
+
+def test_archive_insert_idempotent():
+    enc, vec = _random_batch(500, seed=1)
+    a = ParetoArchive(max_size=64)
+    a.insert(enc, vec)
+    before = (a.vectors, a.encoded)
+    a.insert(a.encoded, a.vectors)   # self-insert: must be a no-op
+    assert np.array_equal(a.vectors, before[0])
+    assert np.array_equal(a.encoded, before[1])
+    assert non_dominated_mask(a.vectors).all()
+
+
+def test_archive_crowding_prune_deterministic():
+    """Crowding-prune determinism: the same insert sequence always yields
+    the identical archive (single-shot and repeated)."""
+    enc, vec = _random_batch(2000, seed=2)
+    a = ParetoArchive(max_size=32)
+    a.insert(enc, vec)
+    b = ParetoArchive(max_size=32)
+    b.insert(enc, vec)
+    assert np.array_equal(a.vectors, b.vectors)
+    assert np.array_equal(a.encoded, b.encoded)
+    assert len(a) <= 32
+    # chunked feeds in the same sequence are deterministic too
+    c = ParetoArchive(max_size=32)
+    d = ParetoArchive(max_size=32)
+    for lo in range(0, len(vec), 173):
+        c.insert(enc[lo:lo + 173], vec[lo:lo + 173])
+        d.insert(enc[lo:lo + 173], vec[lo:lo + 173])
+    assert np.array_equal(c.vectors, d.vectors)
+    assert np.array_equal(c.encoded, d.encoded)
+
+
+def test_archive_order_invariant_under_bound():
+    """While the bound is not hit, insertion order never matters: dedup +
+    canonical storage make any order and chunking converge."""
+    enc, vec = _random_batch(2000, seed=2)
+    a = ParetoArchive(max_size=512)   # front is far smaller than this
+    a.insert(enc, vec)
+    assert len(a) < 512
+    b = ParetoArchive(max_size=512)
+    perm = np.random.default_rng(3).permutation(len(vec))
+    for lo in range(0, len(vec), 173):   # ragged chunks, shuffled order
+        b.insert(enc[perm][lo:lo + 173], vec[perm][lo:lo + 173])
+    assert np.array_equal(a.vectors, b.vectors)
+    assert np.array_equal(a.encoded, b.encoded)
+
+
+def test_archive_dedup_and_bound():
+    enc, vec = _random_batch(100, seed=4)
+    # all-identical vectors: dedup keeps distinct encodings only
+    same = np.tile(vec[:1], (100, 1))
+    a = ParetoArchive(max_size=256)
+    a.insert(np.vstack([enc, enc]), np.vstack([same, same]))
+    assert len(a) == len(np.unique(enc, axis=0))
+    # bound is enforced
+    b = ParetoArchive(max_size=5)
+    enc2, _ = _random_batch(400, seed=5)
+    theta = np.linspace(0, np.pi / 2, 400)
+    front = np.stack([np.cos(theta), np.sin(theta),
+                      np.zeros_like(theta)], axis=1)
+    b.insert(enc2, front)          # 400 mutually non-dominated points
+    assert len(b) == 5
+    # crowding keeps the extremes
+    assert front[:, 0].min() in b.vectors[:, 0]
+    assert front[:, 0].max() in b.vectors[:, 0]
+
+
+def test_archive_backends_agree():
+    enc, vec = _random_batch(600, seed=6)
+    a = ParetoArchive(max_size=48, backend="numpy")
+    b = ParetoArchive(max_size=48, backend="jnp")
+    a.insert(enc, vec)
+    b.insert(enc, vec)
+    assert np.array_equal(a.vectors, b.vectors)
+    assert np.array_equal(a.encoded, b.encoded)
+
+
+def test_archive_project_2d_front():
+    enc, vec = _random_batch(300, seed=7)
+    a = ParetoArchive(max_size=128)
+    a.insert(enc, vec)
+    front2d = a.project((1, 2))
+    assert non_dominated_mask(front2d).all()
+    # the projected front dominates every archived point on those axes
+    for c, f in a.vectors[:, 1:3]:
+        assert any(fc <= c + 1e-12 and ff <= f + 1e-12
+                   for fc, ff in front2d)
+
+
+def test_archive_input_validation():
+    a = ParetoArchive(max_size=8)
+    enc, vec = _random_batch(4, seed=8)
+    with pytest.raises(ValueError):
+        a.insert(enc[:2], vec)
+    with pytest.raises(ValueError):
+        a.insert(enc, vec[:, :2])
+    with pytest.raises(ValueError):
+        ParetoArchive(max_size=0)
+    with pytest.raises(ValueError):
+        ParetoArchive(backend="cuda")
+    a.insert(enc, vec)
+    with pytest.raises(ValueError):
+        a.insert(enc[:, :5], vec)   # width mismatch after first insert
+
+
+def test_frontier_feed_disabled_and_buffering():
+    feed = FrontierFeed(0)
+    feed.add(*_random_batch(10))
+    assert feed.done() is None
+    feed = FrontierFeed(16, chunk=8)
+    enc, vec = _random_batch(20, seed=9)
+    for i in range(20):
+        feed.add(enc[i], vec[i])
+    arch = feed.done()
+    ref = ParetoArchive(max_size=16)
+    ref.insert(enc, vec)
+    assert np.array_equal(arch.vectors, ref.vectors)
+
+
+# ---------------------------------------------------------------------------
+# Directions
+# ---------------------------------------------------------------------------
+
+
+def test_simplex_directions_deterministic_and_cover_corners():
+    for k in (1, 3, 7, 16, 64):
+        w = simplex_directions(k)
+        assert w.shape == (k, 3)
+        np.testing.assert_allclose(w.sum(axis=1), 1.0)
+        assert np.array_equal(w, simplex_directions(k))
+    w = simplex_directions(64)
+    for corner in np.eye(3):
+        assert (w == corner).all(axis=1).any()
+
+
+def test_directions_to_weights_axes():
+    w6 = directions_to_weights([[0.5, 0.3, 0.2]])
+    # energy/area zero; latency->gamma, dollar->theta, cfp->zeta+eta
+    np.testing.assert_allclose(w6[0], [0, 0, 0.5, 0.3, 0.2, 0.2])
+
+
+# ---------------------------------------------------------------------------
+# Cost-vector parity: scalar vs batched vs fused device program
+# ---------------------------------------------------------------------------
+
+
+def test_cost_vector_parity_scalar_batch_device(norm):
+    rng = random.Random(11)
+    systems = [random_system(rng) for _ in range(64)]
+    enc = SPACE.encode_many(systems)
+    pf = Pathfinder(WL, TEMPLATES["T1"], norm=norm, space=SPACE)
+    mb, cost, vec = pf.evaluate_cost_vector(enc)
+    assert vec.shape == (64, len(OBJECTIVE_AXES))
+    # batched host rendering
+    np.testing.assert_allclose(vec, mb.objective_vectors(), rtol=1e-9)
+    # scalar reference (the <= 1e-6 device-parity contract)
+    for i in (0, 13, 37, 63):
+        ref = np.asarray(cost_vector(evaluate(systems[i], WL)))
+        np.testing.assert_allclose(vec[i], ref, rtol=1e-6)
+    # host (device=False) objective produces the same vectors
+    pf_h = Pathfinder(WL, TEMPLATES["T1"], norm=norm, space=SPACE,
+                      device=False)
+    _, cost_h, vec_h = pf_h.evaluate_cost_vector(enc)
+    np.testing.assert_allclose(vec, vec_h, rtol=1e-9)
+    np.testing.assert_allclose(cost, cost_h, rtol=1e-9)
+
+
+def test_device_evaluate_cost_vector_consistent(norm):
+    dev = get_device_evaluator(WL, space=SPACE)
+    enc = SPACE.sample(96, key=21)
+    mb, cost, vec = dev.evaluate_cost_vector(enc, norm, TEMPLATES["T2"])
+    mb2, cost2 = dev.evaluate_cost(enc, norm, TEMPLATES["T2"])
+    np.testing.assert_allclose(cost, cost2, rtol=0)
+    np.testing.assert_allclose(
+        vec[:, 2], mb.emb_cfp_kg + mb.ope_cfp_kg, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Strategies: frontier field + ScalarizationSweep + ScenarioSweep
+# ---------------------------------------------------------------------------
+
+
+def test_every_strategy_returns_frontier(norm):
+    from repro.pathfinding import GridSweep, RandomSearch
+
+    pf = Pathfinder(WL, TEMPLATES["T1"], norm=norm, space=SPACE,
+                    device=False)
+    for strat in (RandomSearch(batch_size=32),
+                  GridSweep(memories=("DDR5",))):
+        res = pf.search(strategy=strat, budget=64, key=1)
+        assert res.frontier is not None and len(res.frontier) >= 1
+        assert non_dominated_mask(res.frontier.vectors).all()
+        assert f"frontier={len(res.frontier)}" in repr(res)
+
+
+@pytest.mark.slow
+def test_scalarization_sweep_device(norm):
+    pf = Pathfinder(WL, TEMPLATES["T1"], norm=norm, space=SPACE)
+    strat = ScalarizationSweep(directions=6, n_chains=3, sweeps=10)
+    res = pf.search(strategy=strat, key=5)
+    assert res.evaluations == 18 + 18 * 10
+    assert len(res.frontier) >= 3
+    assert non_dominated_mask(res.frontier.vectors).all()
+    assert is_valid(res.best)
+    # the best row is drawn from the frontier archive
+    assert any(np.array_equal(SPACE.encode(res.best), e)
+               for e in res.frontier.encoded)
+    # deterministic per key
+    res2 = pf.search(strategy=strat, key=5)
+    assert np.array_equal(res.frontier.vectors, res2.frontier.vectors)
+    assert res.best_cost == res2.best_cost
+    # budget truncates to whole sweeps
+    res3 = pf.search(strategy=strat, budget=100, key=5)
+    assert res3.evaluations <= 100
+    with pytest.raises(ValueError):
+        pf.search(strategy=strat, budget=10, key=5)   # < one population
+    # the frontier IS the sweep's output: disabling it is rejected
+    with pytest.raises(ValueError, match="frontier_size"):
+        pf.search(strategy=ScalarizationSweep(directions=2, n_chains=2,
+                                              frontier_size=0), key=5)
+
+
+def test_scalarization_sweep_host_fallback(norm):
+    pf = Pathfinder(WL, TEMPLATES["T1"], norm=norm, space=SPACE,
+                    device=False)
+    strat = ScalarizationSweep(directions=3, n_chains=2, sweeps=4)
+    res = pf.search(strategy=strat, key=2)
+    assert res.frontier is not None and len(res.frontier) >= 2
+    assert non_dominated_mask(res.frontier.vectors).all()
+    assert res.evaluations == 3 * (2 + 2 * 4)
+    assert is_valid(res.best)
+
+
+@pytest.mark.slow
+def test_scenario_sweep_regions_shift_cfp():
+    """Operational CFP scales with the region's grid intensity, so the
+    clean-grid frontier's best total CFP must beat the dirty grid's."""
+    wls = workloads_from_configs(["smollm-135m"], tokens=256)
+    sweep = ScenarioSweep(
+        strategy=ScalarizationSweep(directions=3, n_chains=2, sweeps=5),
+        regions={"clean": 0.024, "dirty": 0.82}, norm_samples=150)
+    sf = sweep.run(wls, template="T1", device=False, key=1)
+    assert len(sf.scenarios) == 2
+    clean = sf.frontier(wls[0].name, "clean")
+    dirty = sf.frontier(wls[0].name, "dirty")
+    assert len(clean) and len(dirty)
+    assert clean.vectors[:, 2].min() < dirty.vectors[:, 2].min()
+    merged = sf.merged(wls[0].name)
+    assert non_dominated_mask(merged.vectors).all()
+    rows = list(sf.rows())
+    assert len(rows) == len(clean) + len(dirty)
+    assert {r[1] for r in rows} == {"clean", "dirty"}
+
+
+def test_workloads_from_configs_shapes():
+    (wl,) = workloads_from_configs(["smollm-135m"], tokens=128)
+    assert wl.M == 128 and wl.K == 576 and wl.N == 1536
+    assert "smollm" in wl.name
+
+
+def test_objective_replace_keeps_vector_axes(norm):
+    """Scalarization directions change the template, never the vector:
+    frontiers merge across directions because the axes are raw units."""
+    pf = Pathfinder(WL, TEMPLATES["T1"], norm=norm, space=SPACE,
+                    device=False)
+    obj = pf.objective()
+    obj2 = dataclasses.replace(
+        obj, template=dataclasses.replace(TEMPLATES["T3"], name="dir"))
+    enc = SPACE.sample(16, key=1)
+    _, c1, v1 = obj.eval_cost_vector_encoded(enc, SPACE)
+    _, c2, v2 = obj2.eval_cost_vector_encoded(enc, SPACE)
+    np.testing.assert_allclose(v1, v2, rtol=0)
+    assert not np.allclose(c1, c2)

@@ -283,3 +283,34 @@ def test_budget_caps_sa(pathfinder):
                    moves_per_temp=50, seed=1)
     res = pathfinder.search(strategy=SimulatedAnnealing(cfg), budget=40)
     assert res.evaluations <= 40
+
+
+def test_budget_guard_rejects_zero_and_non_int(pathfinder):
+    """Regression: a zero/negative budget must raise up front in every
+    strategy (not silently run the default schedule), and non-integer
+    budgets (which would truncate in slicing arithmetic) are a
+    TypeError."""
+    strategies = (SimulatedAnnealing(SAConfig(seed=1)),
+                  ParallelTempering(n_chains=2, sweeps=2),
+                  RandomSearch(batch_size=8),
+                  GridSweep(memories=("DDR5",)))
+    for strat in strategies:
+        for bad in (0, -1, -100):
+            with pytest.raises(ValueError, match="budget"):
+                pathfinder.search(strategy=strat, budget=bad)
+        for bad in (1.5, "16", True):
+            with pytest.raises(TypeError, match="budget"):
+                pathfinder.search(strategy=strat, budget=bad)
+
+
+def test_search_result_repr_reports_evaluations(pathfinder):
+    res = pathfinder.search(strategy=RandomSearch(batch_size=16),
+                            budget=32, key=9)
+    r = repr(res)
+    assert "evaluations=32" in r
+    assert "best_cost=" in r and "frontier=" in r
+    res_nf = pathfinder.search(
+        strategy=RandomSearch(batch_size=16, frontier_size=0),
+        budget=16, key=9)
+    assert res_nf.frontier is None
+    assert "frontier=none" in repr(res_nf)

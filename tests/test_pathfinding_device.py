@@ -63,6 +63,7 @@ def test_device_scalar_parity_500(dev):
                 f"{sys.describe()} field {f}: scalar {ref} device {got}")
 
 
+@pytest.mark.slow
 def test_device_pallas_parity(dev):
     """The Pallas prefix-gather path (interpreter mode on CPU) produces
     the same metrics as the plain jitted gathers."""
@@ -147,6 +148,7 @@ def test_propose_batch_deterministic(dev):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_device_pt_trajectory_matches_host_replay(dev, norm):
     """Fixed-seed trajectory equivalence: replaying the device engine's
     recorded proposals and uniforms through a host loop built on scalar
@@ -191,6 +193,7 @@ def test_device_pt_trajectory_matches_host_replay(dev, norm):
     assert res.best_cost == pytest.approx(best_c, rel=1e-9)
 
 
+@pytest.mark.slow
 def test_device_pt_deterministic_and_improves(dev, norm):
     tpl = TEMPLATES["T1"]
     v0 = SPACE.sample(4, key=2)
@@ -207,6 +210,7 @@ def test_device_pt_deterministic_and_improves(dev, norm):
     assert is_valid(SPACE.decode(r1.best_enc))
 
 
+@pytest.mark.slow
 def test_pt_strategy_device_flag(norm):
     """ParallelTempering through the facade: the device engine honors
     budgets (whole sweeps only, evals <= budget) and the scalar fallback

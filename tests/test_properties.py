@@ -1,0 +1,93 @@
+"""Property-based tests over the encode/evaluate/search contracts.
+
+Runs under real ``hypothesis`` when installed (the CI path — see
+requirements-dev.txt) and under the deterministic fixed-example fallback
+otherwise (tests/_hypothesis_fallback.py), so the properties are always
+exercised. The invariants locked down here are the ones the next
+refactor is most likely to break:
+
+* ``DesignSpace`` encode -> decode -> encode is the identity on encoded
+  rows (both directions of the round-trip);
+* every ``sample`` batch passes ``validity_mask`` *and* the scalar
+  ``is_valid`` reference, for arbitrary seeds;
+* ``propose_batch`` outputs stay inside the per-column encoding bounds
+  and valid, for arbitrary seeds — the device move generator can never
+  step outside the design space.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import workload
+from repro.core.system import is_valid
+from repro.pathfinding import DesignSpace, propose_batch
+from repro.pathfinding.pareto import non_dominated_mask, \
+    non_dominated_mask_jnp
+
+SPACE = DesignSpace()
+WL = workload(1)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 96))
+@settings(max_examples=25, deadline=None)
+def test_encode_decode_encode_roundtrip(seed, count):
+    """decode is a right-inverse of encode on sampled rows: the encoded
+    population survives a decode -> encode round-trip bit-for-bit."""
+    batch = SPACE.sample(count, key=seed)
+    again = SPACE.encode_many(SPACE.decode_many(batch))
+    assert np.array_equal(batch, again)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 256))
+@settings(max_examples=25, deadline=None)
+def test_sample_batches_always_valid(seed, count):
+    """Every sampled row is valid by construction: the vectorized mask
+    accepts it and (spot-checked) so does the scalar reference."""
+    batch = SPACE.sample(count, key=seed)
+    assert SPACE.validity_mask(batch).all()
+    lo, hi = SPACE.bounds()
+    active = batch >= 0          # -1 is padding everywhere it appears
+    assert (batch[active] <= np.broadcast_to(hi, batch.shape)[active]).all()
+    for sys in SPACE.decode_many(batch[:8]):
+        assert is_valid(sys)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_propose_batch_stays_in_bounds(seed):
+    """Device moves never leave the encoding: outputs are valid rows
+    whose every column sits inside DesignSpace.bounds()."""
+    enc = SPACE.sample(64, key=seed % 7)   # few pops: shared jit buckets
+    out = propose_batch(enc, WL, space=SPACE, seed=seed)
+    assert out.shape == enc.shape and out.dtype == np.int32
+    assert SPACE.validity_mask(out).all()
+    lo, hi = SPACE.bounds()
+    assert (out >= np.broadcast_to(lo, out.shape)).all()
+    assert (out <= np.broadcast_to(hi, out.shape)).all()
+    for sys in SPACE.decode_many(out[:4]):
+        assert is_valid(sys)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40))
+@settings(max_examples=20, deadline=None)
+def test_non_dominated_filter_equivalence_property(seed, size):
+    """Host reference and jnp filter agree exactly on arbitrary fronts,
+    including injected duplicates."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((size, 3))
+    pts[size // 2] = pts[0]      # force one exact duplicate
+    host = non_dominated_mask(pts)
+    assert (host == non_dominated_mask_jnp(pts)).all()
+    assert host.any()            # a finite front always has a survivor
+
+
+def test_bounds_cover_encoding_columns():
+    lo, hi = SPACE.bounds()
+    assert lo.shape == hi.shape == (SPACE.width,)
+    assert (hi >= lo).all()
+    # spot values: chiplet count and style ranges
+    assert lo[0] == 1 and hi[0] == SPACE.max_chiplets
+    assert hi[1] == 3
+    # sampled batches sit inside the bounds (loose-bound contract)
+    batch = SPACE.sample(128, key=0)
+    assert (batch >= np.broadcast_to(lo, batch.shape)).all()
+    assert (batch <= np.broadcast_to(hi, batch.shape)).all()
