@@ -32,6 +32,7 @@ from benchmarks import (
     pathfinder_batch,
     pathfinder_device,
     roofline,
+    scenario_sweep,
     table06_sa_flows,
     table11_runtime,
 )
@@ -52,6 +53,7 @@ ALL = [
     ("pathfinder_batch", pathfinder_batch),
     ("pathfinder_device", pathfinder_device),
     ("pareto_frontier", pareto_frontier),
+    ("scenario_sweep", scenario_sweep),
 ]
 
 OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")

@@ -273,3 +273,36 @@ def constrain(x, spec_template: Sequence) -> Any:
     mesh = pol["mesh"]
     spec = fit_spec(x.shape, spec_template, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Scenario-axis sharding (pathfinding sweeps)
+# ---------------------------------------------------------------------------
+
+
+def scenario_mesh(min_devices: int = 2) -> Optional[Mesh]:
+    """1-D ``('data',)`` mesh over the local devices for sharding a
+    scenario (deployment grid) axis — e.g. the stacked
+    :class:`repro.pathfinding.device.ScenarioEngine` scan. Returns
+    ``None`` when fewer than ``min_devices`` devices exist (sharding a
+    single device only adds dispatch overhead). On CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+    first jax import to expose N virtual devices."""
+    from repro.launch.mesh import _mesh_kwargs
+
+    n = len(jax.devices())
+    if n < min_devices:
+        return None
+    return jax.make_mesh((n,), ("data",), **_mesh_kwargs(1))
+
+
+def shard_scenarios(arrays: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """Place each array with its *leading* (scenario) axis split over the
+    mesh's data axes. Divisibility-aware via :func:`fit_spec`: an axis
+    that does not divide the scenario count is dropped (the array is
+    replicated) rather than erroring, so ragged grids still run."""
+    out = {}
+    for k, x in arrays.items():
+        spec = fit_spec(x.shape, (DATA,) + (None,) * (x.ndim - 1), mesh)
+        out[k] = jax.device_put(x, NamedSharding(mesh, spec))
+    return out

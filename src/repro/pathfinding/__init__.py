@@ -36,12 +36,15 @@ from repro.pathfinding.batch import (
     MetricsBatch,
     evaluate_batch,
     fit_normalizer_batched,
+    fit_region_normalizers,
     get_evaluator,
 )
 from repro.pathfinding.device import (
     DeviceEvaluator,
+    ScenarioEngine,
     evaluate_batch_device,
     get_device_evaluator,
+    get_scenario_engine,
     propose_batch,
 )
 from repro.pathfinding.pareto import (
@@ -49,6 +52,7 @@ from repro.pathfinding.pareto import (
     ScalarizationSweep,
     ScenarioSweep,
     crowding_distance,
+    fold_cell_key,
     hypervolume,
     non_dominated_mask,
     non_dominated_mask_jnp,
@@ -68,12 +72,14 @@ from repro.pathfinding.strategies import (
 )
 
 __all__ = [
-    "BatchEvaluator", "DeviceEvaluator", "MetricsBatch", "evaluate_batch",
-    "evaluate_batch_device", "fit_normalizer_batched", "get_device_evaluator",
-    "get_evaluator", "propose_batch", "OBJECTIVES", "Pathfinder",
-    "DesignSpace", "GridSweep", "Objective", "ParallelTempering",
-    "ParetoArchive", "RandomSearch", "ScalarizationSweep", "ScenarioSweep",
-    "SearchResult", "SearchStrategy", "SimulatedAnnealing",
-    "crowding_distance", "hypervolume", "non_dominated_mask",
-    "non_dominated_mask_jnp", "simplex_directions", "workloads_from_configs",
+    "BatchEvaluator", "DeviceEvaluator", "MetricsBatch", "ScenarioEngine",
+    "evaluate_batch", "evaluate_batch_device", "fit_normalizer_batched",
+    "fit_region_normalizers", "fold_cell_key", "get_device_evaluator",
+    "get_evaluator", "get_scenario_engine", "propose_batch", "OBJECTIVES",
+    "Pathfinder", "DesignSpace", "GridSweep", "Objective",
+    "ParallelTempering", "ParetoArchive", "RandomSearch",
+    "ScalarizationSweep", "ScenarioSweep", "SearchResult", "SearchStrategy",
+    "SimulatedAnnealing", "crowding_distance", "hypervolume",
+    "non_dominated_mask", "non_dominated_mask_jnp", "simplex_directions",
+    "workloads_from_configs",
 ]

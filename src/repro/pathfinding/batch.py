@@ -911,3 +911,34 @@ def fit_normalizer_batched(wl: GEMMWorkload, db: TechDB = DEFAULT_DB,
     space = space or DesignSpace(db, max_chiplets)
     mb = evaluate_batch(space.sample(samples, key=seed), wl, db, space=space)
     return Normalizer.fit_arrays(mb.fields())
+
+
+def fit_region_normalizers(wl: GEMMWorkload, intensities,
+                           db: TechDB = DEFAULT_DB,
+                           samples: int = 400, seed: int = 1234,
+                           space: Optional[DesignSpace] = None,
+                           max_chiplets: int = 6) -> List[Normalizer]:
+    """One normalizer per grid carbon intensity from a *single* batched
+    evaluation.
+
+    Of the six Eq. 17 metrics only operational CFP depends on the
+    deployment region, and it does so as a pure scalar multiple:
+    ``ope = energy * runs / 3.6e6 * carbon_intensity``. So a region
+    sweep's per-cell normalizer fits — previously one full
+    ``evaluate_batch`` per (workload, region) cell — collapse to one
+    evaluation of the sample population at the base ``db`` plus an exact
+    per-region recompute of the ``ope`` column (identical operations in
+    identical order, so each returned normalizer is bit-identical to a
+    full per-region fit)."""
+    space = space or DesignSpace(db, max_chiplets)
+    mb = evaluate_batch(space.sample(samples, key=seed), wl, db, space=space)
+    fields = mb.fields()
+    active_s = db.lifetime_years * SECONDS_PER_YEAR * db.use_fraction
+    runs = db.duty_runs_per_s * active_s
+    energy = np.asarray(fields["energy_j"], dtype=np.float64)
+    out = []
+    for ci in intensities:
+        per_region = dict(fields)
+        per_region["ope_cfp_kg"] = energy * runs / 3.6e6 * np.float64(ci)
+        out.append(Normalizer.fit_arrays(per_region))
+    return out

@@ -40,6 +40,15 @@ accumulation order, Algorithm 1's sorted-order power summation), so the
 jitted path stays within the 1e-6 relative parity contract of the scalar
 :func:`repro.core.evaluate.evaluate` — in practice ~1e-15.
 
+* :class:`ScenarioEngine` — the stacked twin for deployment grids: the
+  grid carbon intensity, per-cell normalizer/weight rows and the
+  per-workload tile totals are *runtime* data of the same fused program
+  (tile prefix tables ride in a bucket-padded per-workload stack), so a
+  whole region x workload :class:`~repro.pathfinding.pareto
+  .ScenarioSweep` runs in one ``lax.scan`` with one XLA compile,
+  ``fold_in``-derived per-cell keys, and optional scenario-axis sharding
+  over local devices.
+
 The hottest stage-3 inner loop (prefix-table gather + per-chiplet-slot
 segment reduction) can optionally run through the Pallas kernel in
 :mod:`repro.kernels.prefix_gather` (``use_pallas=True`` or
@@ -53,7 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -116,7 +125,6 @@ class _Cfg:
     interposer_wafer_cost: float
     yield_alpha: float
     wafer_diameter_mm: float
-    carbon_intensity: float
     lifetime_years: float
     use_fraction: float
     duty_runs_per_s: float
@@ -502,11 +510,19 @@ def _gather_sims(v, a_idx, s_idx, di, start, end, tb, cfg: _Cfg):
     return sims, mn_bits
 
 
-def _metrics_jax(v, tb, cfg: _Cfg):
+def _metrics_jax(v, tb, cfg: _Cfg, ci, rt=None):
     """The 13 MetricsBatch arrays for an encoded population, fully jitted.
 
     Mirrors ``BatchEvaluator.__call__`` stage by stage (same operation
-    order where floating-point ties matter)."""
+    order where floating-point ties matter).
+
+    ``ci`` is the grid carbon intensity as a *runtime* scalar (or
+    per-row vector): region sweeps ride through the compiled program as
+    data instead of forcing a retrace per region. ``rt`` optionally
+    overrides the per-workload compile-time constants (``T0``/``T1``
+    tile totals, ``wr_bits``) with traced values — the stacked scenario
+    engine's workload axis; ``cfg.T0``/``cfg.T1`` then only bound the
+    (padded) prefix-table gathers."""
     import jax.numpy as jnp
 
     C = cfg.C
@@ -525,7 +541,9 @@ def _metrics_jax(v, tb, cfg: _Cfg):
 
     powers = jnp.where(nmask, tb["t_power"][a_idx, t_idx], 0.0)
     split = v[:, COL_SPLITK]
-    total = jnp.where(split == 1, cfg.T1, cfg.T0)
+    t0 = cfg.T0 if rt is None else rt["T0"]
+    t1 = cfg.T1 if rt is None else rt["T1"]
+    total = jnp.where(split == 1, t1, t0)
     start, count = _assign_jax(powers, nmask, v[:, COL_ORDER], total, cfg)
     end = start + count
     di = jnp.broadcast_to(v[:, COL_DATAFLOW][:, None], (P, C))
@@ -556,7 +574,8 @@ def _metrics_jax(v, tb, cfg: _Cfg):
 
     # Eq. 5 term 3: DRAM write-back (split-K dependent)
     eff_dest = jnp.take_along_axis(eff_bw, dest[:, None], axis=1)[:, 0]
-    wr_split = cfg.wr_bits / eff_dest
+    wr_bits = cfg.wr_bits if rt is None else rt["wr_bits"]
+    wr_split = wr_bits / eff_dest
     wr_direct = jnp.max(jnp.where(wr > 0, wr / den_bw, 0.0), axis=1)
     l_wr = jnp.where(split == 1, wr_split, wr_direct)
     latency = l_cr + l_d2d + l_wr
@@ -601,7 +620,7 @@ def _metrics_jax(v, tb, cfg: _Cfg):
     emb = mfg + des + pkg_cfp
     active_s = cfg.lifetime_years * SECONDS_PER_YEAR * cfg.use_fraction
     runs = cfg.duty_runs_per_s * active_s
-    ope = energy * runs / 3.6e6 * cfg.carbon_intensity
+    ope = energy * runs / 3.6e6 * ci
 
     return (latency, energy, area, dollar, emb, ope, l_cr, l_d2d, l_wr,
             e_compute_j, e_d2d_j, jnp.sum(loads, axis=1),
@@ -624,16 +643,17 @@ def _nb_yield(area, d0: float, alpha: float):
     return (1.0 + area * d0 / alpha) ** (-alpha)
 
 
-def _eval_cost_jax(v, mins, medians, w, tb, cfg: _Cfg):
+def _eval_cost_jax(v, mins, medians, w, ci, tb, cfg: _Cfg, rt=None):
     """Fused metrics + Eq. 17 cost (METRIC_FIELDS column order) + the
     ``OBJECTIVE_AXES`` vector ``(latency_s, dollar, total_cfp)``.
 
     ``w`` is either a single ``[6]`` weight row or a per-row ``[P, 6]``
     matrix (the scalarization-sweep case: every chain scalarizes with
-    its own direction inside the same program)."""
+    its own direction inside the same program). ``ci``/``rt`` are the
+    runtime region/workload knobs of :func:`_metrics_jax`."""
     import jax.numpy as jnp
 
-    mets = _metrics_jax(v, tb, cfg)
+    mets = _metrics_jax(v, tb, cfg, ci, rt)
     x = jnp.stack([mets[1], mets[2], mets[0], mets[3], mets[4], mets[5]],
                   axis=1)
     cost = ((x - mins[None, :]) / medians[None, :]
@@ -844,6 +864,145 @@ def _propose_jax(key, v, tb, cfg: _Cfg):
     return jnp.where(ok[:, None], cand, v).astype(jnp.int32)
 
 
+def _exchange_fn(inv_t, us, pair_ok):
+    """Adjacent-pair replica-exchange step for ``lax.fori_loop``, shared
+    verbatim by the single-scenario scan and the stacked scenario engine
+    (one definition => the two cannot drift apart).
+
+    ``d >= 0`` short-circuits in the host loop, so only exp of
+    non-positive ``d`` is ever compared; ``pair_ok`` gates swaps across
+    independent ladders (scalarization-direction / cell boundaries)."""
+    import jax.numpy as jnp
+
+    def ex_body(j, vc):
+        vv, cc = vc
+        c_i, c_j = cc[j], cc[j + 1]
+        d = (inv_t[j] - inv_t[j + 1]) * (c_i - c_j)
+        sw = pair_ok[j] & (
+            (d >= 0) | (us[j] < jnp.exp(jnp.minimum(d, 0.0))))
+        cc = cc.at[j].set(jnp.where(sw, c_j, c_i)) \
+               .at[j + 1].set(jnp.where(sw, c_i, c_j))
+        v_i, v_j = vv[j], vv[j + 1]
+        vv = vv.at[j].set(jnp.where(sw, v_j, v_i)) \
+               .at[j + 1].set(jnp.where(sw, v_i, v_j))
+        return (vv, cc)
+
+    return ex_body
+
+
+# ---------------------------------------------------------------------------
+# Compile accounting + shared table/cfg builders
+# ---------------------------------------------------------------------------
+
+# program-family name -> number of traces. A jit-wrapped Python function
+# body runs exactly once per fresh XLA compile (shape/dtype/sharding
+# cache misses) and never on cache hits, so counting calls from inside
+# the wrapped function is a faithful compile counter — the hook the
+# one-compile regression tests and benchmarks read via trace_count().
+_TRACE_COUNTS: Dict[str, int] = {}
+
+
+def _count_trace(name: str) -> None:
+    _TRACE_COUNTS[name] = _TRACE_COUNTS.get(name, 0) + 1
+
+
+def trace_count(name: str) -> int:
+    """Traces (= XLA compiles) of the named fused-program family in this
+    process: ``"eval_cost"`` (fused evaluate+cost), ``"pt"`` (the
+    single-scenario tempering scan), ``"scenario_pt"`` (the stacked
+    scenario scan), ``"scenario_eval"`` (the stacked one-shot eval)."""
+    return _TRACE_COUNTS.get(name, 0)
+
+
+def _base_cfg(sp: DesignSpace, db: TechDB, T0: int, T1: int,
+              wr_bits: float, use_pallas: bool) -> _Cfg:
+    """The static trace-time constants shared by every fused program over
+    one (TechDB, DesignSpace) — tile bounds and wr_bits vary per engine."""
+    return _Cfg(
+        C=sp.max_chiplets, W=sp.width, A=len(sp.arrays),
+        T_nodes=len(sp.nodes), S=int(sp.n_sram.max()),
+        M=len(sp.memories), n_pairs25=len(sp.pairs_25d),
+        n_pairs3=len(sp.pairs_3d),
+        n_pkg25=len(sp.pkg25_pairs), n_pkg3=len(sp.pkg3_pairs),
+        L=sp.max_chiplets * (sp.max_chiplets - 1) // 2
+        + sp.max_chiplets - 1,
+        T0=T0, T1=T1, wr_bits=wr_bits,
+        acost=db.assembly_cost,
+        substrate_cost_mm2=db.substrate_cost_mm2,
+        substrate_cfp_mm2=db.substrate_cfp_mm2,
+        interposer_cpa=db.interposer_cpa,
+        interposer_defect=db.interposer_defect,
+        interposer_wafer_cost=db.interposer_wafer_cost,
+        yield_alpha=db.yield_alpha,
+        wafer_diameter_mm=db.wafer_diameter_mm,
+        lifetime_years=db.lifetime_years,
+        use_fraction=db.use_fraction,
+        duty_runs_per_s=db.duty_runs_per_s,
+        use_pallas=use_pallas,
+    )
+
+
+def _shared_tables(host, sp: DesignSpace) -> dict:
+    """Workload-independent jnp tables (chiplet physicals, node rates,
+    memory energies, package info, move tables) — identical for every
+    workload and every deployment region over one (db, space), so the
+    single-workload evaluator and the stacked scenario engine share the
+    same builder. Call under ``enable_x64``."""
+    import jax.numpy as jnp
+
+    mt = sp.move_tables()
+    return dict(
+        # per-chiplet physicals / node rates / memory energies are
+        # stacked along a trailing axis: one gather per site
+        chiplet=jnp.asarray(np.stack(
+            [host.t_area, host.t_static, host.t_cost, host.t_mfg],
+            axis=-1)),
+        node=jnp.asarray(np.stack(
+            [host.t_freq, host.t_sram_e, host.t_mac_e, host.t_des],
+            axis=-1)),
+        mem3=jnp.asarray(np.stack(
+            [host.m_rd, host.m_wr, host.m_cost], axis=-1)),
+        t_power=jnp.asarray(host.t_power),
+        m_bw=jnp.asarray(host.m_bw),
+        p25=jnp.asarray([i[:7] for i in host.p25_info]),
+        p25_interp=jnp.asarray([i[7] for i in host.p25_info]),
+        p3=jnp.asarray([i[:7] for i in host.p3_info]),
+        n_sram=jnp.asarray(sp.n_sram),
+        **{k: jnp.asarray(a) for k, a in mt.items()},
+    )
+
+
+def _tile_tables(host) -> dict:
+    """Per-workload prefix-sum tables. Call under ``enable_x64``."""
+    import jax.numpy as jnp
+
+    return dict(
+        # [A, S, 3, T+1, 5]: the 5 sim metrics ride in the trailing
+        # axis so one gather fetches all of them
+        pref0=jnp.asarray(np.stack(
+            [host.tiles[0]["pref"][f] for f in _SIM_METRICS], axis=-1)),
+        pref1=jnp.asarray(np.stack(
+            [host.tiles[1]["pref"][f] for f in _SIM_METRICS], axis=-1)),
+        mn0=jnp.asarray(host.tiles[0]["mn_pref"]),
+        mn1=jnp.asarray(host.tiles[1]["mn_pref"]),
+    )
+
+
+def _pallas_tables(host) -> dict:
+    """Flattened [(A*S*3), T+1] float64 copies for the Pallas kernel
+    (prefix magnitudes < 2^53, so float64 is exact)."""
+    import jax.numpy as jnp
+
+    out = {}
+    for sk, name in ((0, "pref0_flat"), (1, "pref1_flat")):
+        pref = np.stack(
+            [host.tiles[sk]["pref"][f] for f in _SIM_METRICS])
+        out[name] = jnp.asarray(
+            pref.reshape(len(_SIM_METRICS), -1,
+                         pref.shape[-1]).astype(np.float64))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # The device evaluator + lax.scan tempering engine
 # ---------------------------------------------------------------------------
@@ -892,7 +1051,6 @@ class DeviceEvaluator:
                  space: Optional[DesignSpace] = None,
                  use_pallas: Optional[bool] = None):
         import jax
-        import jax.numpy as jnp
         from jax.experimental import enable_x64
 
         self.wl, self.db, self.tile_sizes = wl, db, tile_sizes
@@ -901,78 +1059,25 @@ class DeviceEvaluator:
         self.space = host.space
         sp = self.space
         use_pallas = _resolve_pallas(use_pallas)
-        self.cfg = _Cfg(
-            C=sp.max_chiplets, W=sp.width, A=len(sp.arrays),
-            T_nodes=len(sp.nodes), S=int(sp.n_sram.max()),
-            M=len(sp.memories), n_pairs25=len(sp.pairs_25d),
-            n_pairs3=len(sp.pairs_3d),
-            n_pkg25=len(sp.pkg25_pairs), n_pkg3=len(sp.pkg3_pairs),
-            L=sp.max_chiplets * (sp.max_chiplets - 1) // 2
-            + sp.max_chiplets - 1,
-            T0=host.tiles[0]["T"], T1=host.tiles[1]["T"],
+        self.cfg = _base_cfg(
+            sp, db, T0=host.tiles[0]["T"], T1=host.tiles[1]["T"],
             wr_bits=float(wl.M * wl.N * OPERAND_BYTES * 8),
-            acost=db.assembly_cost,
-            substrate_cost_mm2=db.substrate_cost_mm2,
-            substrate_cfp_mm2=db.substrate_cfp_mm2,
-            interposer_cpa=db.interposer_cpa,
-            interposer_defect=db.interposer_defect,
-            interposer_wafer_cost=db.interposer_wafer_cost,
-            yield_alpha=db.yield_alpha,
-            wafer_diameter_mm=db.wafer_diameter_mm,
-            carbon_intensity=db.carbon_intensity,
-            lifetime_years=db.lifetime_years,
-            use_fraction=db.use_fraction,
-            duty_runs_per_s=db.duty_runs_per_s,
-            use_pallas=use_pallas,
-        )
-        mt = sp.move_tables()
+            use_pallas=use_pallas)
         with enable_x64():
-            tb = dict(
-                # per-chiplet physicals / node rates / memory energies are
-                # stacked along a trailing axis: one gather per site
-                chiplet=jnp.asarray(np.stack(
-                    [host.t_area, host.t_static, host.t_cost, host.t_mfg],
-                    axis=-1)),
-                node=jnp.asarray(np.stack(
-                    [host.t_freq, host.t_sram_e, host.t_mac_e, host.t_des],
-                    axis=-1)),
-                mem3=jnp.asarray(np.stack(
-                    [host.m_rd, host.m_wr, host.m_cost], axis=-1)),
-                t_power=jnp.asarray(host.t_power),
-                m_bw=jnp.asarray(host.m_bw),
-                p25=jnp.asarray([i[:7] for i in host.p25_info]),
-                p25_interp=jnp.asarray([i[7] for i in host.p25_info]),
-                p3=jnp.asarray([i[:7] for i in host.p3_info]),
-                # [A, S, 3, T+1, 5]: the 5 sim metrics ride in the
-                # trailing axis so one gather fetches all of them
-                pref0=jnp.asarray(np.stack(
-                    [host.tiles[0]["pref"][f] for f in _SIM_METRICS],
-                    axis=-1)),
-                pref1=jnp.asarray(np.stack(
-                    [host.tiles[1]["pref"][f] for f in _SIM_METRICS],
-                    axis=-1)),
-                mn0=jnp.asarray(host.tiles[0]["mn_pref"]),
-                mn1=jnp.asarray(host.tiles[1]["mn_pref"]),
-                n_sram=jnp.asarray(sp.n_sram),
-                **{k: jnp.asarray(a) for k, a in mt.items()},
-            )
+            tb = {**_shared_tables(host, sp), **_tile_tables(host)}
             if use_pallas:
-                # flattened [(A*S*3), T+1] float64 copies for the kernel
-                # (prefix magnitudes < 2^53, so float64 is exact)
-                for sk, name in ((0, "pref0_flat"), (1, "pref1_flat")):
-                    pref = np.stack(
-                        [host.tiles[sk]["pref"][f] for f in _SIM_METRICS])
-                    tb[name] = jnp.asarray(
-                        pref.reshape(len(_SIM_METRICS), -1,
-                                     pref.shape[-1]).astype(np.float64))
+                tb.update(_pallas_tables(host))
         self.tables = tb
         cfg = self.cfg
         # donate the padded population buffer (no-op on CPU, where XLA
         # cannot reuse host-backed int buffers and would warn)
         donate = () if jax.default_backend() == "cpu" else (0,)
-        self._eval_cost_jit = jax.jit(
-            lambda v, mins, med, w: _eval_cost_jax(v, mins, med, w, tb, cfg),
-            donate_argnums=donate)
+
+        def _eval_fn(v, mins, med, w, ci):
+            _count_trace("eval_cost")
+            return _eval_cost_jax(v, mins, med, w, ci, tb, cfg)
+
+        self._eval_cost_jit = jax.jit(_eval_fn, donate_argnums=donate)
         self._propose_jit = jax.jit(
             lambda key, v: _propose_jax(key, v, tb, cfg))
         self._pt_cache: Dict[tuple, object] = {}
@@ -1017,7 +1122,8 @@ class DeviceEvaluator:
             mins, medians = norm.weights_arrays()
             mets, cost, vec = self._eval_cost_jit(
                 jnp.asarray(v), jnp.asarray(mins), jnp.asarray(medians),
-                jnp.asarray(np.asarray(template.weights, dtype=np.float64)))
+                jnp.asarray(np.asarray(template.weights, dtype=np.float64)),
+                jnp.asarray(np.float64(self.db.carbon_intensity)))
             arrs = [np.asarray(m)[:n_real] for m in mets]
             return (MetricsBatch(*arrs), np.asarray(cost)[:n_real],
                     np.asarray(vec)[:n_real])
@@ -1054,8 +1160,9 @@ class DeviceEvaluator:
 
         tb, cfg = self.tables, self.cfg
 
-        def run(v0, temps, key, mins, med, w, pair_ok):
-            _, cost0, vec0 = _eval_cost_jax(v0, mins, med, w, tb, cfg)
+        def run(v0, temps, key, mins, med, w, pair_ok, ci):
+            _count_trace("pt")
+            _, cost0, vec0 = _eval_cost_jax(v0, mins, med, w, ci, tb, cfg)
             bi = jnp.argmin(cost0)
             inv_t = 1.0 / temps
 
@@ -1063,7 +1170,8 @@ class DeviceEvaluator:
                 v, costs, best_v, best_c, key = carry
                 key, kp, ka, ksw = jax.random.split(key, 4)
                 prop = _propose_jax(kp, v, tb, cfg)
-                _, pcost, pvec = _eval_cost_jax(prop, mins, med, w, tb, cfg)
+                _, pcost, pvec = _eval_cost_jax(prop, mins, med, w, ci,
+                                                tb, cfg)
                 u = jax.random.uniform(ka, (n,), dtype=jnp.float64)
                 delta = pcost - costs
                 accept = (delta <= 0) | (
@@ -1078,24 +1186,7 @@ class DeviceEvaluator:
                 us = jax.random.uniform(ksw, (max(n - 1, 1),),
                                         dtype=jnp.float64)
                 do_swap = (sweep % swap_every) == 0
-
-                def ex_body(j, vc):
-                    vv, cc = vc
-                    ci, cj = cc[j], cc[j + 1]
-                    d = (inv_t[j] - inv_t[j + 1]) * (ci - cj)
-                    # d >= 0 short-circuits in the host loop, so only
-                    # exp of non-positive d is ever compared; pair_ok
-                    # gates swaps across independent ladders (the
-                    # scalarization sweep's direction boundaries)
-                    sw = pair_ok[j] & (
-                        (d >= 0) | (us[j] < jnp.exp(jnp.minimum(d, 0.0))))
-                    cc = cc.at[j].set(jnp.where(sw, cj, ci)) \
-                           .at[j + 1].set(jnp.where(sw, ci, cj))
-                    vi, vj = vv[j], vv[j + 1]
-                    vv = vv.at[j].set(jnp.where(sw, vj, vi)) \
-                           .at[j + 1].set(jnp.where(sw, vi, vj))
-                    return (vv, cc)
-
+                ex_body = _exchange_fn(inv_t, us, pair_ok)
                 v, costs = jax.lax.cond(
                     do_swap,
                     lambda vc: jax.lax.fori_loop(0, n - 1, ex_body, vc),
@@ -1166,7 +1257,8 @@ class DeviceEvaluator:
             carry, ys, cost0, vec0 = fn(
                 jnp.asarray(v0), jnp.asarray(np.asarray(temps, np.float64)),
                 jax.random.PRNGKey(seed), jnp.asarray(mins),
-                jnp.asarray(medians), jnp.asarray(w), jnp.asarray(pair_ok))
+                jnp.asarray(medians), jnp.asarray(w), jnp.asarray(pair_ok),
+                jnp.asarray(np.float64(self.db.carbon_intensity)))
             v_fin, costs_fin, best_v, best_c, _ = carry
             coldest, best_hist = ys[0], ys[1]
             history = ([float(np.min(np.asarray(cost0)))]
@@ -1198,6 +1290,357 @@ class DeviceEvaluator:
                 final_enc=np.asarray(v_fin),
                 final_costs=np.asarray(costs_fin), trace=trace,
                 samples=samples)
+
+
+# ---------------------------------------------------------------------------
+# The stacked scenario engine: one compile for a region x workload grid
+# ---------------------------------------------------------------------------
+
+
+def _tile_bucket(t: int) -> int:
+    """Power-of-two tile-count bucket (>= 64): workload sets whose max
+    tile counts land in the same bucket produce identically shaped
+    stacked programs (the scenario twin of the population `_pad`)."""
+    return max(64, 1 << (int(t) - 1).bit_length())
+
+
+def _pad_tiles(a: np.ndarray, bucket: int, axis: int) -> np.ndarray:
+    """Edge-pad a prefix table's T+1 axis to bucket+1 slots. Tile-range
+    gathers never index past the true per-workload total (starts/ends
+    sum to it), and edge replication makes any clipped tail slot
+    difference to exactly zero anyway."""
+    cur = a.shape[axis]
+    if cur == bucket + 1:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, bucket + 1 - cur)
+    return np.pad(a, pad, mode="edge")
+
+
+@dataclasses.dataclass
+class ScenarioPTResult:
+    """Per-cell outputs of the stacked scenario tempering scan (leading
+    axis = scenario cell everywhere)."""
+
+    best_enc: np.ndarray          # [S, width]
+    best_cost: np.ndarray         # [S]
+    history: np.ndarray           # [S, 1 + sweeps] coldest-chain costs
+    evaluations: int              # total across all cells
+    final_enc: np.ndarray         # [S, n, width]
+    final_costs: np.ndarray       # [S, n]
+    # every evaluated design + its OBJECTIVE_AXES vector, seed population
+    # first: enc [1 + sweeps, S, n, width], vec [1 + sweeps, S, n, 3]
+    samples: Optional[Dict[str, np.ndarray]] = None
+
+
+class ScenarioEngine:
+    """One fused program for a whole scenario grid.
+
+    The per-cell knobs of a (workload x deployment region) sweep are all
+    runtime data of the fused evaluate+cost program: the grid carbon
+    intensity (a scalar multiplier of operational CFP), the per-cell
+    normalizer rows and Eq. 17 weight rows, and the per-workload tile
+    totals / DRAM write-back bits (their prefix tables ride in a stacked,
+    tile-bucket-padded lookup indexed by a per-cell workload id). One
+    ``lax.scan`` over a ``vmap``-ped per-cell tempering step therefore
+    sweeps the full grid in a *single* XLA compile — where the PR-3 path
+    paid a fresh ``DeviceEvaluator`` build plus full program retrace per
+    region even though only one scalar changed.
+
+    Per-cell RNG: the scan folds the cell index into the base key
+    (``jax.random.fold_in``), so every cell gets a distinct,
+    deterministic proposal stream that depends only on (seed, cell
+    index) — not on the grid's size or order.
+
+    The scenario axis can be sharded across local devices with a mesh
+    from :func:`repro.distributed.sharding.scenario_mesh` (pass it as
+    ``mesh=``); inputs are placed with their leading axis split over the
+    mesh's data axes and XLA partitions the scan accordingly.
+
+    The stacked engine always uses the plain jnp gather path (the Pallas
+    prefix-gather kernel remains a single-workload engine option)."""
+
+    def __init__(self, workloads: Sequence[GEMMWorkload],
+                 db: TechDB = DEFAULT_DB,
+                 tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
+                 space: Optional[DesignSpace] = None):
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        self.workloads = tuple(workloads)
+        if not self.workloads:
+            raise ValueError("ScenarioEngine needs >= 1 workload")
+        self.db, self.tile_sizes = db, tile_sizes
+        hosts = [get_evaluator(wl, db, tile_sizes, space)
+                 for wl in self.workloads]
+        self.hosts = hosts
+        self.space = hosts[0].space
+        sp = self.space
+        t0s = [h.tiles[0]["T"] for h in hosts]
+        t1s = [h.tiles[1]["T"] for h in hosts]
+        tb0, tb1 = _tile_bucket(max(t0s)), _tile_bucket(max(t1s))
+        self.cfg = _base_cfg(sp, db, T0=tb0, T1=tb1, wr_bits=0.0,
+                             use_pallas=False)
+        with enable_x64():
+            tb = _shared_tables(hosts[0], sp)
+            tb.update(
+                pref0w=jnp.asarray(np.stack([
+                    _pad_tiles(np.stack(
+                        [h.tiles[0]["pref"][f] for f in _SIM_METRICS],
+                        axis=-1), tb0, axis=-2) for h in hosts])),
+                pref1w=jnp.asarray(np.stack([
+                    _pad_tiles(np.stack(
+                        [h.tiles[1]["pref"][f] for f in _SIM_METRICS],
+                        axis=-1), tb1, axis=-2) for h in hosts])),
+                mn0w=jnp.asarray(np.stack(
+                    [_pad_tiles(h.tiles[0]["mn_pref"], tb0, axis=0)
+                     for h in hosts])),
+                mn1w=jnp.asarray(np.stack(
+                    [_pad_tiles(h.tiles[1]["mn_pref"], tb1, axis=0)
+                     for h in hosts])),
+                t0w=jnp.asarray(np.asarray(t0s, dtype=np.int32)),
+                t1w=jnp.asarray(np.asarray(t1s, dtype=np.int32)),
+                wrw=jnp.asarray(np.asarray(
+                    [float(wl.M * wl.N * OPERAND_BYTES * 8)
+                     for wl in self.workloads])),
+            )
+        self.tables = tb
+        self._fn_cache: Dict[tuple, object] = {}
+
+    # -- per-cell table/runtime slices (wi is a traced scalar) -------------
+
+    def _cell_tables(self, wi):
+        tb = self.tables
+        tbc = dict(tb, pref0=tb["pref0w"][wi], pref1=tb["pref1w"][wi],
+                   mn0=tb["mn0w"][wi], mn1=tb["mn1w"][wi])
+        rt = dict(T0=tb["t0w"][wi], T1=tb["t1w"][wi],
+                  wr_bits=tb["wrw"][wi])
+        return tbc, rt
+
+    # -- one-shot stacked evaluation (normalizer fits, finalization) -------
+
+    def _eval_fn(self, S: int, m: int):
+        key_t = ("eval", S, m)
+        fn = self._fn_cache.get(key_t)
+        if fn is not None:
+            return fn
+        import jax
+
+        cfg = self.cfg
+
+        def run(v, mins, med, w, ci, widx):
+            _count_trace("scenario_eval")
+
+            def cell(v_s, mins_s, med_s, w_s, ci_s, wi):
+                tbc, rt = self._cell_tables(wi)
+                _, cost, vec = _eval_cost_jax(v_s, mins_s, med_s, w_s,
+                                              ci_s, tbc, cfg, rt)
+                return cost, vec
+
+            return jax.vmap(cell)(v, mins, med, w, ci, widx)
+
+        fn = jax.jit(run)
+        self._fn_cache[key_t] = fn
+        return fn
+
+    def evaluate_cost(self, encoded: np.ndarray, mins: np.ndarray,
+                      medians: np.ndarray, weights: np.ndarray,
+                      ci: np.ndarray, widx: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fused cost + objective vectors for a stacked ``[S, m, width]``
+        population (per-cell ``[S, 6]`` normalizer rows / weight rows,
+        ``[S]`` carbon intensities and workload ids). Returns
+        ``(cost [S, m], vec [S, m, 3])``; the row axis is padded to a
+        power-of-two bucket so repeated calls share one program."""
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            v = np.asarray(encoded, dtype=np.int32)
+            S, m, _ = v.shape
+            mb = max(64, 1 << (m - 1).bit_length())
+            if mb != m:
+                v = np.concatenate(
+                    [v, np.repeat(v[:, :1], mb - m, axis=1)], axis=1)
+            fn = self._eval_fn(S, mb)
+            cost, vec = fn(
+                jnp.asarray(v),
+                jnp.asarray(np.asarray(mins, np.float64).reshape(S, 6)),
+                jnp.asarray(np.asarray(medians, np.float64).reshape(S, 6)),
+                jnp.asarray(np.asarray(weights, np.float64).reshape(S, 6)),
+                jnp.asarray(np.asarray(ci, np.float64).reshape(S)),
+                jnp.asarray(np.asarray(widx, np.int32).reshape(S)))
+            return np.asarray(cost)[:, :m], np.asarray(vec)[:, :m]
+
+    # -- the stacked tempering scan ----------------------------------------
+
+    def _pt_fn(self, S: int, n: int, sweeps: int, swap_every: int,
+               collect_samples: bool):
+        key_t = ("pt", S, n, sweeps, swap_every, collect_samples)
+        fn = self._fn_cache.get(key_t)
+        if fn is not None:
+            return fn
+        import jax
+        import jax.numpy as jnp
+
+        tb, cfg = self.tables, self.cfg
+
+        def eval_cell(v_s, mins_s, med_s, w_s, ci_s, wi):
+            tbc, rt = self._cell_tables(wi)
+            _, cost, vec = _eval_cost_jax(v_s, mins_s, med_s, w_s, ci_s,
+                                          tbc, cfg, rt)
+            return cost, vec
+
+        def cell_step(key_s, v_s, costs_s, temps_s, inv_s, mins_s, med_s,
+                      w_s, pair_s, ci_s, wi, sweep):
+            key_s, kp, ka, ksw = jax.random.split(key_s, 4)
+            prop = _propose_jax(kp, v_s, tb, cfg)
+            pcost, pvec = eval_cell(prop, mins_s, med_s, w_s, ci_s, wi)
+            u = jax.random.uniform(ka, (n,), dtype=jnp.float64)
+            delta = pcost - costs_s
+            accept = (delta <= 0) | (
+                u < jnp.exp(-delta / jnp.maximum(temps_s, 1e-12)))
+            v_s = jnp.where(accept[:, None], prop, v_s)
+            costs_s = jnp.where(accept, pcost, costs_s)
+            acc = jnp.where(accept, pcost, jnp.inf)
+            i = jnp.argmin(acc)
+            cand_c, cand_v = acc[i], prop[i]
+            us = jax.random.uniform(ksw, (max(n - 1, 1),),
+                                    dtype=jnp.float64)
+            do_swap = (sweep % swap_every) == 0
+            ex_body = _exchange_fn(inv_s, us, pair_s)
+            v_s, costs_s = jax.lax.cond(
+                do_swap,
+                lambda vc: jax.lax.fori_loop(0, n - 1, ex_body, vc),
+                lambda vc: vc, (v_s, costs_s))
+            return key_s, v_s, costs_s, cand_v, cand_c, prop, pvec
+
+        def run(v0, temps, key, mins, med, w, pair_ok, ci, widx):
+            _count_trace("scenario_pt")
+            keys0 = jax.vmap(
+                lambda i: jax.random.fold_in(key, i))(jnp.arange(S))
+            cost0, vec0 = jax.vmap(eval_cell)(v0, mins, med, w, ci, widx)
+            bi0 = jnp.argmin(cost0, axis=1)
+            best_v0 = jnp.take_along_axis(
+                v0, bi0[:, None, None], axis=1)[:, 0]
+            best_c0 = jnp.take_along_axis(cost0, bi0[:, None], axis=1)[:, 0]
+            inv_t = 1.0 / temps
+
+            def body(carry, sweep):
+                v, costs, best_v, best_c, keys = carry
+                keys, v, costs, cand_v, cand_c, prop, pvec = jax.vmap(
+                    cell_step,
+                    in_axes=(0,) * 11 + (None,),
+                )(keys, v, costs, temps, inv_t, mins, med, w, pair_ok,
+                  ci, widx, sweep)
+                better = cand_c < best_c
+                best_c = jnp.where(better, cand_c, best_c)
+                best_v = jnp.where(better[:, None], cand_v, best_v)
+                ys = (costs[:, -1], best_c)
+                if collect_samples:
+                    ys = ys + (prop, pvec)
+                return (v, costs, best_v, best_c, keys), ys
+
+            carry, ys = jax.lax.scan(
+                body, (v0, cost0, best_v0, best_c0, keys0),
+                jnp.arange(sweeps))
+            return carry, ys, cost0, vec0
+
+        fn = jax.jit(run)
+        self._fn_cache[key_t] = fn
+        return fn
+
+    def parallel_tempering(self, v0: np.ndarray, temps, sweeps: int,
+                           swap_every: int, seed: int, mins, medians,
+                           weights, pair_mask, ci, widx,
+                           collect_samples: bool = True,
+                           mesh=None) -> ScenarioPTResult:
+        """Run the whole scenario grid in one fused scan.
+
+        ``v0`` is ``[S, n, width]`` (cell-major seed populations),
+        ``temps``/``weights``/``pair_mask`` the per-cell ladder / Eq. 17
+        rows / exchange gates, ``mins``/``medians`` the per-cell
+        normalizer rows, ``ci`` the per-cell grid carbon intensities and
+        ``widx`` the per-cell workload indices into this engine's
+        workload tuple. ``mesh`` (optional) shards the scenario axis."""
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            v0 = np.asarray(v0, dtype=np.int32)
+            if v0.ndim != 3:
+                raise ValueError(f"v0 must be [S, n, width], got {v0.shape}")
+            S, n, _ = v0.shape
+            sweeps = int(sweeps)
+            widx_a = np.asarray(widx, dtype=np.int32).reshape(S)
+            if widx_a.min(initial=0) < 0 or \
+                    widx_a.max(initial=0) >= len(self.workloads):
+                raise ValueError(
+                    f"widx out of range for {len(self.workloads)} workloads")
+            arrays = dict(
+                v0=v0,
+                temps=np.asarray(temps, np.float64).reshape(S, n),
+                mins=np.asarray(mins, np.float64).reshape(S, 6),
+                med=np.asarray(medians, np.float64).reshape(S, 6),
+                w=np.asarray(weights, np.float64).reshape(S, n, 6),
+                pair_ok=np.asarray(pair_mask, bool).reshape(
+                    S, max(n - 1, 1)),
+                ci=np.asarray(ci, np.float64).reshape(S),
+                widx=widx_a,
+            )
+            if mesh is not None:
+                from repro.distributed.sharding import shard_scenarios
+
+                arrays = shard_scenarios(arrays, mesh)
+            fn = self._pt_fn(S, n, sweeps, int(swap_every),
+                             bool(collect_samples))
+            carry, ys, cost0, vec0 = fn(
+                jnp.asarray(arrays["v0"]), jnp.asarray(arrays["temps"]),
+                jax.random.PRNGKey(seed), jnp.asarray(arrays["mins"]),
+                jnp.asarray(arrays["med"]), jnp.asarray(arrays["w"]),
+                jnp.asarray(arrays["pair_ok"]), jnp.asarray(arrays["ci"]),
+                jnp.asarray(arrays["widx"]))
+            v_fin, costs_fin, best_v, best_c, _ = carry
+            hist0 = np.min(np.asarray(cost0), axis=1)[:, None]
+            history = np.concatenate([hist0, np.asarray(ys[0]).T], axis=1)
+            samples = None
+            if collect_samples:
+                samples = dict(
+                    enc=np.concatenate(
+                        [v0[None], np.asarray(ys[2])]),
+                    vec=np.concatenate(
+                        [np.asarray(vec0)[None], np.asarray(ys[3])]))
+            return ScenarioPTResult(
+                best_enc=np.asarray(best_v),
+                best_cost=np.asarray(best_c),
+                history=history,
+                evaluations=S * n * (1 + sweeps),
+                final_enc=np.asarray(v_fin),
+                final_costs=np.asarray(costs_fin),
+                samples=samples)
+
+
+_SCENARIO_ENGINES: Dict[tuple, Tuple[TechDB, "ScenarioEngine"]] = {}
+_SCENARIO_ENGINE_CACHE_MAX = 4
+
+
+def get_scenario_engine(workloads: Sequence[GEMMWorkload],
+                        db: TechDB = DEFAULT_DB,
+                        tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
+                        space: Optional[DesignSpace] = None
+                        ) -> ScenarioEngine:
+    """Cached :class:`ScenarioEngine` per (workload tuple, db, tiles,
+    chiplet bound) — the stacked twin of :func:`get_device_evaluator`."""
+    from repro.pathfinding.batch import cached_evaluator
+
+    key = (tuple(workloads), id(db), tile_sizes,
+           space.max_chiplets if space is not None else
+           DEFAULT_MAX_CHIPLETS)
+    return cached_evaluator(
+        _SCENARIO_ENGINES, key, db,
+        lambda: ScenarioEngine(workloads, db, tile_sizes, space),
+        _SCENARIO_ENGINE_CACHE_MAX)
 
 
 # ---------------------------------------------------------------------------

@@ -25,10 +25,13 @@ frontier a first-class search output instead of an ad-hoc rescan:
   direction's temperature ladder independent inside a single fused
   ``lax.scan`` (reusing the PR-2 engine). Every evaluation feeds the
   archive, so one call maps the frontier.
-* :class:`ScenarioSweep` — the deployment axis: the same frontier sweep
-  repeated over a grid of ``TechDB.carbon_intensity`` values (regions)
-  and multiple workloads (Table IV GEMMs or MLP GEMMs derived from
-  ``repro/configs`` model configs via :func:`workloads_from_configs`).
+* :class:`ScenarioSweep` — the deployment axis: a grid of
+  ``TechDB.carbon_intensity`` values (regions) x workloads (Table IV
+  GEMMs or MLP GEMMs derived from ``repro/configs`` model configs via
+  :func:`workloads_from_configs`). On the device path the whole grid is
+  one stacked program (:class:`repro.pathfinding.device.ScenarioEngine`:
+  a single compile, per-cell ``fold_in``-derived keys, total budget
+  split across cells, optional scenario-axis sharding).
 
 Every search strategy now returns its archive through
 ``SearchResult.frontier``::
@@ -434,14 +437,43 @@ class ScalarizationSweep:
             return w
         return directions_to_weights(simplex_directions(self.directions))
 
+    # per-chain layouts, shared verbatim by the single-cell device path
+    # and ScenarioSweep's stacked grid (one definition => no drift)
+
+    def ladder(self) -> np.ndarray:
+        """Geometric ``n_chains`` temperature ladder t_max -> t_min."""
+        n = self.n_chains
+        ratio = (self.t_min / self.t_max) ** (1.0 / max(1, n - 1))
+        return np.array([self.t_max * ratio ** i for i in range(n)])
+
+    def chain_temps(self, k: int) -> np.ndarray:
+        """``[k * n_chains]`` temperatures: the ladder repeated per
+        direction."""
+        return np.tile(self.ladder(), k)
+
+    def chain_weights(self, w6: np.ndarray) -> np.ndarray:
+        """``[K * n_chains, 6]`` per-chain Eq. 17 rows from ``[K, 6]``
+        direction rows."""
+        return np.repeat(w6, self.n_chains, axis=0)
+
+    def chain_pair_mask(self, total: int) -> np.ndarray:
+        """Replica-exchange gate: block swaps across direction
+        boundaries — pair (j, j+1) may swap only when both chains share
+        a direction ladder."""
+        if total <= 1:
+            return np.ones(1, dtype=bool)
+        return (np.arange(total - 1) + 1) % self.n_chains != 0
+
     def search(self, space: DesignSpace, objective, budget=None, key=None):
         from repro.pathfinding.strategies import (
             ParallelTempering,
             SearchResult,
             _check_budget,
+            _resolve_key,
         )
 
         _check_budget(budget)
+        key = _resolve_key(key)
         if self.frontier_size < 1:
             raise ValueError(
                 "ScalarizationSweep requires frontier_size >= 1: the "
@@ -457,18 +489,15 @@ class ScalarizationSweep:
                     f"budget {budget} < one chain population {total} "
                     f"({k} directions x {n} chains)")
             sweeps = min(sweeps, (budget - total) // total)
-        ratio = (self.t_min / self.t_max) ** (1.0 / max(1, n - 1))
-        ladder = [self.t_max * ratio ** i for i in range(n)]
 
         if objective.device:
-            return self._search_device(space, objective, w6, ladder,
-                                       sweeps, key)
+            return self._search_device(space, objective, w6, sweeps, key)
 
         # host fallback: one PT run per direction, frontiers merged
         archive = ParetoArchive(max_size=self.frontier_size)
         evals = 0
         history: List[float] = []
-        base = 0 if key is None else key
+        base = key
         for i in range(k):
             obj_i = dataclasses.replace(
                 objective,
@@ -484,26 +513,23 @@ class ScalarizationSweep:
                 archive.merge(res.frontier)
         return self._finalize(space, objective, archive, history, evals)
 
-    def _search_device(self, space: DesignSpace, objective, w6, ladder,
+    def _search_device(self, space: DesignSpace, objective, w6,
                        sweeps: int, key):
         from repro.pathfinding.device import get_device_evaluator
         from repro.pathfinding.strategies import SearchResult  # noqa: F401
 
         k, n = w6.shape[0], self.n_chains
         total = k * n
-        rng = random.Random(0 if key is None else key)
+        rng = random.Random(key)
         chains = [random_system(rng, objective.db, space.max_chiplets)
                   for _ in range(total)]
-        temps = np.tile(np.asarray(ladder, dtype=np.float64), k)
-        weights = np.repeat(w6, n, axis=0)                    # [K*N, 6]
-        # block replica exchange across direction boundaries: pair (j,
-        # j+1) may swap only when both chains share a direction
-        pair_ok = (np.arange(total - 1) + 1) % n != 0 if total > 1 \
-            else np.ones(1, dtype=bool)
+        temps = self.chain_temps(k)
+        weights = self.chain_weights(w6)                      # [K*N, 6]
+        pair_ok = self.chain_pair_mask(total)
         dev = get_device_evaluator(objective.wl, objective.db, space=space)
         res = dev.parallel_tempering(
             space.encode_many(chains), temps, sweeps, self.swap_every,
-            seed=0 if key is None else key, norm=objective.norm,
+            seed=key, norm=objective.norm,
             template=objective.template, weights=weights,
             pair_mask=np.asarray(pair_ok, dtype=bool))
         archive = ParetoArchive(max_size=self.frontier_size)
@@ -559,6 +585,25 @@ def workloads_from_configs(names: Sequence[str],
     return out
 
 
+def fold_cell_key(base: int, idx: int) -> int:
+    """Deterministic per-cell search key: ``jax.random.fold_in`` of the
+    cell index into the base key, reduced to a Python int.
+
+    Distinct (workload, region) cells therefore explore with distinct,
+    reproducible proposal streams — previously every cell received the
+    *same* key and walked the identical stream. The stacked device scan
+    applies the same fold on-device; the host fallback (and per-cell
+    seed populations) use this helper."""
+    import jax
+
+    folded = jax.random.fold_in(jax.random.PRNGKey(base), idx)
+    key_data = getattr(jax.random, "key_data", None)
+    data = key_data(folded) if key_data is not None else folded
+    a, b = (int(x) for x in np.ravel(np.asarray(data))[-2:])
+    # 63-bit result: folded keys are themselves valid PRNGKey seeds
+    return ((a << 32) | b) & 0x7FFF_FFFF_FFFF_FFFF
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One (workload, deployment region) cell of a sweep."""
@@ -607,12 +652,29 @@ class ScenarioFrontier:
 class ScenarioSweep:
     """Map the Pareto frontier across deployment regions and workloads.
 
-    For each (workload, carbon-intensity) cell this builds a ``TechDB``
-    with the region's grid intensity (operational CFP scales with it, so
-    both the frontier *and* the region-fitted normalizer shift), fits a
-    normalizer, and runs the inner strategy — by default a
-    :class:`ScalarizationSweep`, so each cell yields a full frontier in
-    one device program."""
+    Each (workload, grid-carbon-intensity) cell runs the inner
+    :class:`ScalarizationSweep` under the region's intensity (operational
+    CFP scales with it, so both the frontier *and* the region-fitted
+    normalizer shift) with a distinct per-cell key (``fold_cell_key``).
+
+    On the device path the whole grid is **one stacked program**: the
+    per-cell carbon intensities, normalizer rows, Eq. 17 weight rows and
+    ``fold_in``-derived keys all ride through the single ``lax.scan`` of
+    :class:`repro.pathfinding.device.ScenarioEngine`, so a 5-region x
+    2-workload sweep compiles the fused program exactly once (the
+    per-cell path re-built a ``Pathfinder``/``DeviceEvaluator`` and paid
+    a full retrace per region even though only one scalar changed).
+    Normalizer fits batch the same way: one ``evaluate_batch`` per
+    workload plus an exact per-region ``ope`` rescale
+    (:func:`repro.pathfinding.batch.fit_region_normalizers`).
+
+    ``budget`` is the *total* evaluation budget of the sweep, split
+    evenly across cells (``budget // n_cells`` each; the remainder is
+    left unspent — previously each cell silently consumed the full
+    budget). ``shard="auto"`` shards the scenario axis over the local
+    devices when more than one exists
+    (:func:`repro.distributed.sharding.scenario_mesh`); ``True`` forces
+    a mesh, ``False`` keeps everything on one device."""
 
     strategy: ScalarizationSweep = dataclasses.field(
         default_factory=lambda: ScalarizationSweep(directions=8,
@@ -621,28 +683,156 @@ class ScenarioSweep:
         default_factory=lambda: dict(REGION_INTENSITIES))
     norm_samples: int = 400
     norm_seed: int = 1234
+    shard: Union[bool, str] = "auto"
 
     def run(self, workloads: Union[GEMMWorkload, Sequence[GEMMWorkload]],
             template: Union[str, Template] = "T1",
             db: TechDB = DEFAULT_DB, device: bool = True,
             budget: Optional[int] = None,
             key: Optional[int] = None) -> ScenarioFrontier:
+        from repro.pathfinding.batch import fit_region_normalizers
         from repro.pathfinding.pathfinder import Pathfinder
+        from repro.pathfinding.strategies import _check_budget, _resolve_key
 
+        _check_budget(budget)
         if isinstance(workloads, GEMMWorkload):
             workloads = [workloads]
+        workloads = list(workloads)
         tpl = TEMPLATES[template] if isinstance(template, str) else template
+        base = _resolve_key(key)
+        regions = list(self.regions.items())
+        # cell-major grid: workloads outer, regions inner (the historical
+        # iteration order — cell index = wi * len(regions) + ri)
+        cells = [(wi, wl, region, ci)
+                 for wi, wl in enumerate(workloads)
+                 for region, ci in regions]
+        cell_budget = None
+        if budget is not None:
+            cell_budget = budget // len(cells)
+            if cell_budget < 1:
+                raise ValueError(
+                    f"total budget {budget} < one evaluation per cell "
+                    f"({len(cells)} cells)")
+        # fail fast on inputs the inner ScalarizationSweep would reject
+        # per cell anyway — *before* paying the normalizer fits
+        strat = self.strategy
+        if hasattr(strat, "weight_rows"):
+            if strat.frontier_size < 1:
+                raise ValueError(
+                    "ScenarioSweep requires frontier_size >= 1 on its "
+                    "inner ScalarizationSweep (the per-cell frontier "
+                    "archives are the sweep's output), got "
+                    f"{strat.frontier_size}")
+            k = strat.weight_rows().shape[0]
+            nc = k * strat.n_chains
+            if cell_budget is not None and cell_budget < nc:
+                raise ValueError(
+                    f"per-cell budget {cell_budget} < one chain "
+                    f"population {nc} ({k} directions x {strat.n_chains} "
+                    f"chains); total budget must be >= "
+                    f"{nc * len(cells)}")
+        space = DesignSpace(db)
+        norm_of: Dict[Tuple[int, str], object] = {}
+        for wi, wl in enumerate(workloads):
+            fitted = fit_region_normalizers(
+                wl, [ci for _, ci in regions], db,
+                samples=self.norm_samples, seed=self.norm_seed, space=space)
+            for (region, _), nz in zip(regions, fitted):
+                norm_of[(wi, region)] = nz
+        if device:
+            return self._run_device(cells, workloads, tpl, db, space,
+                                    norm_of, cell_budget, base)
+
+        # host fallback: one Pathfinder per cell, distinct folded keys,
+        # split budget, pre-fitted region normalizers
         scenarios: List[Scenario] = []
         results: Dict[Tuple[str, str], object] = {}
-        for wl in workloads:
-            for region, ci in self.regions.items():
-                db_s = dataclasses.replace(db, carbon_intensity=ci)
-                pf = Pathfinder(wl, tpl, db=db_s, device=device)
-                pf.fit_normalizer(samples=self.norm_samples,
-                                  seed=self.norm_seed)
-                res = pf.search(strategy=self.strategy, budget=budget,
-                                key=key)
-                sc = Scenario(wl, region, ci)
-                scenarios.append(sc)
-                results[sc.key] = res
+        for idx, (wi, wl, region, ci) in enumerate(cells):
+            db_s = dataclasses.replace(db, carbon_intensity=ci)
+            pf = Pathfinder(wl, tpl, db=db_s, device=False,
+                            norm=norm_of[(wi, region)])
+            res = pf.search(strategy=self.strategy, budget=cell_budget,
+                            key=fold_cell_key(base, idx))
+            sc = Scenario(wl, region, ci)
+            scenarios.append(sc)
+            results[sc.key] = res
+        return ScenarioFrontier(scenarios, results)
+
+    def _mesh(self):
+        if self.shard is False:
+            return None
+        from repro.distributed.sharding import scenario_mesh
+
+        return scenario_mesh(min_devices=1 if self.shard is True else 2)
+
+    def _run_device(self, cells, workloads, tpl, db, space, norm_of,
+                    cell_budget, base) -> ScenarioFrontier:
+        from repro.core.evaluate import evaluate
+        from repro.core.scalesim import SimCache
+        from repro.pathfinding.device import get_scenario_engine
+        from repro.pathfinding.strategies import SearchResult
+
+        strat = self.strategy
+        w6 = strat.weight_rows()
+        k = w6.shape[0]
+        nc = k * strat.n_chains
+        sweeps = strat.sweeps
+        if cell_budget is not None:
+            sweeps = min(sweeps, (cell_budget - nc) // nc)
+        S = len(cells)
+        # per-chain layouts come from the inner strategy itself, so the
+        # stacked grid and the single-cell device path cannot drift
+        temps = np.tile(strat.chain_temps(k), (S, 1))
+        weights = np.tile(strat.chain_weights(w6)[None], (S, 1, 1))
+        pair = np.tile(strat.chain_pair_mask(nc), (S, 1))
+        mm = [norm_of[(wi, region)].weights_arrays()
+              for (wi, _, region, _) in cells]
+        mins = np.stack([a for a, _ in mm])
+        medians = np.stack([b for _, b in mm])
+        ci = np.array([c for *_, c in cells], dtype=np.float64)
+        widx = np.array([wi for wi, *_ in cells], dtype=np.int32)
+        v0 = np.stack([
+            space.encode_many([
+                random_system(random.Random(fold_cell_key(base, idx)),
+                              db, space.max_chiplets)
+                for _ in range(nc)])
+            for idx in range(S)])
+        engine = get_scenario_engine(tuple(workloads), db, space=space)
+        res = engine.parallel_tempering(
+            v0, temps, sweeps, strat.swap_every, seed=base, mins=mins,
+            medians=medians, weights=weights, pair_mask=pair, ci=ci,
+            widx=widx, mesh=self._mesh())
+
+        archives = []
+        for s in range(S):
+            arch = ParetoArchive(max_size=strat.frontier_size)
+            arch.insert(res.samples["enc"][:, s].reshape(-1, space.width),
+                        res.samples["vec"][:, s].reshape(-1, N_AXES))
+            archives.append(arch)
+        # best-by-template per cell: ONE stacked re-evaluation of the
+        # (padded) archives — not counted against the budget, like the PT
+        # winner re-materialization
+        m = max(len(a) for a in archives)
+        enc_f = np.stack([
+            a.encoded if len(a) == m else np.concatenate(
+                [a.encoded, np.repeat(a.encoded[:1], m - len(a), axis=0)])
+            for a in archives])
+        wt = np.tile(np.asarray(tpl.weights, dtype=np.float64), (S, 1))
+        cost_f, _ = engine.evaluate_cost(enc_f, mins, medians, wt, ci, widx)
+        cache = SimCache()
+        evals_cell = nc * (1 + sweeps)
+        scenarios: List[Scenario] = []
+        results: Dict[Tuple[str, str], object] = {}
+        for s, (wi, wl, region, c) in enumerate(cells):
+            arch = archives[s]
+            cc = cost_f[s, :len(arch)]
+            i = int(np.argmin(cc))
+            best = space.decode(arch.encoded[i])
+            db_s = dataclasses.replace(db, carbon_intensity=c)
+            best_m = evaluate(best, wl, db_s, cache=cache)
+            sc = Scenario(wl, region, c)
+            scenarios.append(sc)
+            results[sc.key] = SearchResult(
+                best, best_m, float(cc[i]), res.history[s].tolist(),
+                evals_cell, cache, frontier=arch)
         return ScenarioFrontier(scenarios, results)

@@ -164,3 +164,33 @@ class Pathfinder:
 
             strategy = ScalarizationSweep()
         return self.search(strategy, budget, key).frontier
+
+    def run_scenarios(self, sweep=None, workloads=None, regions=None,
+                      budget: Optional[int] = None,
+                      key: Optional[int] = None):
+        """Map frontiers across deployment regions (and optionally extra
+        workloads) with this Pathfinder's template/TechDB — a
+        :class:`~repro.pathfinding.pareto.ScenarioSweep` whose whole
+        region x workload grid runs as one stacked device program on the
+        device path (one compile; see
+        :class:`repro.pathfinding.device.ScenarioEngine`).
+
+        ``budget`` is the sweep's *total* evaluation budget, split evenly
+        across cells. Returns a
+        :class:`~repro.pathfinding.pareto.ScenarioFrontier`."""
+        import dataclasses
+
+        from repro.pathfinding.pareto import ScenarioSweep
+
+        if not self.batched:
+            raise ValueError(
+                "run_scenarios requires the carbonpath objective backend: "
+                "ScenarioSweep rebuilds per-cell objectives from the "
+                "TechDB and cannot carry a custom or chipletgym "
+                "evaluate_fn")
+        sweep = sweep or ScenarioSweep()
+        if regions is not None:
+            sweep = dataclasses.replace(sweep, regions=dict(regions))
+        wls = [self.wl] if workloads is None else list(workloads)
+        return sweep.run(wls, template=self.template, db=self.db,
+                         device=self.device, budget=budget, key=key)

@@ -174,6 +174,17 @@ class SearchStrategy(Protocol):
         ...
 
 
+# ``key=None`` resolves to this fixed default instead of 0, so passing
+# ``key=0`` is a *distinct*, fully valid seed (previously both collapsed
+# onto the same RNG stream). Any fixed constant works; this one is the
+# 32-bit golden-ratio mix constant, far from hand-typed seeds.
+DEFAULT_SEARCH_KEY = 0x9E3779B9
+
+
+def _resolve_key(key: Optional[int]) -> int:
+    return DEFAULT_SEARCH_KEY if key is None else key
+
+
 def _check_budget(budget: Optional[int]) -> None:
     """Every strategy's first line: ``budget`` is None (strategy default
     schedule) or a positive integer evaluation cap. 0/negative budgets
@@ -197,7 +208,13 @@ def _check_budget(budget: Optional[int]) -> None:
 class SimulatedAnnealing:
     """The paper's SA engine. For a given config/seed this reproduces the
     seed ``anneal(...)`` trajectory exactly (same RNG stream, same moves,
-    same scalar evaluations through the shared SimCache)."""
+    same scalar evaluations through the shared SimCache).
+
+    Unlike the other strategies, ``key=None`` defers to ``config.seed``
+    (the explicit, golden-pinned SA default) rather than
+    :data:`DEFAULT_SEARCH_KEY` — so with the default ``SAConfig(seed=0)``
+    an explicit ``key=0`` is the same stream; pass a config seed or an
+    explicit key to vary it."""
 
     config: "SAConfig" = None  # type: ignore[assignment]
     initial: Optional[HISystem] = None
@@ -288,8 +305,9 @@ class ParallelTempering:
         from repro.pathfinding.pareto import FrontierFeed
 
         _check_budget(budget)
+        key = _resolve_key(key)
         db = objective.db
-        rng = random.Random(0 if key is None else key)
+        rng = random.Random(key)
         # the initial population costs one evaluation per chain, so a
         # tiny budget bounds the ladder width itself
         n = self.n_chains if budget is None else min(self.n_chains, budget)
@@ -357,7 +375,7 @@ class ParallelTempering:
             sweeps = min(sweeps, max(0, budget - n) // n)
         res = dev.parallel_tempering(
             space.encode_many(chains), np.asarray(temps), sweeps,
-            self.swap_every, seed=0 if key is None else key,
+            self.swap_every, seed=key,
             norm=objective.norm, template=objective.template,
             collect_samples=self.frontier_size > 0)
         archive = None
@@ -407,7 +425,7 @@ class RandomSearch:
 
         _check_budget(budget)
         budget = budget if budget is not None else 2048
-        rng = np.random.default_rng(0 if key is None else key)
+        rng = np.random.default_rng(_resolve_key(key))
         feed = FrontierFeed(self.frontier_size)
         best = best_m = None
         best_c = math.inf
