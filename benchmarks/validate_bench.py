@@ -1,0 +1,94 @@
+"""Validate the committed perf trajectory (``BENCH_pathfinder.json``).
+
+Schema (one entry per benchmark measurement at a commit)::
+
+    {"schema": 1,
+     "entries": [{"benchmark": "<name>", "commit": "<sha>",
+                  "metrics": {...non-empty...}}, ...]}
+
+Checks enforced so a malformed bench point fails the PR instead of
+landing silently:
+
+  * top level is an object with ``schema == 1`` and an ``entries`` list;
+  * every entry has non-empty string ``benchmark`` / ``commit`` keys and
+    a non-empty dict ``metrics``, with no unknown keys;
+  * the trajectory is monotone: no duplicate (benchmark, commit) pairs —
+    re-measuring a commit must *replace* its entries, never double-count
+    them (``benchmarks.run --trajectory`` does this).
+
+No third-party imports: runnable before any dependency install.
+
+Usage: ``python -m benchmarks.validate_bench [BENCH_pathfinder.json]``
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+ALLOWED_KEYS = {"benchmark", "commit", "metrics"}
+
+
+def validate(doc) -> List[str]:
+    """Return a list of human-readable problems (empty = valid)."""
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"top level must be an object, got {type(doc).__name__}"]
+    if doc.get("schema") != 1:
+        errors.append(f"schema must be 1, got {doc.get('schema')!r}")
+    entries = doc.get("entries")
+    if not isinstance(entries, list):
+        errors.append("missing/invalid 'entries' list")
+        return errors
+    seen = set()
+    for i, e in enumerate(entries):
+        where = f"entries[{i}]"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        unknown = set(e) - ALLOWED_KEYS
+        if unknown:
+            errors.append(f"{where}: unknown keys {sorted(unknown)}")
+        for key in ("benchmark", "commit"):
+            v = e.get(key)
+            if not isinstance(v, str) or not v.strip():
+                errors.append(f"{where}: {key!r} must be a non-empty "
+                              f"string, got {v!r}")
+        m = e.get("metrics")
+        if not isinstance(m, dict) or not m:
+            errors.append(f"{where}: 'metrics' must be a non-empty "
+                          f"object, got {type(m).__name__}")
+        pair = (e.get("benchmark"), e.get("commit"))
+        if all(isinstance(x, str) for x in pair):
+            if pair in seen:
+                errors.append(
+                    f"{where}: duplicate (benchmark, commit) pair "
+                    f"{pair} — trajectory must be monotone (one "
+                    "measurement per benchmark per commit)")
+            seen.add(pair)
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    path = argv[0] if argv else "BENCH_pathfinder.json"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable ({e})", file=sys.stderr)
+        return 1
+    errors = validate(doc)
+    for err in errors:
+        print(f"{path}: {err}", file=sys.stderr)
+    if errors:
+        return 1
+    n = len(doc["entries"])
+    benches = {e["benchmark"] for e in doc["entries"]}
+    commits = {e["commit"] for e in doc["entries"]}
+    print(f"{path}: OK ({n} entries, {len(benches)} benchmarks, "
+          f"{len(commits)} commits)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

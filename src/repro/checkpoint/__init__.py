@@ -1,7 +1,10 @@
 from repro.checkpoint.checkpoint import (
+    ELASTIC,
     CheckpointManager,
+    CorruptCheckpointError,
     load_checkpoint,
     save_checkpoint,
 )
 
-__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]
+__all__ = ["CheckpointManager", "CorruptCheckpointError", "ELASTIC",
+           "save_checkpoint", "load_checkpoint"]

@@ -60,6 +60,7 @@ from repro.pathfinding.pareto import (
     workloads_from_configs,
 )
 from repro.pathfinding.pathfinder import OBJECTIVES, Pathfinder
+from repro.pathfinding.resume import SearchCheckpointer, search_fingerprint
 from repro.pathfinding.space import DesignSpace
 from repro.pathfinding.strategies import (
     GridSweep,
@@ -78,7 +79,8 @@ __all__ = [
     "get_evaluator", "get_scenario_engine", "propose_batch", "OBJECTIVES",
     "Pathfinder", "DesignSpace", "GridSweep", "Objective",
     "ParallelTempering", "ParetoArchive", "RandomSearch",
-    "ScalarizationSweep", "ScenarioSweep", "SearchResult", "SearchStrategy",
+    "ScalarizationSweep", "ScenarioSweep", "SearchCheckpointer",
+    "SearchResult", "SearchStrategy", "search_fingerprint",
     "SimulatedAnnealing", "crowding_distance", "hypervolume",
     "non_dominated_mask", "non_dominated_mask_jnp", "simplex_directions",
     "workloads_from_configs",

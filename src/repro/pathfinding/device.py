@@ -27,11 +27,14 @@ module moves the whole explore -> evaluate -> accept loop onto the device:
   scalar retry loop).
 * :meth:`DeviceEvaluator.parallel_tempering` — the full ParallelTempering
   sweep (propose, evaluate, Metropolis accept, sequential adjacent-pair
-  replica exchange) fused into one ``jax.lax.scan``; Python is touched
-  only at the start (encode the seed population) and the end (history /
-  best decode). ``record_trace=True`` additionally returns every
-  proposal and uniform draw so a host reference can replay the exact
-  trajectory (the trajectory-equivalence tests).
+  replica exchange) fused into ``jax.lax.scan`` chunks advanced by a
+  host loop (``segment=`` sweeps per chunk; default one chunk). The
+  chunking is bit-invisible — same key stream, same sweep indices — and
+  its boundaries are where long searches snapshot carry + frontier
+  archive for checkpoint/resume (:mod:`repro.pathfinding.resume`).
+  ``record_trace=True`` additionally returns every proposal and uniform
+  draw so a host reference can replay the exact trajectory (the
+  trajectory-equivalence tests).
 
 Numerics: everything runs in float64 (``jax.experimental.enable_x64``
 scoped to this module's entry points) and replicates the host evaluator's
@@ -890,6 +893,42 @@ def _exchange_fn(inv_t, us, pair_ok):
     return ex_body
 
 
+def _key_to_np(key) -> np.ndarray:
+    """Raw PRNG key data as a host array (typed-key safe) — the carry's
+    RNG stream position is checkpointed as plain uint32 words."""
+    import jax
+
+    try:
+        return np.asarray(key)
+    except TypeError:
+        return np.asarray(jax.random.key_data(key))
+
+
+def _key_from_np(data: np.ndarray, like_key):
+    """Rebuild a key usable by ``jax.random`` from saved raw words,
+    matching the flavor (raw/typed) of ``like_key``."""
+    import jax
+    import jax.numpy as jnp
+
+    try:
+        np.asarray(like_key)
+        return jnp.asarray(data)
+    except TypeError:
+        return jax.random.wrap_key_data(jnp.asarray(data))
+
+
+# trailing shapes of the per-sweep trace fields (the zero-sweep edge)
+_TRACE_TAILS = (
+    lambda n, w: (n, w),             # proposals
+    lambda n, w: (n,),               # proposal_costs
+    lambda n, w: (n,),               # u_accept
+    lambda n, w: (max(n - 1, 1),),   # u_swap
+    lambda n, w: (n,),               # accepted
+    lambda n, w: (n,),               # costs
+    lambda n, w: (),                 # best_per_sweep
+)
+
+
 # ---------------------------------------------------------------------------
 # Compile accounting + shared table/cfg builders
 # ---------------------------------------------------------------------------
@@ -909,8 +948,10 @@ def _count_trace(name: str) -> None:
 def trace_count(name: str) -> int:
     """Traces (= XLA compiles) of the named fused-program family in this
     process: ``"eval_cost"`` (fused evaluate+cost), ``"pt"`` (the
-    single-scenario tempering scan), ``"scenario_pt"`` (the stacked
-    scenario scan), ``"scenario_eval"`` (the stacked one-shot eval)."""
+    single-scenario tempering scan — one compile per distinct segment
+    length), ``"pt_init"`` (its seed-population eval),
+    ``"scenario_pt"`` / ``"scenario_init"`` (the stacked scenario
+    twins), ``"scenario_eval"`` (the stacked one-shot eval)."""
     return _TRACE_COUNTS.get(name, 0)
 
 
@@ -1148,10 +1189,39 @@ class DeviceEvaluator:
             return np.asarray(out)
 
     # -- the fused tempering engine ----------------------------------------
+    #
+    # The sweep loop is *segmented*: a host loop advances the scan in
+    # fixed-size chunks (default: one chunk covering every sweep), with
+    # the carry round-tripping between jit calls. Segment boundaries are
+    # where long searches snapshot their state (see
+    # :mod:`repro.pathfinding.resume`) — and because the per-sweep body,
+    # the key stream (carried through the scan) and the sweep indices
+    # (``sweep0 + arange(seg)``) are identical to the monolithic scan,
+    # segmentation does not change a single bit of the trajectory. Each
+    # distinct segment length compiles once ("pt" in trace_count); the
+    # seed-population evaluation is its own tiny program ("pt_init").
 
-    def _pt_fn(self, n: int, sweeps: int, swap_every: int,
+    def _pt_init_fn(self, n: int):
+        key_t = ("init", n)
+        fn = self._pt_cache.get(key_t)
+        if fn is not None:
+            return fn
+        import jax
+
+        tb, cfg = self.tables, self.cfg
+
+        def init(v0, mins, med, w, ci):
+            _count_trace("pt_init")
+            _, cost0, vec0 = _eval_cost_jax(v0, mins, med, w, ci, tb, cfg)
+            return cost0, vec0
+
+        fn = jax.jit(init)
+        self._pt_cache[key_t] = fn
+        return fn
+
+    def _pt_fn(self, n: int, seg: int, swap_every: int,
                record_trace: bool, collect_samples: bool):
-        key_t = (n, sweeps, swap_every, record_trace, collect_samples)
+        key_t = (n, seg, swap_every, record_trace, collect_samples)
         fn = self._pt_cache.get(key_t)
         if fn is not None:
             return fn
@@ -1160,10 +1230,9 @@ class DeviceEvaluator:
 
         tb, cfg = self.tables, self.cfg
 
-        def run(v0, temps, key, mins, med, w, pair_ok, ci):
+        def run(v0, costs0, best_v0, best_c0, key, sweep0, temps, mins,
+                med, w, pair_ok, ci):
             _count_trace("pt")
-            _, cost0, vec0 = _eval_cost_jax(v0, mins, med, w, ci, tb, cfg)
-            bi = jnp.argmin(cost0)
             inv_t = 1.0 / temps
 
             def body(carry, sweep):
@@ -1199,9 +1268,9 @@ class DeviceEvaluator:
                 return (v, costs, best_v, best_c, key), ys
 
             carry, ys = jax.lax.scan(
-                body, (v0, cost0, v0[bi], cost0[bi], key),
-                jnp.arange(sweeps))
-            return carry, ys, cost0, vec0
+                body, (v0, costs0, best_v0, best_c0, key),
+                sweep0 + jnp.arange(seg))
+            return carry, ys
 
         fn = jax.jit(run)
         self._pt_cache[key_t] = fn
@@ -1213,12 +1282,15 @@ class DeviceEvaluator:
                            record_trace: bool = False,
                            weights: Optional[np.ndarray] = None,
                            pair_mask: Optional[np.ndarray] = None,
-                           collect_samples: bool = True) -> DevicePTResult:
+                           collect_samples: bool = True,
+                           segment: Optional[int] = None,
+                           checkpoint=None, resume: bool = True,
+                           archive=None) -> DevicePTResult:
         """Run the fused propose/evaluate/accept/exchange scan.
 
         ``v0`` is the encoded seed population (one row per chain, coldest
         chain last as in the host strategy); ``temps`` the matching
-        temperature ladder. Python is re-entered only after all sweeps.
+        temperature ladder.
 
         ``weights`` (``[n, 6]``) gives every chain its own Eq. 17
         scalarization row (default: ``template.weights`` for all) and
@@ -1227,17 +1299,40 @@ class DeviceEvaluator:
         scalarization ladders in one program (the
         :class:`~repro.pathfinding.pareto.ScalarizationSweep` engine).
         ``collect_samples`` returns every evaluated design + its
-        objective vector in ``.samples`` for Pareto-archive feeding."""
+        objective vector in ``.samples`` for Pareto-archive feeding.
+
+        ``segment`` chops the scan into host-driven chunks of that many
+        sweeps (default: one chunk); the chunking is invisible in the
+        results — same key stream, same sweep indices, bit-identical
+        trajectory. ``archive`` (a
+        :class:`~repro.pathfinding.pareto.ParetoArchive`) is fed each
+        segment's samples in place of returning ``.samples``, and
+        ``checkpoint`` (a
+        :class:`~repro.pathfinding.resume.SearchCheckpointer`) snapshots
+        carry + archive + history at every boundary; with ``resume=True``
+        the newest valid snapshot is restored and the run continues to
+        ``sweeps`` (``record_trace`` cannot be combined with
+        checkpointing)."""
         import jax
         import jax.numpy as jnp
         from jax.experimental import enable_x64
 
         with enable_x64():
             v0 = np.atleast_2d(np.asarray(v0, dtype=np.int32))
-            n = v0.shape[0]
+            n, width = v0.shape
             sweeps = int(sweeps)
-            fn = self._pt_fn(n, sweeps, int(swap_every), bool(record_trace),
-                             bool(collect_samples))
+            if segment is not None and int(segment) < 1:
+                raise ValueError(f"segment must be >= 1, got {segment}")
+            seg_size = max(1, sweeps) if segment is None else int(segment)
+            if checkpoint is not None and record_trace:
+                raise ValueError(
+                    "record_trace records host-replay state for the full "
+                    "run and cannot be checkpointed/resumed")
+            if checkpoint is not None and collect_samples and archive is None:
+                raise ValueError(
+                    "checkpointing with collect_samples requires an "
+                    "archive= to feed: bulk .samples live only in process "
+                    "memory and would be lost across a resume")
             mins, medians = norm.weights_arrays()
             if weights is None:
                 w = np.tile(np.asarray(template.weights, np.float64), (n, 1))
@@ -1254,36 +1349,127 @@ class DeviceEvaluator:
                     raise ValueError(
                         f"pair_mask must be [{max(n - 1, 1)}], "
                         f"got {pair_ok.shape}")
-            carry, ys, cost0, vec0 = fn(
-                jnp.asarray(v0), jnp.asarray(np.asarray(temps, np.float64)),
-                jax.random.PRNGKey(seed), jnp.asarray(mins),
-                jnp.asarray(medians), jnp.asarray(w), jnp.asarray(pair_ok),
-                jnp.asarray(np.float64(self.db.carbon_intensity)))
+            temps_np = np.asarray(temps, np.float64)
+            ci = np.float64(self.db.carbon_intensity)
+            key0 = jax.random.PRNGKey(seed)
+            args = (jnp.asarray(temps_np), jnp.asarray(mins),
+                    jnp.asarray(medians), jnp.asarray(w),
+                    jnp.asarray(pair_ok), jnp.asarray(ci))
+
+            restored = None
+            fp = None
+            if checkpoint is not None:
+                from repro.pathfinding.resume import (
+                    check_not_shrunk as _check_not_shrunk,
+                    search_fingerprint,
+                )
+
+                # the fingerprint hashes the *user-facing* segment knob
+                # (-1 = None), not the derived seg_size, so a finished
+                # segment=None run can be resumed with a larger sweep
+                # budget (the documented extension use case)
+                fp = search_fingerprint(
+                    "device_pt", v0=v0, temps=temps_np,
+                    swap_every=np.int64(swap_every), seed=np.int64(seed),
+                    mins=mins, medians=medians, weights=w,
+                    pair_mask=pair_ok, ci=ci,
+                    segment=np.int64(-1 if segment is None else segment),
+                    collect=np.int64(bool(collect_samples)))
+                if resume:
+                    carry_like = dict(
+                        v=np.zeros((n, width), np.int32),
+                        costs=np.zeros(n, np.float64),
+                        best_v=np.zeros(width, np.int32),
+                        best_c=np.zeros((), np.float64),
+                        key=_key_to_np(key0))
+                    restored = checkpoint.restore(carry_like, archive, fp)
+
+            seed_block = None
+            if restored is None:
+                cost0, vec0 = self._pt_init_fn(n)(
+                    jnp.asarray(v0), args[1], args[2], args[3], args[5])
+                cost0_np = np.asarray(cost0)
+                bi = int(np.argmin(cost0_np))
+                carry = (jnp.asarray(v0), cost0, jnp.asarray(v0[bi]),
+                         cost0[bi], key0)
+                done = 0
+                history = [float(cost0_np.min())]
+                if collect_samples:
+                    seed_block = (v0[None], np.asarray(vec0)[None])
+            else:
+                c = restored.carry
+                cost0_np = None
+                carry = (jnp.asarray(c["v"]), jnp.asarray(c["costs"]),
+                         jnp.asarray(c["best_v"]), jnp.asarray(c["best_c"]),
+                         _key_from_np(c["key"], key0))
+                done = restored.sweep_done
+                _check_not_shrunk(done, sweeps)
+                history = restored.history.tolist()
+
+            enc_parts, vec_parts, trace_parts = [], [], []
+            while done < sweeps:
+                seg = min(seg_size, sweeps - done)
+                fn = self._pt_fn(n, seg, int(swap_every),
+                                 bool(record_trace), bool(collect_samples))
+                carry, ys = fn(*carry, np.int64(done), *args)
+                history.extend(np.asarray(ys[0]).tolist())
+                off = 2
+                if collect_samples:
+                    enc_s = np.asarray(ys[off])
+                    vec_s = np.asarray(ys[off + 1])
+                    off += 2
+                    if archive is not None:
+                        if seed_block is not None:
+                            enc_s = np.concatenate([seed_block[0], enc_s])
+                            vec_s = np.concatenate([seed_block[1], vec_s])
+                            seed_block = None
+                        archive.insert(enc_s.reshape(-1, width),
+                                       vec_s.reshape(-1, vec_s.shape[-1]))
+                    else:
+                        enc_parts.append(enc_s)
+                        vec_parts.append(vec_s)
+                if record_trace:
+                    trace_parts.append(
+                        tuple(np.asarray(y) for y in ys[off:off + 6])
+                        + (np.asarray(ys[1]),))
+                done += seg
+                if checkpoint is not None:
+                    checkpoint.save(
+                        done,
+                        dict(v=np.asarray(carry[0]),
+                             costs=np.asarray(carry[1]),
+                             best_v=np.asarray(carry[2]),
+                             best_c=np.asarray(carry[3]),
+                             key=_key_to_np(carry[4])),
+                        archive, np.asarray(history, np.float64), fp)
+            # a zero-sweep run (or a resumed-complete one) never feeds the
+            # seed population through the loop
+            if seed_block is not None and archive is not None:
+                archive.insert(seed_block[0].reshape(-1, width),
+                               seed_block[1].reshape(-1,
+                                                     seed_block[1].shape[-1]))
+                seed_block = None
+
             v_fin, costs_fin, best_v, best_c, _ = carry
-            coldest, best_hist = ys[0], ys[1]
-            history = ([float(np.min(np.asarray(cost0)))]
-                       + np.asarray(coldest).tolist())
-            off = 2
             samples = None
-            if collect_samples:
-                samples = dict(
-                    enc=np.concatenate(
-                        [np.asarray(v0)[None], np.asarray(ys[off])]),
-                    vec=np.concatenate(
-                        [np.asarray(vec0)[None], np.asarray(ys[off + 1])]))
-                off += 2
+            if collect_samples and archive is None:
+                blocks_e = ([seed_block[0]] if seed_block is not None
+                            else []) + enc_parts
+                blocks_v = ([seed_block[1]] if seed_block is not None
+                            else []) + vec_parts
+                if blocks_e:
+                    samples = dict(enc=np.concatenate(blocks_e),
+                                   vec=np.concatenate(blocks_v))
             trace = None
             if record_trace:
-                trace = dict(
-                    proposals=np.asarray(ys[off]),
-                    proposal_costs=np.asarray(ys[off + 1]),
-                    u_accept=np.asarray(ys[off + 2]),
-                    u_swap=np.asarray(ys[off + 3]),
-                    accepted=np.asarray(ys[off + 4]),
-                    costs=np.asarray(ys[off + 5]),
-                    initial_costs=np.asarray(cost0),
-                    best_per_sweep=np.asarray(best_hist),
-                )
+                fields = ("proposals", "proposal_costs", "u_accept",
+                          "u_swap", "accepted", "costs", "best_per_sweep")
+                cat = [np.concatenate([p[i] for p in trace_parts])
+                       if trace_parts else
+                       np.zeros((0,) + _TRACE_TAILS[i](n, width))
+                       for i in range(len(fields))]
+                trace = dict(zip(fields, cat))
+                trace["initial_costs"] = cost0_np
             return DevicePTResult(
                 best_enc=np.asarray(best_v), best_cost=float(best_c),
                 history=history, evaluations=n + n * sweeps,
@@ -1356,6 +1542,11 @@ class ScenarioEngine:
     from :func:`repro.distributed.sharding.scenario_mesh` (pass it as
     ``mesh=``); inputs are placed with their leading axis split over the
     mesh's data axes and XLA partitions the scan accordingly.
+
+    Like the single-workload engine, the grid scan is *segmented*
+    (``segment=`` sweeps per host-driven chunk, bit-invisible) so a
+    multi-thousand-cell sweep checkpoints at boundaries and resumes
+    bit-identically (:mod:`repro.pathfinding.resume`).
 
     The stacked engine always uses the plain jnp gather path (the Pallas
     prefix-gather kernel remains a single-workload engine option)."""
@@ -1473,10 +1664,50 @@ class ScenarioEngine:
             return np.asarray(cost)[:, :m], np.asarray(vec)[:, :m]
 
     # -- the stacked tempering scan ----------------------------------------
+    #
+    # Segmented exactly like :class:`DeviceEvaluator`: a host loop
+    # advances the grid scan in fixed-size chunks with the carry (per-cell
+    # populations, costs, incumbents and fold_in-derived key streams)
+    # round-tripping between jit calls, so a multi-thousand-cell sweep
+    # checkpoints at segment boundaries and resumes bit-identically.
+    # "scenario_init" evaluates the seed populations + folds the per-cell
+    # keys; each distinct segment length compiles one "scenario_pt".
 
-    def _pt_fn(self, S: int, n: int, sweeps: int, swap_every: int,
+    def _eval_cell_fn(self):
+        cfg = self.cfg
+
+        def eval_cell(v_s, mins_s, med_s, w_s, ci_s, wi):
+            tbc, rt = self._cell_tables(wi)
+            _, cost, vec = _eval_cost_jax(v_s, mins_s, med_s, w_s, ci_s,
+                                          tbc, cfg, rt)
+            return cost, vec
+
+        return eval_cell
+
+    def _init_fn(self, S: int, n: int):
+        key_t = ("init", S, n)
+        fn = self._fn_cache.get(key_t)
+        if fn is not None:
+            return fn
+        import jax
+        import jax.numpy as jnp
+
+        eval_cell = self._eval_cell_fn()
+
+        def init(v0, mins, med, w, ci, widx, key):
+            _count_trace("scenario_init")
+            keys0 = jax.vmap(
+                lambda i: jax.random.fold_in(key, i))(jnp.arange(S))
+            cost0, vec0 = jax.vmap(eval_cell)(v0, mins, med, w, ci, widx)
+            return keys0, cost0, vec0
+
+        fn = jax.jit(init)
+        self._fn_cache[key_t] = fn
+        return fn
+
+    def _pt_fn(self, S: int, n: int, seg: int, swap_every: int,
                collect_samples: bool):
-        key_t = ("pt", S, n, sweeps, swap_every, collect_samples)
+        key_t = ("pt", S, n, seg, swap_every, collect_samples)
         fn = self._fn_cache.get(key_t)
         if fn is not None:
             return fn
@@ -1484,12 +1715,7 @@ class ScenarioEngine:
         import jax.numpy as jnp
 
         tb, cfg = self.tables, self.cfg
-
-        def eval_cell(v_s, mins_s, med_s, w_s, ci_s, wi):
-            tbc, rt = self._cell_tables(wi)
-            _, cost, vec = _eval_cost_jax(v_s, mins_s, med_s, w_s, ci_s,
-                                          tbc, cfg, rt)
-            return cost, vec
+        eval_cell = self._eval_cell_fn()
 
         def cell_step(key_s, v_s, costs_s, temps_s, inv_s, mins_s, med_s,
                       w_s, pair_s, ci_s, wi, sweep):
@@ -1515,15 +1741,9 @@ class ScenarioEngine:
                 lambda vc: vc, (v_s, costs_s))
             return key_s, v_s, costs_s, cand_v, cand_c, prop, pvec
 
-        def run(v0, temps, key, mins, med, w, pair_ok, ci, widx):
+        def run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps, mins,
+                med, w, pair_ok, ci, widx):
             _count_trace("scenario_pt")
-            keys0 = jax.vmap(
-                lambda i: jax.random.fold_in(key, i))(jnp.arange(S))
-            cost0, vec0 = jax.vmap(eval_cell)(v0, mins, med, w, ci, widx)
-            bi0 = jnp.argmin(cost0, axis=1)
-            best_v0 = jnp.take_along_axis(
-                v0, bi0[:, None, None], axis=1)[:, 0]
-            best_c0 = jnp.take_along_axis(cost0, bi0[:, None], axis=1)[:, 0]
             inv_t = 1.0 / temps
 
             def body(carry, sweep):
@@ -1542,9 +1762,9 @@ class ScenarioEngine:
                 return (v, costs, best_v, best_c, keys), ys
 
             carry, ys = jax.lax.scan(
-                body, (v0, cost0, best_v0, best_c0, keys0),
-                jnp.arange(sweeps))
-            return carry, ys, cost0, vec0
+                body, (v0, costs0, best_v0, best_c0, keys0),
+                sweep0 + jnp.arange(seg))
+            return carry, ys
 
         fn = jax.jit(run)
         self._fn_cache[key_t] = fn
@@ -1554,7 +1774,10 @@ class ScenarioEngine:
                            swap_every: int, seed: int, mins, medians,
                            weights, pair_mask, ci, widx,
                            collect_samples: bool = True,
-                           mesh=None) -> ScenarioPTResult:
+                           mesh=None, segment: Optional[int] = None,
+                           checkpoint=None, resume: bool = True,
+                           archives: Optional[Sequence] = None
+                           ) -> ScenarioPTResult:
         """Run the whole scenario grid in one fused scan.
 
         ``v0`` is ``[S, n, width]`` (cell-major seed populations),
@@ -1562,7 +1785,16 @@ class ScenarioEngine:
         rows / exchange gates, ``mins``/``medians`` the per-cell
         normalizer rows, ``ci`` the per-cell grid carbon intensities and
         ``widx`` the per-cell workload indices into this engine's
-        workload tuple. ``mesh`` (optional) shards the scenario axis."""
+        workload tuple. ``mesh`` (optional) shards the scenario axis.
+
+        ``segment``/``checkpoint``/``resume``/``archives`` mirror
+        :meth:`DeviceEvaluator.parallel_tempering`: the grid scan runs in
+        host-driven chunks whose carry (including the per-cell sweep
+        counters and fold_in-derived key streams) plus the per-cell
+        archives snapshot at every boundary, and the chunking never
+        changes a bit of any cell's trajectory. ``archives`` is one
+        :class:`~repro.pathfinding.pareto.ParetoArchive` per cell, fed
+        in place of returning ``.samples``."""
         import jax
         import jax.numpy as jnp
         from jax.experimental import enable_x64
@@ -1571,8 +1803,20 @@ class ScenarioEngine:
             v0 = np.asarray(v0, dtype=np.int32)
             if v0.ndim != 3:
                 raise ValueError(f"v0 must be [S, n, width], got {v0.shape}")
-            S, n, _ = v0.shape
+            S, n, width = v0.shape
             sweeps = int(sweeps)
+            if segment is not None and int(segment) < 1:
+                raise ValueError(f"segment must be >= 1, got {segment}")
+            seg_size = max(1, sweeps) if segment is None else int(segment)
+            if checkpoint is not None and collect_samples \
+                    and archives is None:
+                raise ValueError(
+                    "checkpointing with collect_samples requires "
+                    "archives= to feed: bulk .samples live only in "
+                    "process memory and would be lost across a resume")
+            if archives is not None and len(archives) != S:
+                raise ValueError(
+                    f"need one archive per cell: {len(archives)} != {S}")
             widx_a = np.asarray(widx, dtype=np.int32).reshape(S)
             if widx_a.min(initial=0) < 0 or \
                     widx_a.max(initial=0) >= len(self.workloads):
@@ -1593,28 +1837,131 @@ class ScenarioEngine:
                 from repro.distributed.sharding import shard_scenarios
 
                 arrays = shard_scenarios(arrays, mesh)
-            fn = self._pt_fn(S, n, sweeps, int(swap_every),
-                             bool(collect_samples))
-            carry, ys, cost0, vec0 = fn(
-                jnp.asarray(arrays["v0"]), jnp.asarray(arrays["temps"]),
-                jax.random.PRNGKey(seed), jnp.asarray(arrays["mins"]),
-                jnp.asarray(arrays["med"]), jnp.asarray(arrays["w"]),
-                jnp.asarray(arrays["pair_ok"]), jnp.asarray(arrays["ci"]),
-                jnp.asarray(arrays["widx"]))
+            key0 = jax.random.PRNGKey(seed)
+            args = (jnp.asarray(arrays["temps"]), jnp.asarray(arrays["mins"]),
+                    jnp.asarray(arrays["med"]), jnp.asarray(arrays["w"]),
+                    jnp.asarray(arrays["pair_ok"]),
+                    jnp.asarray(arrays["ci"]), jnp.asarray(arrays["widx"]))
+
+            restored = None
+            fp = None
+            if checkpoint is not None:
+                from repro.pathfinding.resume import (
+                    check_not_shrunk as _check_not_shrunk,
+                    search_fingerprint,
+                )
+
+                key_np = _key_to_np(key0)
+                fp = search_fingerprint(
+                    "scenario_pt", v0=v0, temps=arrays["temps"],
+                    swap_every=np.int64(swap_every), seed=np.int64(seed),
+                    mins=arrays["mins"], medians=arrays["med"],
+                    weights=arrays["w"], pair_mask=arrays["pair_ok"],
+                    ci=arrays["ci"], widx=widx_a,
+                    segment=np.int64(-1 if segment is None else segment),
+                    collect=np.int64(bool(collect_samples)))
+                if resume:
+                    carry_like = dict(
+                        v=np.zeros((S, n, width), np.int32),
+                        costs=np.zeros((S, n), np.float64),
+                        best_v=np.zeros((S, width), np.int32),
+                        best_c=np.zeros(S, np.float64),
+                        keys=np.zeros((S,) + key_np.shape, key_np.dtype))
+                    restored = checkpoint.restore(carry_like, archives, fp)
+
+            seed_block = None
+            if restored is None:
+                keys0, cost0, vec0 = self._init_fn(S, n)(
+                    jnp.asarray(arrays["v0"]), args[1], args[2], args[3],
+                    args[5], args[6], key0)
+                bi0 = jnp.argmin(cost0, axis=1)
+                best_v0 = jnp.take_along_axis(
+                    jnp.asarray(arrays["v0"]), bi0[:, None, None],
+                    axis=1)[:, 0]
+                best_c0 = jnp.take_along_axis(
+                    cost0, bi0[:, None], axis=1)[:, 0]
+                carry = (jnp.asarray(arrays["v0"]), cost0, best_v0,
+                         best_c0, keys0)
+                sweep_done = np.zeros(S, dtype=np.int64)
+                done = 0
+                hist_parts = [np.min(np.asarray(cost0), axis=1)[:, None]]
+                if collect_samples:
+                    seed_block = (v0[None], np.asarray(vec0)[None])
+            else:
+                c = dict(restored.carry)
+                if mesh is not None:
+                    # the fresh path's carry inherits the scenario-axis
+                    # sharding from `arrays`; the restored one comes from
+                    # host numpy and must be re-placed, or the first
+                    # post-resume segment jits a second (unsharded)
+                    # program signature
+                    from repro.distributed.sharding import shard_scenarios
+
+                    c = shard_scenarios(c, mesh)
+                carry = (jnp.asarray(c["v"]), jnp.asarray(c["costs"]),
+                         jnp.asarray(c["best_v"]), jnp.asarray(c["best_c"]),
+                         _key_from_np(c["keys"], key0))
+                sweep_done = np.asarray(restored.sweep_done_per_cell,
+                                        dtype=np.int64).reshape(S)
+                done = restored.sweep_done
+                _check_not_shrunk(done, sweeps)
+                hist_parts = [restored.history.reshape(S, -1)]
+
+            enc_parts, vec_parts = [], []
+
+            def feed_cells(enc_s, vec_s):
+                for s in range(S):
+                    archives[s].insert(
+                        enc_s[:, s].reshape(-1, width),
+                        vec_s[:, s].reshape(-1, vec_s.shape[-1]))
+
+            while done < sweeps:
+                seg = min(seg_size, sweeps - done)
+                fn = self._pt_fn(S, n, seg, int(swap_every),
+                                 bool(collect_samples))
+                carry, ys = fn(*carry, np.int64(done), *args)
+                hist_parts.append(np.asarray(ys[0]).T)
+                if collect_samples:
+                    enc_s, vec_s = np.asarray(ys[2]), np.asarray(ys[3])
+                    if seed_block is not None:
+                        enc_s = np.concatenate([seed_block[0], enc_s])
+                        vec_s = np.concatenate([seed_block[1], vec_s])
+                        seed_block = None
+                    if archives is not None:
+                        feed_cells(enc_s, vec_s)
+                    else:
+                        enc_parts.append(enc_s)
+                        vec_parts.append(vec_s)
+                done += seg
+                sweep_done = sweep_done + seg
+                if checkpoint is not None:
+                    checkpoint.save(
+                        sweep_done,
+                        dict(v=np.asarray(carry[0]),
+                             costs=np.asarray(carry[1]),
+                             best_v=np.asarray(carry[2]),
+                             best_c=np.asarray(carry[3]),
+                             keys=_key_to_np(carry[4])),
+                        archives,
+                        np.concatenate(hist_parts, axis=1), fp)
+            if seed_block is not None and archives is not None:
+                feed_cells(*seed_block)
+                seed_block = None
+
             v_fin, costs_fin, best_v, best_c, _ = carry
-            hist0 = np.min(np.asarray(cost0), axis=1)[:, None]
-            history = np.concatenate([hist0, np.asarray(ys[0]).T], axis=1)
             samples = None
-            if collect_samples:
-                samples = dict(
-                    enc=np.concatenate(
-                        [v0[None], np.asarray(ys[2])]),
-                    vec=np.concatenate(
-                        [np.asarray(vec0)[None], np.asarray(ys[3])]))
+            if collect_samples and archives is None:
+                blocks_e = ([seed_block[0]] if seed_block is not None
+                            else []) + enc_parts
+                blocks_v = ([seed_block[1]] if seed_block is not None
+                            else []) + vec_parts
+                if blocks_e:
+                    samples = dict(enc=np.concatenate(blocks_e),
+                                   vec=np.concatenate(blocks_v))
             return ScenarioPTResult(
                 best_enc=np.asarray(best_v),
                 best_cost=np.asarray(best_c),
-                history=history,
+                history=np.concatenate(hist_parts, axis=1),
                 evaluations=S * n * (1 + sweeps),
                 final_enc=np.asarray(v_fin),
                 final_costs=np.asarray(costs_fin),

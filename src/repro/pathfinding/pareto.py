@@ -312,6 +312,38 @@ class ParetoArchive:
             all_enc, all_vec = all_enc[keep], all_vec[keep]
         self._enc, self._vec = all_enc, all_vec
 
+    # -- checkpointing ------------------------------------------------------
+    # the repro.checkpoint protocol: archives ride inside checkpoint
+    # pytrees as first-class objects (their row count is elastic across
+    # restore, so a resumed search continues the exact frontier)
+
+    def checkpoint_arrays(self) -> Dict[str, np.ndarray]:
+        """The archive's full state as plain arrays (row widths and
+        counts are restored from the checkpoint, not the template).
+
+        Returns references, not copies: mutation always rebinds
+        ``_enc``/``_vec`` wholesale (see ``_insert_chunk``), so a
+        returned snapshot can never be corrupted in place."""
+        return {"enc": self._enc, "vec": self._vec}
+
+    def from_checkpoint_arrays(self, arrays: Dict[str, np.ndarray]
+                               ) -> "ParetoArchive":
+        """New archive with this one's bounds/backend and the saved
+        contents (the restore half of the checkpoint protocol)."""
+        out = ParetoArchive(max_size=self.max_size, n_axes=self.n_axes,
+                            backend=self.backend)
+        out.load_checkpoint_arrays(arrays)
+        return out
+
+    def load_checkpoint_arrays(self, arrays: Dict[str, np.ndarray]) -> None:
+        """Overwrite contents in place from :meth:`checkpoint_arrays`."""
+        enc = np.atleast_2d(np.asarray(arrays["enc"], dtype=np.int32))
+        vec = np.atleast_2d(np.asarray(arrays["vec"], dtype=np.float64))
+        if enc.shape[0] != vec.shape[0]:
+            raise ValueError(
+                f"{enc.shape[0]} encodings vs {vec.shape[0]} vectors")
+        self._enc, self._vec = enc, vec
+
     # -- analysis -----------------------------------------------------------
 
     def reference_point(self, margin: float = 0.1) -> np.ndarray:
@@ -428,6 +460,13 @@ class ScalarizationSweep:
     t_min: float = 0.005
     frontier_size: int = 256
     weights: Optional[np.ndarray] = None   # [K, 6] override
+    # checkpoint/resume of the fused scan (device path only): advance in
+    # host-driven segments of `segment` sweeps, snapshotting carry +
+    # archive at each boundary under `checkpoint_dir`; `resume` restores
+    # the newest valid snapshot (bit-identical continuation)
+    segment: Optional[int] = None
+    checkpoint_dir: Optional[str] = None
+    resume: bool = True
 
     def weight_rows(self) -> np.ndarray:
         if self.weights is not None:
@@ -469,10 +508,12 @@ class ScalarizationSweep:
             ParallelTempering,
             SearchResult,
             _check_budget,
+            _check_checkpointable,
             _resolve_key,
         )
 
         _check_budget(budget)
+        _check_checkpointable(self.checkpoint_dir, objective)
         key = _resolve_key(key)
         if self.frontier_size < 1:
             raise ValueError(
@@ -527,15 +568,17 @@ class ScalarizationSweep:
         weights = self.chain_weights(w6)                      # [K*N, 6]
         pair_ok = self.chain_pair_mask(total)
         dev = get_device_evaluator(objective.wl, objective.db, space=space)
+        archive = ParetoArchive(max_size=self.frontier_size)
+        from repro.pathfinding.strategies import _checkpointer
+
         res = dev.parallel_tempering(
             space.encode_many(chains), temps, sweeps, self.swap_every,
             seed=key, norm=objective.norm,
             template=objective.template, weights=weights,
-            pair_mask=np.asarray(pair_ok, dtype=bool))
-        archive = ParetoArchive(max_size=self.frontier_size)
-        if res.samples is not None:
-            archive.insert(res.samples["enc"].reshape(-1, space.width),
-                           res.samples["vec"].reshape(-1, N_AXES))
+            pair_mask=np.asarray(pair_ok, dtype=bool),
+            segment=self.segment, archive=archive,
+            checkpoint=_checkpointer(self.checkpoint_dir),
+            resume=self.resume)
         return self._finalize(space, objective, archive,
                               res.history, res.evaluations)
 
@@ -689,12 +732,27 @@ class ScenarioSweep:
             template: Union[str, Template] = "T1",
             db: TechDB = DEFAULT_DB, device: bool = True,
             budget: Optional[int] = None,
-            key: Optional[int] = None) -> ScenarioFrontier:
+            key: Optional[int] = None,
+            checkpoint_dir: Optional[str] = None,
+            resume: bool = True,
+            segment: Optional[int] = None) -> ScenarioFrontier:
+        """``checkpoint_dir`` makes the stacked grid scan interruptible:
+        it advances in ``segment``-sweep chunks (default: one chunk) and
+        snapshots the scan carry (per-cell populations, costs,
+        incumbents, RNG streams and sweep counters) plus every per-cell
+        frontier archive at each boundary; ``resume=True`` restores the
+        newest valid snapshot, continuing bit-identically to the
+        uninterrupted run. Device path only."""
         from repro.pathfinding.batch import fit_region_normalizers
         from repro.pathfinding.pathfinder import Pathfinder
         from repro.pathfinding.strategies import _check_budget, _resolve_key
 
         _check_budget(budget)
+        if checkpoint_dir is not None and not device:
+            raise ValueError(
+                "checkpoint_dir requires the device path "
+                "(ScenarioSweep.run(device=True)); the per-cell host "
+                "fallback cannot checkpoint")
         if isinstance(workloads, GEMMWorkload):
             workloads = [workloads]
         workloads = list(workloads)
@@ -741,7 +799,8 @@ class ScenarioSweep:
                 norm_of[(wi, region)] = nz
         if device:
             return self._run_device(cells, workloads, tpl, db, space,
-                                    norm_of, cell_budget, base)
+                                    norm_of, cell_budget, base,
+                                    checkpoint_dir, resume, segment)
 
         # host fallback: one Pathfinder per cell, distinct folded keys,
         # split budget, pre-fitted region normalizers
@@ -766,11 +825,12 @@ class ScenarioSweep:
         return scenario_mesh(min_devices=1 if self.shard is True else 2)
 
     def _run_device(self, cells, workloads, tpl, db, space, norm_of,
-                    cell_budget, base) -> ScenarioFrontier:
+                    cell_budget, base, checkpoint_dir=None, resume=True,
+                    segment=None) -> ScenarioFrontier:
         from repro.core.evaluate import evaluate
         from repro.core.scalesim import SimCache
         from repro.pathfinding.device import get_scenario_engine
-        from repro.pathfinding.strategies import SearchResult
+        from repro.pathfinding.strategies import SearchResult, _checkpointer
 
         strat = self.strategy
         w6 = strat.weight_rows()
@@ -798,17 +858,14 @@ class ScenarioSweep:
                 for _ in range(nc)])
             for idx in range(S)])
         engine = get_scenario_engine(tuple(workloads), db, space=space)
+        archives = [ParetoArchive(max_size=strat.frontier_size)
+                    for _ in range(S)]
         res = engine.parallel_tempering(
             v0, temps, sweeps, strat.swap_every, seed=base, mins=mins,
             medians=medians, weights=weights, pair_mask=pair, ci=ci,
-            widx=widx, mesh=self._mesh())
-
-        archives = []
-        for s in range(S):
-            arch = ParetoArchive(max_size=strat.frontier_size)
-            arch.insert(res.samples["enc"][:, s].reshape(-1, space.width),
-                        res.samples["vec"][:, s].reshape(-1, N_AXES))
-            archives.append(arch)
+            widx=widx, mesh=self._mesh(), segment=segment,
+            archives=archives, checkpoint=_checkpointer(checkpoint_dir),
+            resume=resume)
         # best-by-template per cell: ONE stacked re-evaluation of the
         # (padded) archives — not counted against the budget, like the PT
         # winner re-materialization

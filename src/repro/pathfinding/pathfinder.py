@@ -167,7 +167,10 @@ class Pathfinder:
 
     def run_scenarios(self, sweep=None, workloads=None, regions=None,
                       budget: Optional[int] = None,
-                      key: Optional[int] = None):
+                      key: Optional[int] = None,
+                      checkpoint_dir: Optional[str] = None,
+                      resume: bool = True,
+                      segment: Optional[int] = None):
         """Map frontiers across deployment regions (and optionally extra
         workloads) with this Pathfinder's template/TechDB — a
         :class:`~repro.pathfinding.pareto.ScenarioSweep` whose whole
@@ -176,7 +179,11 @@ class Pathfinder:
         :class:`repro.pathfinding.device.ScenarioEngine`).
 
         ``budget`` is the sweep's *total* evaluation budget, split evenly
-        across cells. Returns a
+        across cells. ``checkpoint_dir`` makes the sweep interruptible:
+        the grid scan advances in ``segment``-sweep chunks and snapshots
+        its carry + per-cell frontier archives at every boundary;
+        ``resume=True`` (default) restores the newest valid snapshot and
+        continues bit-identically to an uninterrupted run. Returns a
         :class:`~repro.pathfinding.pareto.ScenarioFrontier`."""
         import dataclasses
 
@@ -193,4 +200,6 @@ class Pathfinder:
             sweep = dataclasses.replace(sweep, regions=dict(regions))
         wls = [self.wl] if workloads is None else list(workloads)
         return sweep.run(wls, template=self.template, db=self.db,
-                         device=self.device, budget=budget, key=key)
+                         device=self.device, budget=budget, key=key,
+                         checkpoint_dir=checkpoint_dir, resume=resume,
+                         segment=segment)

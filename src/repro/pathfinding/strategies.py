@@ -199,6 +199,28 @@ def _check_budget(budget: Optional[int]) -> None:
         raise ValueError(f"budget must be >= 1 or None, got {budget}")
 
 
+def _checkpointer(checkpoint_dir: Optional[str]):
+    """A :class:`~repro.pathfinding.resume.SearchCheckpointer` for the
+    directory, or ``None`` when checkpointing is off."""
+    if checkpoint_dir is None:
+        return None
+    from repro.pathfinding.resume import SearchCheckpointer
+
+    return SearchCheckpointer(checkpoint_dir)
+
+
+def _check_checkpointable(checkpoint_dir: Optional[str],
+                          objective: "Objective") -> None:
+    """Checkpoint/resume lives in the segmented device engines; the
+    scalar host fallbacks have no snapshot-able carry, so asking for
+    both is a configuration error, not a silent no-op."""
+    if checkpoint_dir is not None and not objective.device:
+        raise ValueError(
+            "checkpoint_dir requires the device engine "
+            "(Pathfinder(device=True) with the carbonpath backend); the "
+            "scalar host fallback cannot checkpoint")
+
+
 # ---------------------------------------------------------------------------
 # Simulated annealing (Sec V) — the seed annealer behind the v2 protocol
 # ---------------------------------------------------------------------------
@@ -285,11 +307,18 @@ class ParallelTempering:
 
     With a device-capable objective (``Pathfinder(device=True)``, the
     default for the CarbonPATH backend) the whole sweep loop — propose,
-    evaluate, Metropolis accept, replica exchange — runs as one fused
-    ``jax.lax.scan`` on the device (:mod:`repro.pathfinding.device`);
-    Python is only re-entered at the end for history/best decode. The
-    host path below is preserved as the scalar fallback and as the
-    replayable reference."""
+    evaluate, Metropolis accept, replica exchange — runs as a fused
+    ``jax.lax.scan`` on the device (:mod:`repro.pathfinding.device`),
+    advanced in host-driven segments of ``segment`` sweeps (default: one
+    segment). Segmentation never changes the trajectory — same key
+    stream, same sweep indices — but gives the search its checkpoint
+    boundaries: with ``checkpoint_dir`` set, the scan carry + frontier
+    archive + history snapshot atomically at every boundary
+    (:mod:`repro.pathfinding.resume`), and ``resume=True`` (default)
+    restores the newest valid snapshot so an interrupted search
+    reproduces the uninterrupted run bit-for-bit. The host path below is
+    preserved as the scalar fallback and as the replayable reference
+    (checkpointing requires the device engine)."""
 
     n_chains: int = 8
     t_max: float = 4000.0
@@ -297,6 +326,9 @@ class ParallelTempering:
     sweeps: int = 500
     swap_every: int = 5
     frontier_size: int = 256
+    segment: Optional[int] = None
+    checkpoint_dir: Optional[str] = None
+    resume: bool = True
 
     def search(self, space: DesignSpace, objective: Objective,
                budget: Optional[int] = None,
@@ -305,6 +337,7 @@ class ParallelTempering:
         from repro.pathfinding.pareto import FrontierFeed
 
         _check_budget(budget)
+        _check_checkpointable(self.checkpoint_dir, objective)
         key = _resolve_key(key)
         db = objective.db
         rng = random.Random(key)
@@ -366,23 +399,23 @@ class ParallelTempering:
         Metrics costs one scalar evaluation of an already-searched row
         (through the shared SimCache, outside the budget accounting)."""
         from repro.pathfinding.device import get_device_evaluator
-        from repro.pathfinding.pareto import N_AXES, ParetoArchive
+        from repro.pathfinding.pareto import ParetoArchive
 
         n = len(chains)
         dev = get_device_evaluator(objective.wl, objective.db, space=space)
         sweeps = self.sweeps
         if budget is not None:
             sweeps = min(sweeps, max(0, budget - n) // n)
+        archive = (ParetoArchive(max_size=self.frontier_size)
+                   if self.frontier_size > 0 else None)
         res = dev.parallel_tempering(
             space.encode_many(chains), np.asarray(temps), sweeps,
             self.swap_every, seed=key,
             norm=objective.norm, template=objective.template,
-            collect_samples=self.frontier_size > 0)
-        archive = None
-        if res.samples is not None and self.frontier_size > 0:
-            archive = ParetoArchive(max_size=self.frontier_size)
-            archive.insert(res.samples["enc"].reshape(-1, space.width),
-                           res.samples["vec"].reshape(-1, N_AXES))
+            collect_samples=self.frontier_size > 0,
+            segment=self.segment, archive=archive,
+            checkpoint=_checkpointer(self.checkpoint_dir),
+            resume=self.resume)
         best = space.decode(res.best_enc)
         # one scalar evaluation beats paying a fresh bucket compile of
         # the fused evaluator just to materialize the winning row

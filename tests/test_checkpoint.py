@@ -1,0 +1,213 @@
+"""repro.checkpoint round-trip coverage: mixed-dtype pytrees, 0-d
+leaves, elastic restore (different n_shards / ELASTIC template leaves /
+pytrees of ParetoArchives), and the corrupt-checkpoint prune-and-fall-
+back behaviour of ``CheckpointManager.restore``."""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    ELASTIC,
+    CheckpointManager,
+    CorruptCheckpointError,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.checkpoint.checkpoint import MANIFEST
+from repro.pathfinding import ParetoArchive
+
+
+def _mixed_tree():
+    return {
+        "ints": np.arange(12, dtype=np.int32).reshape(3, 4),
+        "floats": np.linspace(0.0, 1.0, 7),          # float64
+        "scalar_f": np.float64(3.25),                # 0-d float64
+        "scalar_i": np.int64(11),                    # 0-d int64
+        "nested": {"u32": np.asarray([1, 2], dtype=np.uint32),
+                   "bools": np.asarray([True, False, True])},
+        "listy": [np.zeros(3, dtype=np.int32), np.ones((2, 2))],
+    }
+
+
+def _assert_tree_equal(a, b):
+    import jax
+
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype, (x.dtype, y.dtype)
+        np.testing.assert_array_equal(x, y)
+
+
+def test_roundtrip_mixed_dtypes_and_0d_leaves():
+    with tempfile.TemporaryDirectory() as d:
+        t = _mixed_tree()
+        p = save_checkpoint(d, 3, t, n_shards=2)
+        step, r = load_checkpoint(p, t)
+        assert step == 3
+        _assert_tree_equal(t, r)
+
+
+@pytest.mark.parametrize("save_shards,load_mgr_shards", [(1, 8), (5, 2)])
+def test_elastic_restore_across_n_shards(save_shards, load_mgr_shards):
+    """n_shards only shapes the on-disk layout: restore reassembles the
+    logical arrays regardless of the manager's own shard setting."""
+    with tempfile.TemporaryDirectory() as d:
+        t = _mixed_tree()
+        save_checkpoint(d, 1, t, n_shards=save_shards)
+        mgr = CheckpointManager(d, keep=3, n_shards=load_mgr_shards)
+        step, r = mgr.restore(t)
+        assert step == 1
+        _assert_tree_equal(t, r)
+
+
+def test_elastic_template_leaf_takes_manifest_shape():
+    """An ELASTIC template leaf restores with the saved shape — the
+    grow-only history vector of a resumed search."""
+    with tempfile.TemporaryDirectory() as d:
+        t = {"hist": np.arange(9.0), "step": np.int64(4)}
+        p = save_checkpoint(d, 4, t)
+        _, r = load_checkpoint(p, {"hist": ELASTIC,
+                                   "step": np.zeros((), np.int64)})
+        np.testing.assert_array_equal(np.asarray(r["hist"]), t["hist"])
+        # a non-elastic mismatch still fails loudly
+        with pytest.raises(ValueError, match="shape mismatch"):
+            load_checkpoint(p, {"hist": np.zeros(2),
+                                "step": np.zeros((), np.int64)})
+
+
+def _archive(rows):
+    a = ParetoArchive(max_size=64)
+    enc = np.arange(rows * 5, dtype=np.int32).reshape(rows, 5)
+    vec = np.stack([np.arange(rows, dtype=np.float64),
+                    -np.arange(rows, dtype=np.float64),
+                    np.ones(rows)], axis=1)
+    a.insert(enc, vec)
+    return a
+
+
+def test_pytree_of_archives_roundtrip():
+    """ParetoArchive objects ride inside checkpoint trees: expanded to
+    array dicts on save, reconstituted (with elastic row counts) on
+    load."""
+    with tempfile.TemporaryDirectory() as d:
+        archives = [_archive(3), _archive(7), ParetoArchive(max_size=8)]
+        tree = {"archives": archives, "counter": np.int64(2)}
+        p = save_checkpoint(d, 2, tree)
+        # templates are EMPTY archives: row counts come from the manifest
+        like = {"archives": [ParetoArchive(max_size=64) for _ in range(3)],
+                "counter": np.zeros((), np.int64)}
+        _, r = load_checkpoint(p, like)
+        for orig, got in zip(archives, r["archives"]):
+            assert isinstance(got, ParetoArchive)
+            assert got.max_size == 64
+            np.testing.assert_array_equal(got.encoded, orig.encoded)
+            np.testing.assert_array_equal(got.vectors, orig.vectors)
+
+
+def test_subset_template_restore_is_not_misread_as_corruption():
+    """The checksum covers the whole payload; a template requesting a
+    subset of the saved leaves must verify against it (a false
+    corruption verdict would PRUNE valid snapshots) and restore the
+    subset."""
+    with tempfile.TemporaryDirectory() as d:
+        full = {"a": np.arange(4.0), "b": np.arange(6, dtype=np.int32),
+                "arch": _archive(3)}
+        mgr = CheckpointManager(d, keep=3)
+        mgr.save(7, full)
+        step, r = mgr.restore({"a": np.zeros(4)})
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(r["a"]), full["a"])
+        # nothing was pruned: the snapshot is intact and fully loadable
+        assert mgr.all_steps() == [7]
+        _, r2 = mgr.restore({"a": np.zeros(4),
+                             "b": np.zeros(6, np.int32),
+                             "arch": ParetoArchive(max_size=64)})
+        np.testing.assert_array_equal(r2["arch"].encoded,
+                                      full["arch"].encoded)
+
+
+def test_restore_prunes_corrupt_and_falls_back():
+    """A torn copy of the newest checkpoint must not poison restart:
+    restore skips + prunes it and lands on the next-newest valid step."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=5)
+        t5 = {"x": np.full(4, 5.0)}
+        t9 = {"x": np.full(4, 9.0)}
+        mgr.save(5, t5)
+        p9 = mgr.save(9, t9)
+        # corrupt step 9's payload (bit-flip a shard, keep the manifest)
+        shard = [f for f in os.listdir(p9) if f.endswith(".npy")][0]
+        arr = np.load(os.path.join(p9, shard))
+        np.save(os.path.join(p9, shard), arr + 1.0)
+        step, r = mgr.restore({"x": np.zeros(4)})
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(r["x"]), t5["x"])
+        # the poisoned directory is gone, not retried forever
+        assert mgr.all_steps() == [5]
+
+
+def test_restore_prunes_truncated_shard_and_unreadable_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=5)
+        t = {"x": np.arange(6.0)}
+        mgr.save(1, t)
+        p2 = mgr.save(2, t)
+        p3 = mgr.save(3, t)
+        # step 3: unreadable manifest; step 2: truncated shard file
+        with open(os.path.join(p3, MANIFEST), "w") as f:
+            f.write("{not json")
+        shard = [f for f in os.listdir(p2) if f.endswith(".npy")][0]
+        with open(os.path.join(p2, shard), "wb") as f:
+            f.write(b"\x93NUMPY")  # magic only, no header/payload
+        step, _ = mgr.restore({"x": np.zeros(6)})
+        assert step == 1
+        assert mgr.all_steps() == [1]
+
+
+def test_restore_all_corrupt_raises_filenotfound():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        p = mgr.save(1, {"x": np.zeros(3)})
+        with open(os.path.join(p, MANIFEST), "w") as f:
+            f.write("")
+        with pytest.raises(FileNotFoundError, match="no valid checkpoint"):
+            mgr.restore({"x": np.zeros(3)})
+
+
+def test_structural_mismatch_is_not_pruned():
+    """A *valid* checkpoint that does not fit the template is a caller
+    bug: restore raises and leaves the directory alone."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=3)
+        mgr.save(1, {"x": np.zeros(3)})
+        with pytest.raises(KeyError, match="missing leaf"):
+            mgr.restore({"y": np.zeros(3)})
+        assert mgr.all_steps() == [1]
+
+
+def test_corrupt_error_is_a_value_error():
+    """Back-compat: callers catching ValueError keep working."""
+    assert issubclass(CorruptCheckpointError, ValueError)
+    with tempfile.TemporaryDirectory() as d:
+        p = save_checkpoint(d, 1, {"x": np.zeros(2)})
+        shard = [f for f in os.listdir(p) if f.endswith(".npy")][0]
+        arr = np.load(os.path.join(p, shard))
+        np.save(os.path.join(p, shard), arr + 1.0)
+        with pytest.raises(ValueError, match="checksum"):
+            load_checkpoint(p, {"x": np.zeros(2)})
+
+
+def test_manifest_records_trajectory_step_and_checksum():
+    with tempfile.TemporaryDirectory() as d:
+        p = save_checkpoint(d, 17, {"x": np.arange(3)})
+        with open(os.path.join(p, MANIFEST)) as f:
+            m = json.load(f)
+        assert m["step"] == 17
+        assert m["checksum"]
+        assert set(m["leaves"]) == {"x"}
