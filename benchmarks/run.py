@@ -42,6 +42,7 @@ from benchmarks import (
     pathfinder_device,
     roofline,
     scenario_sweep,
+    serving_throughput,
     table06_sa_flows,
     table11_runtime,
 )
@@ -64,6 +65,7 @@ ALL = [
     ("pareto_frontier", pareto_frontier),
     ("scenario_sweep", scenario_sweep),
     ("checkpoint_resume", checkpoint_resume),
+    ("serving_throughput", serving_throughput),
 ]
 
 OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")

@@ -53,6 +53,7 @@ from repro.pathfinding.pareto import (
     ScenarioSweep,
     crowding_distance,
     fold_cell_key,
+    fold_job_key,
     hypervolume,
     non_dominated_mask,
     non_dominated_mask_jnp,
@@ -60,7 +61,12 @@ from repro.pathfinding.pareto import (
     workloads_from_configs,
 )
 from repro.pathfinding.pathfinder import OBJECTIVES, Pathfinder
-from repro.pathfinding.resume import SearchCheckpointer, search_fingerprint
+from repro.pathfinding.resume import (
+    SearchCheckpointer,
+    run_segmented,
+    search_fingerprint,
+    segment_fingerprint,
+)
 from repro.pathfinding.space import DesignSpace
 from repro.pathfinding.strategies import (
     GridSweep,
@@ -75,12 +81,14 @@ from repro.pathfinding.strategies import (
 __all__ = [
     "BatchEvaluator", "DeviceEvaluator", "MetricsBatch", "ScenarioEngine",
     "evaluate_batch", "evaluate_batch_device", "fit_normalizer_batched",
-    "fit_region_normalizers", "fold_cell_key", "get_device_evaluator",
+    "fit_region_normalizers", "fold_cell_key", "fold_job_key",
+    "get_device_evaluator",
     "get_evaluator", "get_scenario_engine", "propose_batch", "OBJECTIVES",
     "Pathfinder", "DesignSpace", "GridSweep", "Objective",
     "ParallelTempering", "ParetoArchive", "RandomSearch",
     "ScalarizationSweep", "ScenarioSweep", "SearchCheckpointer",
-    "SearchResult", "SearchStrategy", "search_fingerprint",
+    "SearchResult", "SearchStrategy", "run_segmented",
+    "search_fingerprint", "segment_fingerprint",
     "SimulatedAnnealing", "crowding_distance", "hypervolume",
     "non_dominated_mask", "non_dominated_mask_jnp", "simplex_directions",
     "workloads_from_configs",

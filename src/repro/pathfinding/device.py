@@ -1356,73 +1356,68 @@ class DeviceEvaluator:
                     jnp.asarray(medians), jnp.asarray(w),
                     jnp.asarray(pair_ok), jnp.asarray(ci))
 
-            restored = None
+            from repro.pathfinding.resume import (
+                run_segmented,
+                segment_fingerprint,
+            )
+
             fp = None
+            carry_like = None
             if checkpoint is not None:
-                from repro.pathfinding.resume import (
-                    check_not_shrunk as _check_not_shrunk,
-                    search_fingerprint,
-                )
-
-                # the fingerprint hashes the *user-facing* segment knob
-                # (-1 = None), not the derived seg_size, so a finished
-                # segment=None run can be resumed with a larger sweep
-                # budget (the documented extension use case)
-                fp = search_fingerprint(
+                fp = segment_fingerprint(
                     "device_pt", v0=v0, temps=temps_np,
-                    swap_every=np.int64(swap_every), seed=np.int64(seed),
-                    mins=mins, medians=medians, weights=w,
-                    pair_mask=pair_ok, ci=ci,
-                    segment=np.int64(-1 if segment is None else segment),
-                    collect=np.int64(bool(collect_samples)))
-                if resume:
-                    carry_like = dict(
-                        v=np.zeros((n, width), np.int32),
-                        costs=np.zeros(n, np.float64),
-                        best_v=np.zeros(width, np.int32),
-                        best_c=np.zeros((), np.float64),
-                        key=_key_to_np(key0))
-                    restored = checkpoint.restore(carry_like, archive, fp)
+                    swap_every=swap_every, seed=seed, mins=mins,
+                    medians=medians, weights=w, pair_mask=pair_ok, ci=ci,
+                    segment=segment, collect=collect_samples)
+                carry_like = dict(
+                    v=np.zeros((n, width), np.int32),
+                    costs=np.zeros(n, np.float64),
+                    best_v=np.zeros(width, np.int32),
+                    best_c=np.zeros((), np.float64),
+                    key=_key_to_np(key0))
 
-            seed_block = None
-            if restored is None:
+            # mutable host state the shared driver's hooks close over
+            st = dict(history=None, seed_block=None, cost0_np=None)
+            enc_parts, vec_parts, trace_parts = [], [], []
+
+            def fresh():
                 cost0, vec0 = self._pt_init_fn(n)(
                     jnp.asarray(v0), args[1], args[2], args[3], args[5])
                 cost0_np = np.asarray(cost0)
+                st["cost0_np"] = cost0_np
                 bi = int(np.argmin(cost0_np))
-                carry = (jnp.asarray(v0), cost0, jnp.asarray(v0[bi]),
-                         cost0[bi], key0)
-                done = 0
-                history = [float(cost0_np.min())]
+                st["history"] = [float(cost0_np.min())]
                 if collect_samples:
-                    seed_block = (v0[None], np.asarray(vec0)[None])
-            else:
-                c = restored.carry
-                cost0_np = None
-                carry = (jnp.asarray(c["v"]), jnp.asarray(c["costs"]),
-                         jnp.asarray(c["best_v"]), jnp.asarray(c["best_c"]),
-                         _key_from_np(c["key"], key0))
-                done = restored.sweep_done
-                _check_not_shrunk(done, sweeps)
-                history = restored.history.tolist()
+                    st["seed_block"] = (v0[None], np.asarray(vec0)[None])
+                return (jnp.asarray(v0), cost0, jnp.asarray(v0[bi]),
+                        cost0[bi], key0)
 
-            enc_parts, vec_parts, trace_parts = [], [], []
-            while done < sweeps:
-                seg = min(seg_size, sweeps - done)
+            def from_restored(r):
+                c = r.carry
+                st["history"] = r.history.tolist()
+                return (jnp.asarray(c["v"]), jnp.asarray(c["costs"]),
+                        jnp.asarray(c["best_v"]), jnp.asarray(c["best_c"]),
+                        _key_from_np(c["key"], key0))
+
+            def run_segment(carry, done, seg):
                 fn = self._pt_fn(n, seg, int(swap_every),
                                  bool(record_trace), bool(collect_samples))
-                carry, ys = fn(*carry, np.int64(done), *args)
-                history.extend(np.asarray(ys[0]).tolist())
+                return fn(*carry, np.int64(done), *args)
+
+            def absorb(ys, seg):
+                st["history"].extend(np.asarray(ys[0]).tolist())
                 off = 2
                 if collect_samples:
                     enc_s = np.asarray(ys[off])
                     vec_s = np.asarray(ys[off + 1])
                     off += 2
                     if archive is not None:
-                        if seed_block is not None:
-                            enc_s = np.concatenate([seed_block[0], enc_s])
-                            vec_s = np.concatenate([seed_block[1], vec_s])
-                            seed_block = None
+                        if st["seed_block"] is not None:
+                            enc_s = np.concatenate(
+                                [st["seed_block"][0], enc_s])
+                            vec_s = np.concatenate(
+                                [st["seed_block"][1], vec_s])
+                            st["seed_block"] = None
                         archive.insert(enc_s.reshape(-1, width),
                                        vec_s.reshape(-1, vec_s.shape[-1]))
                     else:
@@ -1432,23 +1427,31 @@ class DeviceEvaluator:
                     trace_parts.append(
                         tuple(np.asarray(y) for y in ys[off:off + 6])
                         + (np.asarray(ys[1]),))
-                done += seg
-                if checkpoint is not None:
-                    checkpoint.save(
-                        done,
-                        dict(v=np.asarray(carry[0]),
-                             costs=np.asarray(carry[1]),
-                             best_v=np.asarray(carry[2]),
-                             best_c=np.asarray(carry[3]),
-                             key=_key_to_np(carry[4])),
-                        archive, np.asarray(history, np.float64), fp)
-            # a zero-sweep run (or a resumed-complete one) never feeds the
-            # seed population through the loop
-            if seed_block is not None and archive is not None:
-                archive.insert(seed_block[0].reshape(-1, width),
-                               seed_block[1].reshape(-1,
-                                                     seed_block[1].shape[-1]))
-                seed_block = None
+
+            def carry_np(carry):
+                return dict(v=np.asarray(carry[0]),
+                            costs=np.asarray(carry[1]),
+                            best_v=np.asarray(carry[2]),
+                            best_c=np.asarray(carry[3]),
+                            key=_key_to_np(carry[4]))
+
+            def flush_seed():
+                if st["seed_block"] is not None and archive is not None:
+                    archive.insert(
+                        st["seed_block"][0].reshape(-1, width),
+                        st["seed_block"][1].reshape(
+                            -1, st["seed_block"][1].shape[-1]))
+                    st["seed_block"] = None
+
+            carry, _ = run_segmented(
+                sweeps=sweeps, seg_size=seg_size, checkpoint=checkpoint,
+                resume=resume, fingerprint=fp, archives=archive,
+                carry_like=carry_like, fresh=fresh,
+                from_restored=from_restored, run_segment=run_segment,
+                absorb=absorb, carry_np=carry_np,
+                history_np=lambda: np.asarray(st["history"], np.float64),
+                sweep_counter=lambda done: done, flush_seed=flush_seed)
+            history, seed_block = st["history"], st["seed_block"]
 
             v_fin, costs_fin, best_v, best_c, _ = carry
             samples = None
@@ -1469,7 +1472,7 @@ class DeviceEvaluator:
                        np.zeros((0,) + _TRACE_TAILS[i](n, width))
                        for i in range(len(fields))]
                 trace = dict(zip(fields, cat))
-                trace["initial_costs"] = cost0_np
+                trace["initial_costs"] = st["cost0_np"]
             return DevicePTResult(
                 best_enc=np.asarray(best_v), best_cost=float(best_c),
                 history=history, evaluations=n + n * sweeps,
@@ -1743,16 +1746,22 @@ class ScenarioEngine:
 
         def run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps, mins,
                 med, w, pair_ok, ci, widx):
+            # ``sweep0`` is a per-cell [S] vector of job-local sweep
+            # counters: every cell keeps its own swap schedule, so a
+            # serving job that joins the batch mid-stream sees the same
+            # sweep indices it would solo. Lockstep callers pass
+            # ``done * ones(S)`` and get the exact pre-vector program
+            # semantics (the swap cond is per-lane either way).
             _count_trace("scenario_pt")
             inv_t = 1.0 / temps
 
-            def body(carry, sweep):
+            def body(carry, t):
                 v, costs, best_v, best_c, keys = carry
                 keys, v, costs, cand_v, cand_c, prop, pvec = jax.vmap(
                     cell_step,
-                    in_axes=(0,) * 11 + (None,),
+                    in_axes=(0,) * 12,
                 )(keys, v, costs, temps, inv_t, mins, med, w, pair_ok,
-                  ci, widx, sweep)
+                  ci, widx, sweep0 + t)
                 better = cand_c < best_c
                 best_c = jnp.where(better, cand_c, best_c)
                 best_v = jnp.where(better[:, None], cand_v, best_v)
@@ -1763,12 +1772,28 @@ class ScenarioEngine:
 
             carry, ys = jax.lax.scan(
                 body, (v0, costs0, best_v0, best_c0, keys0),
-                sweep0 + jnp.arange(seg))
+                jnp.arange(seg))
             return carry, ys
 
         fn = jax.jit(run)
         self._fn_cache[key_t] = fn
         return fn
+
+    def segment_runner(self, S: int, n: int, seg: int, swap_every: int,
+                       collect_samples: bool = False):
+        """Public handle on the fused segment program.
+
+        The serving layer (``repro.serving``) drives one segment at a
+        time from its own scheduler, so it needs the compiled program
+        without the host loop in :meth:`parallel_tempering`. The
+        returned callable has signature ``run(v, costs, best_v, best_c,
+        keys, sweep0, temps, mins, med, w, pair_ok, ci, widx)`` where
+        ``sweep0`` is the per-cell [S] vector of job-local sweep
+        counters; calling it twice with the same static shape tuple
+        reuses the cached jit program (``trace_count("scenario_pt")``
+        does not move)."""
+        return self._pt_fn(int(S), int(n), int(seg), int(swap_every),
+                           bool(collect_samples))
 
     def parallel_tempering(self, v0: np.ndarray, temps, sweeps: int,
                            swap_every: int, seed: int, mins, medians,
@@ -1843,34 +1868,40 @@ class ScenarioEngine:
                     jnp.asarray(arrays["pair_ok"]),
                     jnp.asarray(arrays["ci"]), jnp.asarray(arrays["widx"]))
 
-            restored = None
-            fp = None
-            if checkpoint is not None:
-                from repro.pathfinding.resume import (
-                    check_not_shrunk as _check_not_shrunk,
-                    search_fingerprint,
-                )
+            from repro.pathfinding.resume import (
+                run_segmented,
+                segment_fingerprint,
+            )
 
+            fp = None
+            carry_like = None
+            if checkpoint is not None:
                 key_np = _key_to_np(key0)
-                fp = search_fingerprint(
+                fp = segment_fingerprint(
                     "scenario_pt", v0=v0, temps=arrays["temps"],
-                    swap_every=np.int64(swap_every), seed=np.int64(seed),
+                    swap_every=swap_every, seed=seed,
                     mins=arrays["mins"], medians=arrays["med"],
                     weights=arrays["w"], pair_mask=arrays["pair_ok"],
-                    ci=arrays["ci"], widx=widx_a,
-                    segment=np.int64(-1 if segment is None else segment),
-                    collect=np.int64(bool(collect_samples)))
-                if resume:
-                    carry_like = dict(
-                        v=np.zeros((S, n, width), np.int32),
-                        costs=np.zeros((S, n), np.float64),
-                        best_v=np.zeros((S, width), np.int32),
-                        best_c=np.zeros(S, np.float64),
-                        keys=np.zeros((S,) + key_np.shape, key_np.dtype))
-                    restored = checkpoint.restore(carry_like, archives, fp)
+                    ci=arrays["ci"], segment=segment,
+                    collect=collect_samples, widx=widx_a)
+                carry_like = dict(
+                    v=np.zeros((S, n, width), np.int32),
+                    costs=np.zeros((S, n), np.float64),
+                    best_v=np.zeros((S, width), np.int32),
+                    best_c=np.zeros(S, np.float64),
+                    keys=np.zeros((S,) + key_np.shape, key_np.dtype))
 
-            seed_block = None
-            if restored is None:
+            st = dict(hist_parts=None, seed_block=None,
+                      sweep_done=np.zeros(S, dtype=np.int64))
+            enc_parts, vec_parts = [], []
+
+            def feed_cells(enc_s, vec_s):
+                for s in range(S):
+                    archives[s].insert(
+                        enc_s[:, s].reshape(-1, width),
+                        vec_s[:, s].reshape(-1, vec_s.shape[-1]))
+
+            def fresh():
                 keys0, cost0, vec0 = self._init_fn(S, n)(
                     jnp.asarray(arrays["v0"]), args[1], args[2], args[3],
                     args[5], args[6], key0)
@@ -1880,15 +1911,15 @@ class ScenarioEngine:
                     axis=1)[:, 0]
                 best_c0 = jnp.take_along_axis(
                     cost0, bi0[:, None], axis=1)[:, 0]
-                carry = (jnp.asarray(arrays["v0"]), cost0, best_v0,
-                         best_c0, keys0)
-                sweep_done = np.zeros(S, dtype=np.int64)
-                done = 0
-                hist_parts = [np.min(np.asarray(cost0), axis=1)[:, None]]
+                st["hist_parts"] = [
+                    np.min(np.asarray(cost0), axis=1)[:, None]]
                 if collect_samples:
-                    seed_block = (v0[None], np.asarray(vec0)[None])
-            else:
-                c = dict(restored.carry)
+                    st["seed_block"] = (v0[None], np.asarray(vec0)[None])
+                return (jnp.asarray(arrays["v0"]), cost0, best_v0,
+                        best_c0, keys0)
+
+            def from_restored(r):
+                c = dict(r.carry)
                 if mesh is not None:
                     # the fresh path's carry inherits the scenario-axis
                     # sharding from `arrays`; the restored one comes from
@@ -1898,55 +1929,58 @@ class ScenarioEngine:
                     from repro.distributed.sharding import shard_scenarios
 
                     c = shard_scenarios(c, mesh)
-                carry = (jnp.asarray(c["v"]), jnp.asarray(c["costs"]),
-                         jnp.asarray(c["best_v"]), jnp.asarray(c["best_c"]),
-                         _key_from_np(c["keys"], key0))
-                sweep_done = np.asarray(restored.sweep_done_per_cell,
-                                        dtype=np.int64).reshape(S)
-                done = restored.sweep_done
-                _check_not_shrunk(done, sweeps)
-                hist_parts = [restored.history.reshape(S, -1)]
+                st["sweep_done"] = np.asarray(
+                    r.sweep_done_per_cell, dtype=np.int64).reshape(S)
+                st["hist_parts"] = [r.history.reshape(S, -1)]
+                return (jnp.asarray(c["v"]), jnp.asarray(c["costs"]),
+                        jnp.asarray(c["best_v"]), jnp.asarray(c["best_c"]),
+                        _key_from_np(c["keys"], key0))
 
-            enc_parts, vec_parts = [], []
-
-            def feed_cells(enc_s, vec_s):
-                for s in range(S):
-                    archives[s].insert(
-                        enc_s[:, s].reshape(-1, width),
-                        vec_s[:, s].reshape(-1, vec_s.shape[-1]))
-
-            while done < sweeps:
-                seg = min(seg_size, sweeps - done)
+            def run_segment(carry, done, seg):
                 fn = self._pt_fn(S, n, seg, int(swap_every),
                                  bool(collect_samples))
-                carry, ys = fn(*carry, np.int64(done), *args)
-                hist_parts.append(np.asarray(ys[0]).T)
+                return fn(*carry, jnp.asarray(st["sweep_done"]), *args)
+
+            def absorb(ys, seg):
+                st["hist_parts"].append(np.asarray(ys[0]).T)
                 if collect_samples:
                     enc_s, vec_s = np.asarray(ys[2]), np.asarray(ys[3])
-                    if seed_block is not None:
-                        enc_s = np.concatenate([seed_block[0], enc_s])
-                        vec_s = np.concatenate([seed_block[1], vec_s])
-                        seed_block = None
+                    if st["seed_block"] is not None:
+                        enc_s = np.concatenate(
+                            [st["seed_block"][0], enc_s])
+                        vec_s = np.concatenate(
+                            [st["seed_block"][1], vec_s])
+                        st["seed_block"] = None
                     if archives is not None:
                         feed_cells(enc_s, vec_s)
                     else:
                         enc_parts.append(enc_s)
                         vec_parts.append(vec_s)
-                done += seg
-                sweep_done = sweep_done + seg
-                if checkpoint is not None:
-                    checkpoint.save(
-                        sweep_done,
-                        dict(v=np.asarray(carry[0]),
-                             costs=np.asarray(carry[1]),
-                             best_v=np.asarray(carry[2]),
-                             best_c=np.asarray(carry[3]),
-                             keys=_key_to_np(carry[4])),
-                        archives,
-                        np.concatenate(hist_parts, axis=1), fp)
-            if seed_block is not None and archives is not None:
-                feed_cells(*seed_block)
-                seed_block = None
+                st["sweep_done"] = st["sweep_done"] + seg
+
+            def carry_np(carry):
+                return dict(v=np.asarray(carry[0]),
+                            costs=np.asarray(carry[1]),
+                            best_v=np.asarray(carry[2]),
+                            best_c=np.asarray(carry[3]),
+                            keys=_key_to_np(carry[4]))
+
+            def flush_seed():
+                if st["seed_block"] is not None and archives is not None:
+                    feed_cells(*st["seed_block"])
+                    st["seed_block"] = None
+
+            carry, _ = run_segmented(
+                sweeps=sweeps, seg_size=seg_size, checkpoint=checkpoint,
+                resume=resume, fingerprint=fp, archives=archives,
+                carry_like=carry_like, fresh=fresh,
+                from_restored=from_restored, run_segment=run_segment,
+                absorb=absorb, carry_np=carry_np,
+                history_np=lambda: np.concatenate(
+                    st["hist_parts"], axis=1),
+                sweep_counter=lambda done: st["sweep_done"],
+                flush_seed=flush_seed)
+            hist_parts, seed_block = st["hist_parts"], st["seed_block"]
 
             v_fin, costs_fin, best_v, best_c, _ = carry
             samples = None

@@ -510,6 +510,7 @@ class ScalarizationSweep:
             _check_budget,
             _check_checkpointable,
             _resolve_key,
+            budget_sweeps,
         )
 
         _check_budget(budget)
@@ -523,13 +524,9 @@ class ScalarizationSweep:
         w6 = self.weight_rows()
         k, n = w6.shape[0], self.n_chains
         total = k * n
-        sweeps = self.sweeps
-        if budget is not None:
-            if budget < total:
-                raise ValueError(
-                    f"budget {budget} < one chain population {total} "
-                    f"({k} directions x {n} chains)")
-            sweeps = min(sweeps, (budget - total) // total)
+        sweeps = budget_sweeps(
+            self.sweeps, total, budget,
+            detail=f" ({k} directions x {n} chains)")
 
         if objective.device:
             return self._search_device(space, objective, w6, sweeps, key)
@@ -645,6 +642,23 @@ def fold_cell_key(base: int, idx: int) -> int:
     a, b = (int(x) for x in np.ravel(np.asarray(data))[-2:])
     # 63-bit result: folded keys are themselves valid PRNGKey seeds
     return ((a << 32) | b) & 0x7FFF_FFFF_FFFF_FFFF
+
+
+def fold_job_key(base: int, job_id: str) -> int:
+    """Deterministic per-job search key for the serving layer.
+
+    The job's *name* (not its slot index) is hashed to a 32-bit index
+    and folded into the base key via :func:`fold_cell_key`. The key
+    therefore depends only on ``(base, job_id)`` — never on which slot
+    the scheduler packs the job into or which co-tenants share the
+    batch — which is what makes a job's trajectory bit-identical solo
+    vs packed (the per-slot ``fold_in`` inside the engine's
+    ``_init_fn`` would break exactly this, so serving must not use it)."""
+    import hashlib
+
+    idx = int.from_bytes(
+        hashlib.sha256(str(job_id).encode()).digest()[:4], "big")
+    return fold_cell_key(base, idx)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -830,15 +844,18 @@ class ScenarioSweep:
         from repro.core.evaluate import evaluate
         from repro.core.scalesim import SimCache
         from repro.pathfinding.device import get_scenario_engine
-        from repro.pathfinding.strategies import SearchResult, _checkpointer
+        from repro.pathfinding.strategies import (
+            SearchResult,
+            _checkpointer,
+            budget_sweeps,
+        )
 
         strat = self.strategy
         w6 = strat.weight_rows()
         k = w6.shape[0]
         nc = k * strat.n_chains
-        sweeps = strat.sweeps
-        if cell_budget is not None:
-            sweeps = min(sweeps, (cell_budget - nc) // nc)
+        # run() already rejected cell_budget < nc with grid context
+        sweeps = budget_sweeps(strat.sweeps, nc, cell_budget)
         S = len(cells)
         # per-chain layouts come from the inner strategy itself, so the
         # stacked grid and the single-cell device path cannot drift

@@ -21,12 +21,18 @@ This module holds the host-side state plumbing shared by both engines:
   search (engine kind, seed, ladder, weight rows, normalizer rows,
   segment size, ...). It is stored inside every checkpoint; restoring
   under a different configuration raises instead of silently continuing
-  a different search.
+  a different search. :func:`segment_fingerprint` names the field set
+  the segmented tempering engines share.
 * :class:`SearchCheckpointer` — the thin engine-facing wrapper:
   ``save(sweep_done, carry, archives, history, fingerprint)`` at segment
   boundaries, ``restore(...)`` on entry (returns ``None`` when no valid
   checkpoint exists; archives are reloaded *in place* so the caller's
   references stay live).
+* :func:`run_segmented` — the restore-or-init / advance-in-chunks /
+  snapshot-at-boundaries host loop itself, shared by
+  ``DeviceEvaluator.parallel_tempering`` and
+  ``ScenarioEngine.parallel_tempering`` (the engines supply only the
+  carry packing and output absorption).
 
 The user surface lives one layer up: ``checkpoint_dir=`` / ``resume=``
 on :class:`~repro.pathfinding.strategies.ParallelTempering`,
@@ -38,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Dict, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -72,6 +78,27 @@ def search_fingerprint(kind: str, **parts: Any) -> np.ndarray:
         h.update(str(a.shape).encode())
         h.update(np.ascontiguousarray(a).tobytes())
     return np.frombuffer(h.digest()[:8], dtype=np.uint64).copy()
+
+
+def segment_fingerprint(kind: str, *, v0, temps, swap_every, seed, mins,
+                        medians, weights, pair_mask, ci,
+                        segment: Optional[int], collect: bool,
+                        **extra: Any) -> np.ndarray:
+    """:func:`search_fingerprint` over the fields every segmented
+    tempering engine shares (seed population, ladder, weight rows,
+    normalizer rows, exchange gates, carbon intensity, segmentation).
+
+    The *user-facing* ``segment`` knob is hashed (-1 = None), not the
+    derived chunk size, so a finished ``segment=None`` run can be resumed
+    with a larger sweep budget — the documented extension use case.
+    Engine-specific fields (e.g. the scenario grid's workload ids) ride
+    in ``extra``."""
+    return search_fingerprint(
+        kind, v0=v0, temps=temps, swap_every=np.int64(swap_every),
+        seed=np.int64(seed), mins=mins, medians=medians, weights=weights,
+        pair_mask=pair_mask, ci=ci,
+        segment=np.int64(-1 if segment is None else segment),
+        collect=np.int64(bool(collect)), **extra)
 
 
 def check_not_shrunk(done: int, sweeps: int) -> None:
@@ -199,3 +226,70 @@ class SearchCheckpointer:
         if isinstance(archives, (list, tuple)):
             return list(archives)
         return [archives]
+
+
+def run_segmented(*, sweeps: int, seg_size: int, checkpoint, resume: bool,
+                  fingerprint: Optional[np.ndarray],
+                  archives: Union[None, object, Sequence[object]],
+                  carry_like: Optional[Dict[str, np.ndarray]],
+                  fresh: Callable[[], Any],
+                  from_restored: Callable[[RestoredSearch], Any],
+                  run_segment: Callable[[Any, int, int], Tuple[Any, Any]],
+                  absorb: Callable[[Any, int], None],
+                  carry_np: Callable[[Any], Dict[str, np.ndarray]],
+                  history_np: Callable[[], np.ndarray],
+                  sweep_counter: Callable[[int], Union[int, np.ndarray]],
+                  flush_seed: Callable[[], None]) -> Tuple[Any, int]:
+    """The host segment loop shared by both device tempering engines
+    (restore-or-init / advance-in-chunks / snapshot-at-boundaries).
+
+    :meth:`DeviceEvaluator.parallel_tempering
+    <repro.pathfinding.device.DeviceEvaluator.parallel_tempering>` and
+    :meth:`ScenarioEngine.parallel_tempering
+    <repro.pathfinding.device.ScenarioEngine.parallel_tempering>` differ
+    only in what the carry *is* (single-cell vs stacked, one RNG key vs a
+    per-cell key matrix), how a segment's outputs are absorbed (flat
+    history + one archive vs per-cell histories + per-cell archives) and
+    what the checkpoint's sweep counter looks like (scalar vs per-cell
+    vector); the control flow — which is what checkpoint correctness
+    hangs on — is this one function:
+
+    1. With ``checkpoint``/``resume``, restore the newest matching
+       snapshot; otherwise initialize fresh state via ``fresh()``
+       (``from_restored(r)`` rebuilds the device carry; a restored run
+       further along than ``sweeps`` raises via
+       :func:`check_not_shrunk`).
+    2. Advance in chunks: ``run_segment(carry, done, seg)`` invokes the
+       engine's compiled scan for ``seg = min(seg_size, sweeps - done)``
+       sweeps; ``absorb(ys, seg)`` feeds history/archives (including the
+       engine's lazily-prepended seed block).
+    3. After every chunk, snapshot ``(sweep_counter(done),
+       carry_np(carry), archives, history_np(), fingerprint)``.
+    4. ``flush_seed()`` covers the zero-sweep / resumed-complete edge
+       where the loop body never ran to consume the seed block.
+
+    Returns ``(carry, done)``. Bit-exactness contract: this drives the
+    exact same call sequence as the historical in-engine loops, so the
+    goldens in ``tests/test_resume.py`` pin it unchanged."""
+    restored = None
+    if checkpoint is not None and resume:
+        restored = checkpoint.restore(carry_like, archives, fingerprint)
+    if restored is None:
+        carry = fresh()
+        done = 0
+    else:
+        carry = from_restored(restored)
+        done = restored.sweep_done
+        check_not_shrunk(done, sweeps)
+    while done < sweeps:
+        seg = min(seg_size, sweeps - done)
+        carry, ys = run_segment(carry, done, seg)
+        absorb(ys, seg)
+        done += seg
+        if checkpoint is not None:
+            checkpoint.save(sweep_counter(done), carry_np(carry),
+                            archives, history_np(), fingerprint)
+    # a zero-sweep run (or a resumed-complete one) never feeds the seed
+    # population through the loop
+    flush_seed()
+    return carry, done

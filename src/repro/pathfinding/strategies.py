@@ -199,6 +199,29 @@ def _check_budget(budget: Optional[int]) -> None:
         raise ValueError(f"budget must be >= 1 or None, got {budget}")
 
 
+def budget_sweeps(sweeps: int, population: int,
+                  budget: Optional[int], *, detail: str = "") -> int:
+    """Clamp a sweep count to a *total* evaluation budget.
+
+    One chain population costs ``population`` evaluations to seed and
+    ``population`` more per sweep, so ``budget`` evaluations pay for at
+    most ``(budget - population) // population`` whole sweeps. A budget
+    below one population cannot seed the chains at all and is rejected
+    loudly (``detail`` extends the message with caller context).
+
+    This is the :class:`~repro.pathfinding.pareto.ScalarizationSweep`
+    total-split semantics — shared by the scenario grid (per-cell
+    budgets) and the serving layer (per-job budgets). Note
+    :class:`ParallelTempering` keeps its own, different accounting
+    (best-effort truncation instead of a loud reject)."""
+    if budget is None:
+        return sweeps
+    if budget < population:
+        raise ValueError(
+            f"budget {budget} < one chain population {population}{detail}")
+    return min(sweeps, (budget - population) // population)
+
+
 def _checkpointer(checkpoint_dir: Optional[str]):
     """A :class:`~repro.pathfinding.resume.SearchCheckpointer` for the
     directory, or ``None`` when checkpointing is off."""

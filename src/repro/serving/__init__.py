@@ -1,0 +1,20 @@
+"""Pathfinding as a service: a multi-tenant runtime over the warm
+device engines.
+
+:class:`PathfinderService` keeps one warm
+:class:`~repro.pathfinding.device.ScenarioEngine` and multiplexes many
+concurrent :class:`JobSpec` searches onto shape-bucketed pre-compiled
+programs, advancing everybody one segment at a time — see
+:mod:`repro.serving.service` for the scheduling/determinism contract
+and the README's "Pathfinding as a service" section for the tour.
+"""
+from repro.serving.jobs import JobResult, JobSpec, JobState, SearchJob
+from repro.serving.service import PathfinderService
+
+__all__ = [
+    "JobResult",
+    "JobSpec",
+    "JobState",
+    "PathfinderService",
+    "SearchJob",
+]

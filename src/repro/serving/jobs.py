@@ -1,0 +1,157 @@
+"""Job model of the pathfinding service.
+
+A *job* is one multi-objective search — a
+:class:`~repro.pathfinding.pareto.ScalarizationSweep` over one
+(workload, deployment region) cell — submitted to the shared warm
+engine instead of run as a blocking call. The service packs jobs into
+slots of a batched scenario axis and advances everybody one *segment*
+(a fixed number of sweeps) at a time, so a job's lifecycle is quantized
+at segment boundaries:
+
+    PENDING -> RUNNING -> DONE
+                  |  ^
+                  v  |  (pause/resume_job, preemption)
+               PAUSED -> PENDING
+    PENDING/RUNNING -> CANCELLED      (cancel; slot freed at boundary)
+    RUNNING -> FAILED                 (admission/engine error)
+
+Determinism contract: a job's RNG stream is derived from
+:func:`repro.pathfinding.pareto.fold_job_key` over its *job id* — never
+from the slot it lands in — and its sweep counter rides per-slot
+through the engine scan, so history/best/frontier are bit-identical
+whether the job runs solo, packed next to arbitrary co-tenants, or is
+preempted and resumed (including across a restart of the whole
+service, via per-job :class:`~repro.pathfinding.resume
+.SearchCheckpointer` snapshots at every boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.pathfinding.pareto import ParetoArchive, ScalarizationSweep
+
+
+class JobState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    PAUSED = "paused"
+    DONE = "done"
+    CANCELLED = "cancelled"
+    FAILED = "failed"
+
+
+#: states a job never leaves
+TERMINAL = (JobState.DONE, JobState.CANCELLED, JobState.FAILED)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """What a client submits.
+
+    ``job_id`` is the identity: it names the RNG stream (via
+    :func:`~repro.pathfinding.pareto.fold_job_key`), the checkpoint
+    subdirectory, and the handle for ``status``/``result``/``cancel``.
+    Resubmitting the same spec to a service with a checkpoint root
+    resumes the job bit-identically from its newest snapshot.
+
+    ``workload`` must name one of the workloads the service was built
+    over (the stacked engine bakes its tile tables per workload set).
+    ``strategy`` carries the search knobs; its ``sweeps`` are rounded
+    *up* to whole service segments (jobs join and leave the batch only
+    at segment boundaries). ``budget`` caps total evaluations with the
+    :func:`~repro.pathfinding.strategies.budget_sweeps` total-split
+    semantics, applied *before* the round-up."""
+
+    job_id: str
+    workload: str
+    strategy: ScalarizationSweep = dataclasses.field(
+        default_factory=lambda: ScalarizationSweep(
+            directions=2, n_chains=2, sweeps=8))
+    carbon_intensity: float = 0.475
+    budget: Optional[int] = None
+    key: Optional[int] = None
+    # per-job overrides of the service's adaptive-budget knobs (None =
+    # service default); only read when the service runs adaptive=True
+    stall_segments: Optional[int] = None
+    stall_tol: Optional[float] = None
+
+    def bucket_key(self) -> tuple:
+        """(total chains, swap cadence): the static shape of the batched
+        program this job can share."""
+        k = self.strategy.weight_rows().shape[0]
+        return (k * self.strategy.n_chains, self.strategy.swap_every)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobResult:
+    """Terminal output of a DONE job.
+
+    ``history`` is the per-sweep coldest-chain accepted cost (seed
+    population first) — the bit-compared trajectory. ``best_cost`` /
+    ``best_enc`` are the scalarized incumbent across the job's chains;
+    ``frontier`` the job's own :class:`ParetoArchive`. ``sweeps`` is
+    what actually ran (>= the nominal request only via adaptive-budget
+    donations, < it only via early convergence)."""
+
+    job_id: str
+    history: List[float]
+    best_cost: float
+    best_enc: np.ndarray
+    frontier: ParetoArchive
+    evaluations: int
+    sweeps: int
+    converged_early: bool = False
+
+
+@dataclasses.dataclass
+class SearchJob:
+    """Internal mutable per-job record (service-lock protected).
+
+    The numpy ``carry`` mirrors one slot of the batched scan carry —
+    chain populations/costs, incumbent, raw RNG key words — and is the
+    unit that moves between the live batch, PAUSED parking, and
+    checkpoint snapshots."""
+
+    spec: JobSpec
+    state: JobState = JobState.PENDING
+    widx: int = 0
+    seed: int = 0                      # fold_job_key(base, job_id)
+    # static per-slot rows (built once at first admission)
+    temps: Optional[np.ndarray] = None        # [nc]
+    weights: Optional[np.ndarray] = None      # [nc, 6]
+    pair_mask: Optional[np.ndarray] = None    # [max(nc-1, 1)]
+    mins: Optional[np.ndarray] = None         # [6]
+    medians: Optional[np.ndarray] = None      # [6]
+    # live search state
+    carry: Optional[Dict[str, np.ndarray]] = None
+    sweep_done: int = 0
+    target_sweeps: int = 0             # nominal, rounded up to segments
+    extra_sweeps: int = 0              # adaptive-budget extensions
+    history: Optional[List[float]] = None
+    archive: Optional[ParetoArchive] = None
+    # adaptive-budget convergence tracking (host-side, not checkpointed)
+    hv_ref: Optional[np.ndarray] = None
+    hv_last: float = 0.0
+    stall: int = 0
+    converged_early: bool = False
+    # control flags, applied at the next segment boundary
+    want_pause: bool = False
+    want_cancel: bool = False
+    slot: Optional[int] = None
+    fingerprint: Optional[np.ndarray] = None
+    checkpointer: Optional[object] = None
+    result: Optional[JobResult] = None
+    error: Optional[BaseException] = None
+
+    @property
+    def job_id(self) -> str:
+        return self.spec.job_id
+
+    @property
+    def remaining(self) -> int:
+        return max(0, self.target_sweeps + self.extra_sweeps
+                   - self.sweep_done)
