@@ -40,6 +40,7 @@ from benchmarks import (
     pareto_frontier,
     pathfinder_batch,
     pathfinder_device,
+    prefix_gather,
     roofline,
     scenario_sweep,
     serving_throughput,
@@ -62,6 +63,7 @@ ALL = [
     ("roofline", roofline),
     ("pathfinder_batch", pathfinder_batch),
     ("pathfinder_device", pathfinder_device),
+    ("prefix_gather", prefix_gather),
     ("pareto_frontier", pareto_frontier),
     ("scenario_sweep", scenario_sweep),
     ("checkpoint_resume", checkpoint_resume),

@@ -8,7 +8,12 @@
   prefix_gather — prefix-table gather + per-chiplet-slot segment reduction
                   (the device pathfinder's stage-3 inner loop).
 """
-from repro.kernels.prefix_gather import prefix_segment_gather, prefix_segment_ref
+from repro.kernels.prefix_gather import (
+    prefix_segment_gather,
+    prefix_segment_ref,
+    prefix_select_gather,
+    prefix_select_ref,
+)
 from repro.kernels.rglru import rglru, rglru_assoc_ref, rglru_ref
 from repro.kernels.systolic_gemm import gemm_ref, systolic_gemm
 from repro.kernels.wkv6 import wkv6, wkv6_ref, wkv6_ref_vmapped
@@ -18,4 +23,5 @@ __all__ = [
     "wkv6", "wkv6_ref", "wkv6_ref_vmapped",
     "rglru", "rglru_ref", "rglru_assoc_ref",
     "prefix_segment_gather", "prefix_segment_ref",
+    "prefix_select_gather", "prefix_select_ref",
 ]

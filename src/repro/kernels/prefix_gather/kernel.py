@@ -13,6 +13,18 @@ prefix table lives in (V)MEM as a single resident block; the slot loop is
 unrolled (``C`` = max chiplets, 6 by default), each iteration issuing two
 dynamically indexed scalar loads.
 
+Two kernels share the idiom:
+
+  ``_gather_kernel``  — one table, raw [start, end] differences (PR 2's
+                        original single-metric entry point).
+  ``_select_kernel``  — the fused tempering gather stage: both split-K
+                        table stacks resident at once, per-row clip
+                        bounds applied on the SMEM scalars, per-slot
+                        split select and per-metric segment reduction
+                        emitted in the same grid step. This is the one
+                        the device evaluator and the workload-stacked
+                        ScenarioEngine route through.
+
 CPU containers run this in interpreter mode, which is exact for the
 float64 tables the device evaluator feeds it (prefix magnitudes < 2^53).
 On TPU the same kernel compiles for float32/int32 tables; the f64 parity
@@ -62,3 +74,72 @@ def prefix_segment(pref, rows, start, end, *, interpret: bool):
         interpret=interpret,
     )(rows.astype(jnp.int32), start.astype(jnp.int32),
       end.astype(jnp.int32), pref)
+
+
+def _select_kernel(rows_ref, start_ref, end_ref, split_ref, t0_ref, t1_ref,
+                   p0_ref, p1_ref, sel_ref, total_ref, *, nc: int, nf: int):
+    """Fused gather → per-slot split-K select → segment reduce.
+
+    One grid step per system: the six index/bound vectors ride in scalar
+    prefetch (SMEM); BOTH split-K table stacks (``[F, R, T+1]``, one
+    plane per sim metric) are resident (V)MEM blocks with a constant
+    index map, so Pallas's double-buffered block pipeline copies them in
+    once and every grid step reuses the same buffers. Clipping to the
+    per-row tile totals happens on the SMEM scalars, so bucket-padded
+    rows and ``T0 != T1`` split tables never leak padding into a gather.
+    """
+    i = pl.program_id(0)
+    sp = split_ref[i] == 1
+    t0 = t0_ref[i]
+    t1 = t1_ref[i]
+    tot = [None] * nf
+    for c in range(nc):  # static unroll over chiplet slots
+        r = rows_ref[i, c]
+        s = start_ref[i, c]
+        e = end_ref[i, c]
+        # clip against the true (unpadded) per-row tile totals
+        s0 = jnp.minimum(jnp.maximum(s, 0), t0)
+        e0 = jnp.minimum(jnp.maximum(e, 0), t0)
+        s1 = jnp.minimum(jnp.maximum(s, 0), t1)
+        e1 = jnp.minimum(jnp.maximum(e, 0), t1)
+        for f in range(nf):  # static unroll over sim metrics
+            d = jnp.where(sp, p1_ref[f, r, e1] - p1_ref[f, r, s1],
+                          p0_ref[f, r, e0] - p0_ref[f, r, s0])
+            sel_ref[0, c, f] = d
+            tot[f] = d if tot[f] is None else tot[f] + d
+    for f in range(nf):
+        total_ref[0, f] = tot[f]
+
+
+def prefix_select(pref0, pref1, rows, start, end, split, t0, t1, *,
+                  interpret: bool):
+    """(sel [P, C, F], total [P, F]) — the fused tempering gather stage.
+
+    ``pref0``/``pref1`` are the two split-K table stacks ``[F, R, T+1]``
+    (row counts match, tile axes may differ); ``rows``/``start``/``end``
+    are ``[P, C]``; ``split``/``t0``/``t1`` are per-system ``[P]`` split
+    selectors and clip bounds. Rows already carry any workload-stack
+    offset, so the same kernel serves the single-workload flat layout
+    and the scenario engine's ``[(Wk*A*S*3), T_bucket+1]`` layout.
+    """
+    P, C = rows.shape
+    F, R0, T0b = pref0.shape
+    F1, R1, T1b = pref1.shape
+    assert F == F1 and R0 == R1, (pref0.shape, pref1.shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(P,),
+        in_specs=[pl.BlockSpec((F, R0, T0b), lambda i, *_: (0, 0, 0)),
+                  pl.BlockSpec((F, R1, T1b), lambda i, *_: (0, 0, 0))],
+        out_specs=[pl.BlockSpec((1, C, F), lambda i, *_: (i, 0, 0)),
+                   pl.BlockSpec((1, F), lambda i, *_: (i, 0))],
+    )
+    return pl.pallas_call(
+        functools.partial(_select_kernel, nc=C, nf=F),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((P, C, F), pref0.dtype),
+                   jax.ShapeDtypeStruct((P, F), pref0.dtype)],
+        interpret=interpret,
+    )(rows.astype(jnp.int32), start.astype(jnp.int32),
+      end.astype(jnp.int32), split.astype(jnp.int32),
+      t0.astype(jnp.int32), t1.astype(jnp.int32), pref0, pref1)

@@ -1,8 +1,16 @@
-"""Jitted public wrapper for the prefix-gather kernel.
+"""Jitted public wrappers for the prefix-gather kernels.
 
 Dispatches to interpreter mode on non-TPU backends (the kernel body runs
 in Python but stays bit-exact, including for float64 tables) and to the
 compiled path on TPU.
+
+``prefix_select_gather`` — the fused tempering gather stage — carries a
+``jax.custom_batching.custom_vmap`` rule: the stacked ScenarioEngine
+calls it from inside a ``vmap`` over scenario cells, and the rule
+flattens the mapped cell axis into the kernel grid (``[B, P, C] ->
+[B*P, C]``) instead of relying on ``pallas_call``'s own batching. The
+prefix tables stay unbatched operands (cells share one workload-stacked
+table), so one kernel launch covers the whole grid.
 """
 from __future__ import annotations
 
@@ -10,6 +18,8 @@ import functools
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
+from jax import custom_batching
 
 from repro.kernels.prefix_gather import kernel as K
 
@@ -36,3 +46,81 @@ def prefix_segment_gather(pref, rows, start, end,
     interp = _default_interpret() if interpret is None else interpret
     diff, total = K.prefix_segment(pref, rows, start, end, interpret=interp)
     return diff, total[:, 0]
+
+
+@functools.lru_cache(maxsize=None)
+def _select_fn(interpret: bool):
+    """The custom_vmap-wrapped fused kernel for one interpret setting."""
+
+    def call(pref0, pref1, rows, start, end, split, t0, t1):
+        return K.prefix_select(pref0, pref1, rows, start, end, split,
+                               t0, t1, interpret=interpret)
+
+    fn = custom_batching.custom_vmap(call)
+
+    @fn.def_vmap
+    def _rule(axis_size, in_batched, pref0, pref1, rows, start, end,
+              split, t0, t1):
+        (b_p0, b_p1, b_rows, b_start, b_end, b_split, b_t0,
+         b_t1) = in_batched
+        if b_p0 or b_p1:
+            raise NotImplementedError(
+                "prefix_select_gather: batched prefix tables are not "
+                "supported — the vmapped axis must share one "
+                "(workload-stacked) table pair")
+        B = axis_size
+
+        def bat(x, batched):
+            return x if batched else jnp.broadcast_to(x, (B,) + x.shape)
+
+        rows_b = bat(rows, b_rows)
+        P = rows_b.shape[1]
+
+        def flat(x):
+            return x.reshape((B * P,) + x.shape[2:])
+
+        sel, tot = call(pref0, pref1, flat(rows_b),
+                        flat(bat(start, b_start)), flat(bat(end, b_end)),
+                        flat(bat(split, b_split)), flat(bat(t0, b_t0)),
+                        flat(bat(t1, b_t1)))
+        return (sel.reshape((B, P) + sel.shape[1:]),
+                tot.reshape((B, P) + tot.shape[1:])), (True, True)
+
+    return fn
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prefix_select_gather(pref0, pref1, rows, start, end, split, t0, t1,
+                         interpret: Optional[bool] = None):
+    """Fused gather → split-K select → per-metric segment reduce.
+
+    The tempering inner step's whole table stage in one kernel launch
+    (where the PR-2 entry point needed ``F metrics x 2 splits`` calls).
+
+    Args:
+      pref0/pref1: ``[F, R, T0+1]`` / ``[F, R, T1+1]`` split-K prefix
+        table stacks — one plane per sim metric; the tile axes may
+        differ (``T0 != T1``) and may be bucket-padded past the true
+        totals (edge padding).
+      rows: ``[P, C]`` table row per chiplet slot. Rows carry any
+        workload-stack offset (``((wi*A + a)*S + s)*3 + d``) already.
+      start/end: ``[P, C]`` unclipped tile ranges.
+      split: ``[P]`` per-system split-K selector (1 selects ``pref1``).
+      t0/t1: ``[P]`` per-row true tile totals — gathers clip here, so
+        padded tail slots are never read.
+      interpret: force Pallas interpret mode; default on non-TPU
+        backends.
+
+    Returns:
+      ``(sel [P, C, F], total [P, F])`` — split-selected per-slot
+      differences and their per-system segment reduction.
+
+    Under ``vmap`` the mapped axis is flattened into the kernel grid
+    (tables must be unbatched); see the module docstring.
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    fn = _select_fn(bool(interp))
+    return fn(pref0, pref1, rows.astype(jnp.int32),
+              start.astype(jnp.int32), end.astype(jnp.int32),
+              split.astype(jnp.int32), t0.astype(jnp.int32),
+              t1.astype(jnp.int32))

@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -467,31 +468,43 @@ def _topology_jax(v, areas, tb, cfg: _Cfg):
 # ---------------------------------------------------------------------------
 
 
-def _gather_sims(v, a_idx, s_idx, di, start, end, tb, cfg: _Cfg):
+def _gather_sims(v, a_idx, s_idx, di, start, end, tb, cfg: _Cfg, rt=None):
     """Prefix-table gathers for both split-K tables + per-row select.
 
-    With ``cfg.use_pallas`` the gather + per-slot segment reduction runs
-    through :func:`repro.kernels.prefix_gather.prefix_segment_gather`
-    (flattened ``[A*S*3, T+1]`` tables); otherwise plain jnp gathers.
+    With ``cfg.use_pallas`` the whole stage — both split-K gathers for
+    all five sim metrics, the per-row clip to the true tile totals, the
+    split select and the per-slot segment reduction — is one fused
+    Pallas launch (:func:`repro.kernels.prefix_gather.
+    prefix_select_gather`); otherwise plain jnp gathers (the bit-pinned
+    reference path). ``rt`` (the stacked scenario engine's per-cell
+    runtime constants) switches the kernel to the workload-stacked
+    ``[(Wk*A*S*3), T_bucket+1]`` tables: the row index picks up the
+    per-workload offset ``wi*A*S*3`` and the clip bounds come from the
+    traced per-cell tile totals instead of ``cfg``.
     """
     import jax.numpy as jnp
 
     split1 = (v[:, COL_SPLITK] == 1)[:, None]
     sims = {}
     if cfg.use_pallas:
-        from repro.kernels.prefix_gather import prefix_segment_gather
+        from repro.kernels.prefix_gather import prefix_select_gather
 
+        P = v.shape[0]
         ridx = ((a_idx * cfg.S + s_idx) * 3 + di).astype(jnp.int32)
+        if rt is None:
+            p0f, p1f = tb["pref0_flat"], tb["pref1_flat"]
+            t0v = jnp.full((P,), cfg.T0, dtype=jnp.int32)
+            t1v = jnp.full((P,), cfg.T1, dtype=jnp.int32)
+        else:
+            p0f, p1f = tb["pref0_flatw"], tb["pref1_flatw"]
+            ridx = ridx + jnp.int32(cfg.A * cfg.S * 3) * \
+                rt["wi"].astype(jnp.int32)
+            t0v = jnp.broadcast_to(rt["T0"].astype(jnp.int32), (P,))
+            t1v = jnp.broadcast_to(rt["T1"].astype(jnp.int32), (P,))
+        sel, _ = prefix_select_gather(p0f, p1f, ridx, start, end,
+                                      v[:, COL_SPLITK], t0v, t1v)
         for fi, f in enumerate(_SIM_METRICS):
-            d0, _ = prefix_segment_gather(
-                tb["pref0_flat"][fi], ridx,
-                jnp.clip(start, 0, cfg.T0).astype(jnp.int32),
-                jnp.clip(end, 0, cfg.T0).astype(jnp.int32))
-            d1, _ = prefix_segment_gather(
-                tb["pref1_flat"][fi], ridx,
-                jnp.clip(start, 0, cfg.T1).astype(jnp.int32),
-                jnp.clip(end, 0, cfg.T1).astype(jnp.int32))
-            sims[f] = jnp.where(split1, d1, d0).astype(jnp.int64)
+            sims[f] = sel[..., fi]
     else:
         s0 = jnp.clip(start, 0, cfg.T0)
         e0 = jnp.clip(end, 0, cfg.T0)
@@ -550,7 +563,8 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, rt=None):
     start, count = _assign_jax(powers, nmask, v[:, COL_ORDER], total, cfg)
     end = start + count
     di = jnp.broadcast_to(v[:, COL_DATAFLOW][:, None], (P, C))
-    sims, mn_bits = _gather_sims(v, a_idx, s_idx, di, start, end, tb, cfg)
+    sims, mn_bits = _gather_sims(v, a_idx, s_idx, di, start, end, tb, cfg,
+                                 rt)
 
     topo = _topology_jax(v, areas, tb, cfg)
 
@@ -1030,8 +1044,11 @@ def _tile_tables(host) -> dict:
 
 
 def _pallas_tables(host) -> dict:
-    """Flattened [(A*S*3), T+1] float64 copies for the Pallas kernel
-    (prefix magnitudes < 2^53, so float64 is exact)."""
+    """Flattened [5, (A*S*3), T+1] native-dtype (int64) copies for the
+    Pallas kernel. Interpret mode subtracts in int64 exactly like the
+    jnp reference gathers, so the kernel path is bit-identical on CPU;
+    the compiled TPU path needs rebased float32 tables instead (see the
+    kernel module docstring)."""
     import jax.numpy as jnp
 
     out = {}
@@ -1039,8 +1056,31 @@ def _pallas_tables(host) -> dict:
         pref = np.stack(
             [host.tiles[sk]["pref"][f] for f in _SIM_METRICS])
         out[name] = jnp.asarray(
-            pref.reshape(len(_SIM_METRICS), -1,
-                         pref.shape[-1]).astype(np.float64))
+            pref.reshape(len(_SIM_METRICS), -1, pref.shape[-1]))
+    return out
+
+
+def _pallas_stacked_tables(hosts, tb0: int, tb1: int) -> dict:
+    """Workload-stacked flattened ``[5, (Wk*A*S*3), T_bucket+1]`` float64
+    tables for the fused Pallas kernel: each workload's per-metric prefix
+    tables are edge-padded to the shared tile bucket and concatenated
+    along the row axis, so the kernel indexes
+    ``row = ((wi*A + a)*S + s)*3 + d`` with per-cell clip bounds at the
+    true (unpadded) tile totals. Native (int64) dtype like
+    :func:`_pallas_tables`, for bit-exact interpret-mode subtraction.
+    Call under ``enable_x64``."""
+    import jax.numpy as jnp
+
+    out = {}
+    for sk, bucket, name in ((0, tb0, "pref0_flatw"),
+                             (1, tb1, "pref1_flatw")):
+        mats = []
+        for h in hosts:
+            pref = np.stack(
+                [h.tiles[sk]["pref"][f] for f in _SIM_METRICS])
+            pref = _pad_tiles(pref, bucket, axis=-1)
+            mats.append(pref.reshape(pref.shape[0], -1, bucket + 1))
+        out[name] = jnp.asarray(np.concatenate(mats, axis=1))
     return out
 
 
@@ -1066,7 +1106,20 @@ class DevicePTResult:
     samples: Optional[Dict[str, np.ndarray]] = None
 
 
+_PALLAS_ENV_WARNED = False
+
+
 def _resolve_pallas(use_pallas: Optional[bool]) -> bool:
+    """Resolve the kernel fast-path switch.
+
+    An explicit ``use_pallas`` argument wins. Otherwise the
+    ``REPRO_PATHFINDER_PALLAS`` environment variable decides: ``1`` (or
+    ``true``/``yes``) forces the Pallas path, ``0`` (``false``/``no``)
+    forces plain jnp, and ``auto`` (the default) enables the kernel on
+    TPU backends only. Any other value warns once per process and falls
+    back to ``auto``.
+    """
+    global _PALLAS_ENV_WARNED
     if use_pallas is not None:
         return use_pallas
     env = os.environ.get("REPRO_PATHFINDER_PALLAS", "auto").lower()
@@ -1074,6 +1127,13 @@ def _resolve_pallas(use_pallas: Optional[bool]) -> bool:
         return True
     if env in ("0", "false", "no"):
         return False
+    if env != "auto" and not _PALLAS_ENV_WARNED:
+        _PALLAS_ENV_WARNED = True
+        warnings.warn(
+            f"unrecognized REPRO_PATHFINDER_PALLAS value {env!r}; accepted "
+            "values are 0/1/auto (aliases: false/no and true/yes) — "
+            "falling back to auto (Pallas on TPU backends only)",
+            RuntimeWarning, stacklevel=2)
     import jax
 
     return jax.default_backend() == "tpu"
@@ -1551,13 +1611,23 @@ class ScenarioEngine:
     multi-thousand-cell sweep checkpoints at boundaries and resumes
     bit-identically (:mod:`repro.pathfinding.resume`).
 
-    The stacked engine always uses the plain jnp gather path (the Pallas
-    prefix-gather kernel remains a single-workload engine option)."""
+    Kernel fast path: like :class:`DeviceEvaluator`, the stacked engine
+    takes ``use_pallas`` (default: the ``REPRO_PATHFINDER_PALLAS``
+    resolution, see :func:`_resolve_pallas`). When enabled, the gather +
+    split-select + segment-reduce stage of every cell's tempering step
+    runs through the fused :func:`repro.kernels.prefix_gather.
+    prefix_select_gather` kernel on workload-stacked flattened tables —
+    its ``custom_vmap`` rule folds the scenario-cell axis into the
+    kernel grid, so the whole ``[S, n]`` population tile is one launch
+    per sweep. The jnp path stays the bit-pinned reference; the same
+    ``scenario_pt``/``scenario_init`` programs are emitted either way,
+    so segmentation, checkpoints and serving replay are unaffected."""
 
     def __init__(self, workloads: Sequence[GEMMWorkload],
                  db: TechDB = DEFAULT_DB,
                  tile_sizes: Tuple[int, int, int] = DEFAULT_TILE,
-                 space: Optional[DesignSpace] = None):
+                 space: Optional[DesignSpace] = None,
+                 use_pallas: Optional[bool] = None):
         import jax.numpy as jnp
         from jax.experimental import enable_x64
 
@@ -1573,10 +1643,13 @@ class ScenarioEngine:
         t0s = [h.tiles[0]["T"] for h in hosts]
         t1s = [h.tiles[1]["T"] for h in hosts]
         tb0, tb1 = _tile_bucket(max(t0s)), _tile_bucket(max(t1s))
+        use_pallas = _resolve_pallas(use_pallas)
         self.cfg = _base_cfg(sp, db, T0=tb0, T1=tb1, wr_bits=0.0,
-                             use_pallas=False)
+                             use_pallas=use_pallas)
         with enable_x64():
             tb = _shared_tables(hosts[0], sp)
+            if use_pallas:
+                tb.update(_pallas_stacked_tables(hosts, tb0, tb1))
             tb.update(
                 pref0w=jnp.asarray(np.stack([
                     _pad_tiles(np.stack(
@@ -1608,7 +1681,7 @@ class ScenarioEngine:
         tbc = dict(tb, pref0=tb["pref0w"][wi], pref1=tb["pref1w"][wi],
                    mn0=tb["mn0w"][wi], mn1=tb["mn1w"][wi])
         rt = dict(T0=tb["t0w"][wi], T1=tb["t1w"][wi],
-                  wr_bits=tb["wrw"][wi])
+                  wr_bits=tb["wrw"][wi], wi=wi)
         return tbc, rt
 
     # -- one-shot stacked evaluation (normalizer fits, finalization) -------
@@ -2012,15 +2085,21 @@ def get_scenario_engine(workloads: Sequence[GEMMWorkload],
                         space: Optional[DesignSpace] = None
                         ) -> ScenarioEngine:
     """Cached :class:`ScenarioEngine` per (workload tuple, db, tiles,
-    chiplet bound) — the stacked twin of :func:`get_device_evaluator`."""
+    chiplet bound) — the stacked twin of :func:`get_device_evaluator`.
+
+    Like that twin, the resolved Pallas setting is part of the key, so
+    flipping ``REPRO_PATHFINDER_PALLAS`` mid-process builds a fresh
+    engine instead of silently returning the cached other-path one."""
     from repro.pathfinding.batch import cached_evaluator
 
+    use_pallas = _resolve_pallas(None)
     key = (tuple(workloads), id(db), tile_sizes,
            space.max_chiplets if space is not None else
-           DEFAULT_MAX_CHIPLETS)
+           DEFAULT_MAX_CHIPLETS, use_pallas)
     return cached_evaluator(
         _SCENARIO_ENGINES, key, db,
-        lambda: ScenarioEngine(workloads, db, tile_sizes, space),
+        lambda: ScenarioEngine(workloads, db, tile_sizes, space,
+                               use_pallas),
         _SCENARIO_ENGINE_CACHE_MAX)
 
 

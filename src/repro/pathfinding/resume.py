@@ -92,7 +92,14 @@ def segment_fingerprint(kind: str, *, v0, temps, swap_every, seed, mins,
     derived chunk size, so a finished ``segment=None`` run can be resumed
     with a larger sweep budget — the documented extension use case.
     Engine-specific fields (e.g. the scenario grid's workload ids) ride
-    in ``extra``."""
+    in ``extra``.
+
+    The kernel fast path is deliberately *outside* the fingerprint: the
+    Pallas gather (``use_pallas`` / ``REPRO_PATHFINDER_PALLAS``) is an
+    execution detail of the same search, exact on the integer prefix
+    tables, so a checkpoint written with the kernel on resumes under the
+    jnp path (and vice versa) — only float fusion noise (~1e-16), never
+    the key stream or sweep indices, can differ across the switch."""
     return search_fingerprint(
         kind, v0=v0, temps=temps, swap_every=np.int64(swap_every),
         seed=np.int64(seed), mins=mins, medians=medians, weights=weights,

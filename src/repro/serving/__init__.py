@@ -8,10 +8,17 @@ programs, advancing everybody one segment at a time — see
 :mod:`repro.serving.service` for the scheduling/determinism contract
 and the README's "Pathfinding as a service" section for the tour.
 """
-from repro.serving.jobs import JobResult, JobSpec, JobState, SearchJob
+from repro.serving.jobs import (
+    JobEvictedError,
+    JobResult,
+    JobSpec,
+    JobState,
+    SearchJob,
+)
 from repro.serving.service import PathfinderService
 
 __all__ = [
+    "JobEvictedError",
     "JobResult",
     "JobSpec",
     "JobState",

@@ -48,6 +48,19 @@ class JobState(enum.Enum):
 TERMINAL = (JobState.DONE, JobState.CANCELLED, JobState.FAILED)
 
 
+class JobEvictedError(KeyError):
+    """A job finished and its record was garbage-collected past the
+    service's ``retain_jobs`` retention cap.
+
+    Subclasses :class:`KeyError` (lookups by id still behave like a
+    missing key for callers that catch broadly) but renders its message
+    verbatim instead of KeyError's quoted-args repr, so clients see why
+    the id is gone and what to do about it."""
+
+    def __str__(self) -> str:  # KeyError would repr() the message
+        return self.args[0] if self.args else ""
+
+
 @dataclasses.dataclass(frozen=True)
 class JobSpec:
     """What a client submits.
@@ -141,6 +154,8 @@ class SearchJob:
     # control flags, applied at the next segment boundary
     want_pause: bool = False
     want_cancel: bool = False
+    # terminal-transition order stamp (drives retention-cap GC)
+    finished_seq: int = -1
     slot: Optional[int] = None
     fingerprint: Optional[np.ndarray] = None
     checkpointer: Optional[object] = None

@@ -61,6 +61,7 @@ from repro.core.workload import GEMMWorkload
 from repro.pathfinding.pareto import ParetoArchive, fold_job_key
 from repro.serving.jobs import (
     TERMINAL,
+    JobEvictedError,
     JobResult,
     JobSpec,
     JobState,
@@ -143,7 +144,17 @@ class PathfinderService:
     service runs inline inside :meth:`drain` (deterministic
     single-thread mode, what the tests use). With ``checkpoint_root``
     every job snapshots at each boundary under
-    ``<checkpoint_root>/<job_id>``."""
+    ``<checkpoint_root>/<job_id>``.
+
+    Terminal-job GC: a long-lived service would otherwise accumulate
+    every finished job's record (history, frontier archive, parked
+    carry) forever. The newest ``retain_jobs`` terminal jobs are kept
+    for result pickup; older ones are evicted in the order they
+    finished, and any later access to an evicted id raises
+    :class:`~repro.serving.jobs.JobEvictedError` (still a ``KeyError``)
+    naming the cap. Resubmitting an evicted id starts a fresh job —
+    with a checkpoint root, bit-identically resuming from its newest
+    snapshot (checkpoints live on disk and are not GC'd)."""
 
     def __init__(self, workloads: Sequence[GEMMWorkload],
                  db: TechDB = DEFAULT_DB, slots: int = 4,
@@ -151,7 +162,8 @@ class PathfinderService:
                  norm_seed: int = 1234, adaptive: bool = False,
                  stall_segments: int = 2, stall_tol: float = 0.0,
                  checkpoint_root: Optional[str] = None,
-                 key: Optional[int] = None, space=None):
+                 key: Optional[int] = None, space=None,
+                 retain_jobs: int = 256):
         from repro.pathfinding.device import get_scenario_engine
         from repro.pathfinding.strategies import _resolve_key
 
@@ -159,6 +171,9 @@ class PathfinderService:
             raise ValueError(f"slots must be >= 1, got {slots}")
         if segment < 1:
             raise ValueError(f"segment must be >= 1, got {segment}")
+        if retain_jobs < 1:
+            raise ValueError(
+                f"retain_jobs must be >= 1, got {retain_jobs}")
         self.workloads = tuple(workloads)
         if not self.workloads:
             raise ValueError("PathfinderService needs >= 1 workload")
@@ -176,7 +191,10 @@ class PathfinderService:
         self._norms: Dict[Tuple[int, float], object] = {}
         self._buckets: Dict[tuple, _Bucket] = {}
         self._pool: Dict[tuple, int] = {}      # donated sweeps per bucket
+        self.retain_jobs = int(retain_jobs)
         self._jobs: Dict[str, SearchJob] = {}
+        self._evicted: set = set()             # ids GC'd past the cap
+        self._finished_seq = 0                 # terminal-order stamp
         self._queue: List[str] = []            # FIFO admission order
         self._cond = threading.Condition()
         self._thread: Optional[threading.Thread] = None
@@ -209,6 +227,7 @@ class PathfinderService:
                 raise ValueError(f"job {spec.job_id!r} is already "
                                  f"{old.state.value}")
             job = SearchJob(spec=spec, widx=self._widx[spec.workload])
+            self._evicted.discard(spec.job_id)
             self._jobs[spec.job_id] = job
             self._queue.append(spec.job_id)
             self._cond.notify_all()
@@ -249,6 +268,7 @@ class PathfinderService:
                 if job.job_id in self._queue:
                     self._queue.remove(job.job_id)
                 job.state = JobState.CANCELLED
+                self._note_terminal(job)
             else:
                 job.want_cancel = True
             self._cond.notify_all()
@@ -339,10 +359,11 @@ class PathfinderService:
                     progressed = self._tick()
                 except BaseException:
                     # a failed tick must not silently wedge clients
-                    for job in self._jobs.values():
+                    for job in list(self._jobs.values()):
                         if job.state in (JobState.RUNNING,
                                          JobState.PENDING):
                             job.state = JobState.FAILED
+                            self._note_terminal(job)
                     self._cond.notify_all()
                     raise
                 if not progressed:
@@ -385,6 +406,7 @@ class PathfinderService:
                 job.state = JobState.FAILED
                 job.error = e
                 bucket.clear_slot(slot)
+                self._note_terminal(job)
             admitted = True
             self._cond.notify_all()
         return admitted
@@ -440,6 +462,7 @@ class PathfinderService:
         if job.want_cancel:
             job.state = JobState.CANCELLED
             b.clear_slot(s)
+            self._note_terminal(job)
             return
         if job.want_pause:
             job.want_pause = False
@@ -502,6 +525,7 @@ class PathfinderService:
             converged_early=job.converged_early)
         job.state = JobState.DONE
         b.clear_slot(s)
+        self._note_terminal(job)
 
     # -- admission ----------------------------------------------------------
 
@@ -703,8 +727,32 @@ class PathfinderService:
     def _job(self, job_id: str) -> SearchJob:
         job = self._jobs.get(job_id)
         if job is None:
+            if job_id in self._evicted:
+                raise JobEvictedError(
+                    f"job {job_id!r} finished and was evicted by "
+                    f"terminal-job GC (retain_jobs="
+                    f"{self.retain_jobs}); fetch results before more "
+                    "than retain_jobs jobs finish, raise the cap, or "
+                    "resubmit (a checkpoint root resumes it from its "
+                    "newest on-disk snapshot)")
             raise KeyError(f"unknown job {job_id!r}")
         return job
+
+    def _note_terminal(self, job: SearchJob) -> None:
+        """Stamp the terminal transition order and evict the oldest
+        terminal records past ``retain_jobs`` (caller holds
+        ``self._cond``). Only terminal jobs are ever evicted; live ones
+        are untouched no matter how many finish around them."""
+        job.finished_seq = self._finished_seq
+        self._finished_seq += 1
+        term = [j for j in self._jobs.values() if j.state in TERMINAL]
+        excess = len(term) - self.retain_jobs
+        if excess <= 0:
+            return
+        term.sort(key=lambda j: j.finished_seq)
+        for j in term[:excess]:
+            del self._jobs[j.job_id]
+            self._evicted.add(j.job_id)
 
     @staticmethod
     def _terminal_result(job: SearchJob) -> JobResult:

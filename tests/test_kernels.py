@@ -12,6 +12,8 @@ from repro.kernels import (
     gemm_ref,
     prefix_segment_gather,
     prefix_segment_ref,
+    prefix_select_gather,
+    prefix_select_ref,
     rglru,
     rglru_assoc_ref,
     rglru_ref,
@@ -180,3 +182,155 @@ def test_prefix_gather_int32_path():
     diff_r, total_r = prefix_segment_ref(pref, rows, start, end)
     assert (np.asarray(diff) == np.asarray(diff_r)).all()
     assert (np.asarray(total) == np.asarray(total_r)).all()
+
+
+# ---------------------------------------------------------------------------
+# prefix_select (fused stacked gather -> split-select -> segment reduce)
+# ---------------------------------------------------------------------------
+
+
+def _select_tables(rng, F, R, t0, t1, tb0, tb1):
+    """Integer prefix tables with true totals t0/t1, edge-padded to the
+    tile buckets tb0/tb1 (exactly what the stacked engine builds)."""
+    p0 = np.cumsum(rng.integers(0, 10**9, (F, R, t0 + 1)), axis=2)
+    p1 = np.cumsum(rng.integers(0, 10**9, (F, R, t1 + 1)), axis=2)
+    pad0 = np.pad(p0, [(0, 0), (0, 0), (0, tb0 - t0)], mode="edge")
+    pad1 = np.pad(p1, [(0, 0), (0, 0), (0, tb1 - t1)], mode="edge")
+    return jnp.asarray(pad0), jnp.asarray(pad1)
+
+
+def test_prefix_select_matches_ref_t0_ne_t1():
+    """Fused kernel vs the jnp oracle with T0 != T1 split tables and
+    per-row clip bounds: bit-exact integer prefix differences."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        rng = np.random.default_rng(7)
+        F, R, P, C = 5, 36, 48, 6
+        t0, t1, tb0, tb1 = 37, 81, 64, 128
+        p0, p1 = _select_tables(rng, F, R, t0, t1, tb0, tb1)
+        rows = jnp.asarray(rng.integers(0, R, (P, C)).astype(np.int32))
+        # bounds deliberately overrun both true totals -> must clip
+        start = jnp.asarray(rng.integers(0, tb1, (P, C)).astype(np.int32))
+        end = start + jnp.asarray(
+            rng.integers(0, tb1, (P, C)).astype(np.int32))
+        split = jnp.asarray(rng.integers(0, 2, (P,)).astype(np.int32))
+        t0v = jnp.full((P,), t0, jnp.int32)
+        t1v = jnp.full((P,), t1, jnp.int32)
+        sel, tot = prefix_select_gather(p0, p1, rows, start, end, split,
+                                        t0v, t1v)
+        sel_r, tot_r = prefix_select_ref(p0, p1, rows, start, end, split,
+                                         t0v, t1v)
+        assert (np.asarray(sel) == np.asarray(sel_r)).all()
+        assert (np.asarray(tot) == np.asarray(tot_r)).all()
+        # cross-check against the PR-2 single-table oracle: clip, gather
+        # each split table, select per row
+        for fi in range(F):
+            d0, _ = prefix_segment_ref(p0[fi], rows,
+                                       jnp.clip(start, 0, t0),
+                                       jnp.clip(end, 0, t0))
+            d1, _ = prefix_segment_ref(p1[fi], rows,
+                                       jnp.clip(start, 0, t1),
+                                       jnp.clip(end, 0, t1))
+            want = np.where(np.asarray(split)[:, None] == 1,
+                            np.asarray(d1), np.asarray(d0))
+            assert (np.asarray(sel)[:, :, fi] == want).all()
+
+
+def test_prefix_select_empty_segments_and_padded_rows():
+    """Bucket-padding boundaries: start == end slots contribute exactly
+    zero, and ranges clipped into the edge-replicated padding match the
+    unpadded tables bit-for-bit."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        rng = np.random.default_rng(8)
+        F, R, P, C = 5, 12, 16, 4
+        t0, t1, tb0, tb1 = 19, 23, 64, 64
+        p0, p1 = _select_tables(rng, F, R, t0, t1, tb0, tb1)
+        rows = jnp.asarray(rng.integers(0, R, (P, C)).astype(np.int32))
+        base = rng.integers(0, tb0 + 1, (P, C)).astype(np.int32)
+        start = jnp.asarray(base)
+        end = jnp.asarray(base)  # every segment empty
+        split = jnp.asarray(rng.integers(0, 2, (P,)).astype(np.int32))
+        t0v = jnp.full((P,), t0, jnp.int32)
+        t1v = jnp.full((P,), t1, jnp.int32)
+        sel, tot = prefix_select_gather(p0, p1, rows, start, end, split,
+                                        t0v, t1v)
+        assert (np.asarray(sel) == 0).all()
+        assert (np.asarray(tot) == 0).all()
+        # whole-range gathers that overrun into the padded tail equal
+        # the true totals of the unpadded tables
+        start = jnp.zeros((P, C), jnp.int32)
+        end = jnp.full((P, C), tb0, jnp.int32)  # beyond both true totals
+        sel, _ = prefix_select_gather(p0, p1, rows, start, end, split,
+                                      t0v, t1v)
+        pick = np.where(np.asarray(split)[None, :, None] == 1,
+                        np.asarray(p1)[:, np.asarray(rows), t1]
+                        - np.asarray(p1)[:, np.asarray(rows), 0],
+                        np.asarray(p0)[:, np.asarray(rows), t0]
+                        - np.asarray(p0)[:, np.asarray(rows), 0]
+                        ).transpose(1, 2, 0)
+        assert (np.asarray(sel) == pick).all()
+
+
+def test_prefix_select_two_workload_stack():
+    """A 2-workload stack with different true tile counts: rows offset
+    by wi*R reproduce each workload's solo gather bit-for-bit."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        rng = np.random.default_rng(9)
+        F, R, P, C = 5, 10, 24, 5
+        # workload a: 11/17 tiles, workload b: 45/29 -> shared buckets
+        ta0, ta1, tb_0, tb_1 = 11, 17, 45, 29
+        bk0, bk1 = 64, 64
+        a0, a1 = _select_tables(rng, F, R, ta0, ta1, bk0, bk1)
+        b0, b1 = _select_tables(rng, F, R, tb_0, tb_1, bk0, bk1)
+        s0 = jnp.concatenate([a0, b0], axis=1)  # [F, 2R, bk0+1]
+        s1 = jnp.concatenate([a1, b1], axis=1)
+        rows = jnp.asarray(rng.integers(0, R, (P, C)).astype(np.int32))
+        start = jnp.asarray(rng.integers(0, 50, (P, C)).astype(np.int32))
+        end = start + jnp.asarray(
+            rng.integers(0, 30, (P, C)).astype(np.int32))
+        split = jnp.asarray(rng.integers(0, 2, (P,)).astype(np.int32))
+        for wi, (w0, w1, tt0, tt1) in enumerate(
+                [(a0, a1, ta0, ta1), (b0, b1, tb_0, tb_1)]):
+            t0v = jnp.full((P,), tt0, jnp.int32)
+            t1v = jnp.full((P,), tt1, jnp.int32)
+            solo, _ = prefix_select_gather(w0, w1, rows, start, end,
+                                           split, t0v, t1v)
+            stacked, _ = prefix_select_gather(
+                s0, s1, rows + wi * R, start, end, split, t0v, t1v)
+            assert (np.asarray(solo) == np.asarray(stacked)).all()
+
+
+def test_prefix_select_vmap_flattens_cell_axis():
+    """The custom_vmap rule (scenario cells -> kernel grid) matches a
+    per-cell loop bit-for-bit, tables shared across the mapped axis."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        rng = np.random.default_rng(10)
+        F, R, P, C, B = 5, 8, 6, 4, 3
+        t0, t1 = 21, 13
+        p0, p1 = _select_tables(rng, F, R, t0, t1, 64, 64)
+        rows = jnp.asarray(rng.integers(0, R, (B, P, C)).astype(np.int32))
+        start = jnp.asarray(
+            rng.integers(0, 30, (B, P, C)).astype(np.int32))
+        end = start + jnp.asarray(
+            rng.integers(0, 10, (B, P, C)).astype(np.int32))
+        split = jnp.asarray(rng.integers(0, 2, (B, P)).astype(np.int32))
+        t0v = jnp.asarray(rng.integers(1, t0 + 1, (B, P)).astype(np.int32))
+        t1v = jnp.asarray(rng.integers(1, t1 + 1, (B, P)).astype(np.int32))
+        sel_v, tot_v = jax.vmap(
+            lambda r, s, e, sp, a, b: prefix_select_gather(
+                p0, p1, r, s, e, sp, a, b))(
+            rows, start, end, split, t0v, t1v)
+        assert sel_v.shape == (B, P, C, F)
+        for i in range(B):
+            sel_i, tot_i = prefix_select_gather(
+                p0, p1, rows[i], start[i], end[i], split[i], t0v[i],
+                t1v[i])
+            assert (np.asarray(sel_v[i]) == np.asarray(sel_i)).all()
+            assert (np.asarray(tot_v[i]) == np.asarray(tot_i)).all()

@@ -230,6 +230,50 @@ def test_worker_thread_and_budget():
         svc2.result("starved")
 
 
+def test_terminal_job_gc_evicts_oldest_past_retention_cap():
+    """Terminal-job GC: with ``retain_jobs=2``, finishing four jobs
+    keeps only the two newest-finished records; evicted ids raise
+    :class:`JobEvictedError` (a ``KeyError`` that says *why* the id is
+    gone) instead of a bare unknown-job KeyError, and resubmitting an
+    evicted id starts a fresh job."""
+    from repro.serving import JobEvictedError
+
+    svc = make_service(retain_jobs=2)
+    ids = [f"gc-{i}" for i in range(4)]
+    for jid in ids:
+        svc.submit(spec(jid, wl=0))
+    svc.drain()
+    evicted = [jid for jid in ids if jid not in svc._jobs]
+    kept = [jid for jid in ids if jid in svc._jobs]
+    assert len(evicted) == 2 and len(kept) == 2
+    # kept jobs stay fully readable
+    for jid in kept:
+        assert svc.status(jid) is JobState.DONE
+        assert svc.result(jid).job_id == jid
+    # evicted ids: status AND result raise the self-explaining subclass
+    for jid in evicted:
+        for access in (svc.status, svc.result):
+            with pytest.raises(JobEvictedError) as ei:
+                access(jid)
+            assert isinstance(ei.value, KeyError)
+            msg = str(ei.value)
+            assert "retain_jobs=2" in msg and jid in msg
+            assert "resubmit" in msg
+    # a never-seen id is still a plain unknown-job KeyError
+    with pytest.raises(KeyError) as ei:
+        svc.status("never-submitted")
+    assert not isinstance(ei.value, JobEvictedError)
+    # resubmitting an evicted id clears the tombstone and runs again
+    svc.submit(spec(evicted[0], wl=0))
+    svc.drain()
+    assert svc.status(evicted[0]) is JobState.DONE
+    assert svc.result(evicted[0]).history == run_solo(
+        spec(evicted[0], wl=0)).history
+    # the cap is validated up front
+    with pytest.raises(ValueError, match="retain_jobs"):
+        make_service(retain_jobs=0)
+
+
 # ---------------------------------------------------------------------------
 # Kill-and-resume of the whole service
 # ---------------------------------------------------------------------------
