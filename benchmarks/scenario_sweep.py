@@ -13,10 +13,17 @@ Claims asserted:
       catastrophic-regression floor via ``SCENARIO_SWEEP_MIN_SPEEDUP``);
   (c) per-cell frontier hypervolume under the fixed per-cell keys is no
       worse than the per-cell path's on average (shared per-cell
-      reference points; floor via ``SCENARIO_SWEEP_MIN_HV_RATIO``).
+      reference points; floor via ``SCENARIO_SWEEP_MIN_HV_RATIO``);
+  (d) the *lifecycle* grid — every region upgraded to a full
+      :class:`repro.core.regions.Region` with a distinct 24h diurnal
+      grid-intensity profile, electricity price and embodied factor —
+      runs on the same warm engine with exactly **zero** additional
+      fused compiles: the three new axes are runtime columns of the one
+      stacked program, not trace-time constants.
 
 The derived summary carries cells/sec for both arms, the compile count,
-the speedup and the mean hypervolume ratio.
+the speedup, the mean hypervolume ratio, and the lifecycle-grid compile
+count and timing.
 
 Standalone: ``python -m benchmarks.scenario_sweep [--json out.json]``.
 """
@@ -40,6 +47,7 @@ from repro.pathfinding import (
     fold_cell_key,
     hypervolume,
 )
+from repro.core.regions import Region, diurnal_profile
 from repro.pathfinding.device import trace_count
 from repro.pathfinding.pareto import REGION_INTENSITIES
 from benchmarks.common import row, timed
@@ -74,6 +82,22 @@ def _per_cell_baseline(wls, strat, cell_budget):
             results[(wl.name, region)] = res
             idx += 1
     return results
+
+
+def _lifecycle_regions() -> dict:
+    """The scalar-CI regions upgraded to full lifecycle cells: each
+    gets a distinct diurnal grid profile (evening peak, mean = the
+    scalar CI), a distinct electricity price and a distinct embodied
+    factor — five regions, no two sharing any axis value."""
+    return {
+        name: Region(
+            carbon_intensity=ci,
+            electricity_price=0.04 + 0.03 * i,
+            emb_factor=0.90 + 0.06 * i,
+            grid_profile=diurnal_profile(ci, swing=0.25 + 0.05 * i,
+                                         peak_hour=17 + i))
+        for i, (name, ci) in enumerate(REGION_INTENSITIES.items())
+    }
 
 
 def run(out=print) -> str:
@@ -121,11 +145,28 @@ def run(out=print) -> str:
             hv_a, hv_b = a.hypervolume(ref), b.hypervolume(ref)
             if hv_b > 0:
                 ratios.append(hv_a / hv_b)
+
+        # -- (d) lifecycle axes as data: zero extra compiles --------------
+        # same workloads + db -> same warm ScenarioEngine; the profile /
+        # price / embodied columns only change the runtime inputs of the
+        # already-compiled program
+        sweep_lc = ScenarioSweep(strategy=strat,
+                                 regions=_lifecycle_regions(),
+                                 norm_samples=NORM_SAMPLES)
+        before_lc = trace_count("scenario_pt")
+        t0 = time.perf_counter()
+        sf_lc = sweep_lc.run(wls, budget=budget, key=BASE_KEY)
+        t_lc = time.perf_counter() - t0
+        lc_compiles = trace_count("scenario_pt") - before_lc
+        evals_lc = sum(sf_lc.results[s.key].evaluations
+                       for s in sf_lc.scenarios)
         return (sf_cold, compiles, per_cell_compiles, t_cold, t_warm,
-                t_base, evals_new, evals_base, float(np.mean(ratios)))
+                t_base, evals_new, evals_base, float(np.mean(ratios)),
+                lc_compiles, t_lc, evals_lc)
 
     (sf, compiles, per_cell_compiles, t_cold, t_warm, t_base, evals_new,
-     evals_base, hv_ratio), us = timed(compute)
+     evals_base, hv_ratio, lc_compiles, t_lc, evals_lc), us = \
+        timed(compute)
     speedup = t_base / t_cold
     out("# Scenario sweep: stacked one-compile grid vs per-cell rebuilds "
         f"({len(wls)} workloads x {len(REGION_INTENSITIES)} regions)")
@@ -142,10 +183,15 @@ def run(out=print) -> str:
     out(f"speedup_cold,{speedup:.2f}")
     out(f"speedup_warm,{t_base / t_warm:.2f}")
     out(f"hv_ratio_mean,{hv_ratio:.4f}")
+    out(f"lifecycle_compiles,{lc_compiles}")
+    out(f"lifecycle_s,{t_lc:.3f}")
+    out(f"lifecycle_evals,{evals_lc}")
     derived = (f"compiles={compiles};speedup={speedup:.2f}x;"
                f"warm_speedup={t_base / t_warm:.2f}x;"
                f"cells_per_s={len(sf.scenarios) / t_warm:.2f};"
-               f"hv_ratio={hv_ratio:.3f};evals={evals_new}")
+               f"hv_ratio={hv_ratio:.3f};evals={evals_new};"
+               f"lifecycle_compiles={lc_compiles};"
+               f"lifecycle_s={t_lc:.2f}")
     assert compiles == 1, (
         f"stacked sweep compiled the fused scenario program {compiles}x "
         "(expected exactly 1)")
@@ -161,6 +207,12 @@ def run(out=print) -> str:
     assert hv_ratio >= MIN_HV_RATIO, (
         f"mean per-cell hypervolume ratio {hv_ratio:.3f} < "
         f"{MIN_HV_RATIO} vs the per-cell path")
+    assert lc_compiles == 0, (
+        f"the lifecycle (profile/price/embodied) grid retraced the "
+        f"fused scenario program {lc_compiles}x on the warm engine "
+        "(expected 0 — the axes are runtime columns)")
+    assert evals_lc == budget, (
+        f"lifecycle-grid budget accounting broke: {evals_lc} != {budget}")
     return row("scenario_sweep", us, derived)
 
 

@@ -148,8 +148,14 @@ def evaluate(
     energy = e_compute_j + e_d2d_j + e_static_j
 
     # -- area, cost, carbon ---------------------------------------------------
+    # Regional axes (all default-neutral, see repro.core.carbon): the
+    # lifetime electricity bill joins the dollar metric (price 0.0 ->
+    # +0.0), the regional fab-grid factor scales embodied carbon
+    # (factor 1.0 -> x1.0), and operational CFP dots the 24h grid
+    # profile with the load profile (flat -> scalar, bit-identical).
     area = package_area_mm2(sys, topo, db)
     cost = cost_mod.system_cost(sys, area, db)
+    dollar = cost.total + carbon_mod.operational_cost_usd(energy, db)
     emb = carbon_mod.embodied_cfp(sys, area, db)
     ope = carbon_mod.operational_cfp(energy, latency, db, per_unit=True)
 
@@ -157,8 +163,8 @@ def evaluate(
         latency_s=latency,
         energy_j=energy,
         area_mm2=area,
-        dollar=cost.total,
-        emb_cfp_kg=emb.total,
+        dollar=dollar,
+        emb_cfp_kg=emb.total * db.emb_factor,
         ope_cfp_kg=ope,
         l_compute_rd_s=l_cr,
         l_d2d_s=d2d.latency_s,

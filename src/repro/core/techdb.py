@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Mapping, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Enumerations of the design space (Table II / Table III)
@@ -228,6 +228,23 @@ DUTY_RUNS_PER_S = 5000.0
 # lowers operational CFP (Sec VI-C3).
 STATIC_POWER_FRACTION = 0.15
 
+# --- lifecycle / regional axes (ECO-CHIP [3], Carbon Connect) -------------
+# All defaults are *neutral*: with them, every model below reproduces the
+# pre-lifecycle numbers bit-for-bit (0.0 addends, 1.0 multipliers, flat
+# profiles), so goldens pinned before this axis existed stay valid.
+HOURS_PER_DAY = 24
+# Uniform diurnal duty weighting: the deployed system draws its lifetime
+# energy evenly across the day unless a workload says otherwise. Entries
+# sum to 1; pairs with a per-region 24h grid-intensity profile to turn
+# operational CFP into a profile dot product (Carbon Connect).
+FLAT_LOAD_PROFILE: Tuple[float, ...] = (1.0 / HOURS_PER_DAY,) * HOURS_PER_DAY
+ELECTRICITY_PRICE_USD_PER_KWH = 0.0   # regional $/kWh; 0 = cost-model-only $
+EMBODIED_REGION_FACTOR = 1.0          # regional fab-grid embodied multiplier
+RCY_MAT_FRAC = 0.0                    # recycled raw-material fraction [0,1]
+RCY_CPA_FRAC = 0.0                    # recycled share of CPA energy [0,1]
+WASTED_DIE_SCALE = 0.0                # gate on per-wafer scrap carbon term
+ROUTER_AREA_FRAC = 0.0                # on-die router share of chiplet area
+
 # Interposer: fabricated at 65nm [3],[45]
 INTERPOSER_NODE_CPA = 0.0125          # kgCO2e/mm^2 at 65nm
 INTERPOSER_DEFECT_MM2 = 0.0004
@@ -252,7 +269,14 @@ CHIPLETGYM_BOND_YIELD = 0.99
 
 @dataclasses.dataclass
 class TechDB:
-    """Bundles every knob; ``overrides`` patches any attribute by name."""
+    """Bundles every knob; ``overrides`` patches any attribute by name.
+
+    ``TechDB(overrides={"carbon_intensity": 0.1})`` is equivalent to
+    passing the field directly but composes with call sites that only
+    forward a dict; unknown names raise instead of silently creating
+    dead attributes. Recycling fractions are clamped to ``[0, 1]``
+    after patching (a credit can neither be negative nor exceed the
+    whole material/energy bill)."""
 
     tech_nodes: Tuple[int, ...] = TECH_NODES
     array_sizes: Tuple[int, ...] = ARRAY_SIZES
@@ -299,8 +323,41 @@ class TechDB:
     substrate_cost_mm2: float = PKG_SUBSTRATE_COST_PER_MM2
     substrate_cfp_mm2: float = PKG_SUBSTRATE_CFP_PER_MM2
     assembly_cost: float = ASSEMBLY_COST_PER_CHIPLET
+    # lifecycle / regional axes — neutral defaults (see module comment)
+    electricity_price: float = ELECTRICITY_PRICE_USD_PER_KWH
+    emb_factor: float = EMBODIED_REGION_FACTOR
+    grid_profile: Optional[Tuple[float, ...]] = None
+    load_profile: Tuple[float, ...] = FLAT_LOAD_PROFILE
+    rcy_mat_frac: float = RCY_MAT_FRAC
+    rcy_cpa_frac: float = RCY_CPA_FRAC
+    wasted_die_scale: float = WASTED_DIE_SCALE
+    router_area_frac: float = ROUTER_AREA_FRAC
+    overrides: Optional[Dict[str, Any]] = None
 
     def __post_init__(self) -> None:
+        if self.overrides:
+            field_names = {f.name for f in dataclasses.fields(self)}
+            for name, value in self.overrides.items():
+                if name == "overrides" or name not in field_names:
+                    raise ValueError(f"TechDB has no knob named {name!r}")
+                setattr(self, name, value)
+        # consumed at construction: a later dataclasses.replace(db, x=...)
+        # must not have a stale overrides dict silently undo the change
+        self.overrides = None
+        # recycling credits are fractions of the bill: clamp to [0, 1]
+        self.rcy_mat_frac = min(1.0, max(0.0, float(self.rcy_mat_frac)))
+        self.rcy_cpa_frac = min(1.0, max(0.0, float(self.rcy_cpa_frac)))
+        if self.grid_profile is not None:
+            self.grid_profile = tuple(float(x) for x in self.grid_profile)
+            if len(self.grid_profile) != HOURS_PER_DAY:
+                raise ValueError(
+                    f"grid_profile needs {HOURS_PER_DAY} hourly entries, "
+                    f"got {len(self.grid_profile)}")
+        self.load_profile = tuple(float(x) for x in self.load_profile)
+        if len(self.load_profile) != HOURS_PER_DAY:
+            raise ValueError(
+                f"load_profile needs {HOURS_PER_DAY} hourly entries, "
+                f"got {len(self.load_profile)}")
         for size in self.array_sizes:
             if size not in self.sram_sizes_kb:
                 raise ValueError(f"no SRAM options for array size {size}")
@@ -316,13 +373,33 @@ class TechDB:
     def mac_energy_pj(self, node: int) -> float:
         return self.mac_energy_pj_7nm * self.node_power_scale[node]
 
-    def dies_per_wafer(self, die_area_mm2: float) -> int:
-        """DPW with edge-loss correction (standard formula, [3])."""
+    def wafer_area_mm2(self) -> float:
         r = self.wafer_diameter_mm / 2.0
-        side = math.sqrt(die_area_mm2)
+        return math.pi * r * r
+
+    def dies_per_wafer(self, die_area_mm2: float) -> int:
+        """DPW with edge-loss correction (standard formula, [3]).
+
+        The edge-loss term drives the estimate to zero (and below) as
+        the die approaches the wafer — past ``pi r^2 / A =
+        pi d / sqrt(2 A)`` (A = r^2/2, i.e. 11250 mm^2 on a 300 mm
+        wafer) the formula is meaningless, and silently clamping it to
+        "1 die per wafer" would feed garbage into every per-die
+        amortization (interposer cost, wasted-die carbon). Such areas
+        raise instead; a *positive* fractional estimate below one die
+        still clamps to 1 (the die fits, so a wafer yields at least
+        one)."""
+        if die_area_mm2 <= 0:
+            raise ValueError(f"die area must be positive, got {die_area_mm2}")
+        r = self.wafer_diameter_mm / 2.0
         dpw = (math.pi * r * r / die_area_mm2
                - math.pi * self.wafer_diameter_mm / math.sqrt(2.0 * die_area_mm2))
-        return max(1, int(dpw)) if side > 0 else 1
+        if dpw <= 0.0:
+            raise ValueError(
+                f"die of {die_area_mm2} mm^2 does not fit a "
+                f"{self.wafer_diameter_mm} mm wafer (edge-corrected DPW "
+                f"{dpw:.3f} <= 0)")
+        return max(1, int(dpw))
 
     def die_yield(self, die_area_mm2: float, node: int) -> float:
         """Negative binomial yield: (1 + A*D0/alpha)^-alpha [47-49]."""

@@ -34,7 +34,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.carbon import SECONDS_PER_YEAR
+from repro.core.carbon import SECONDS_PER_YEAR, effective_intensity
+from repro.core.regions import RegionLike, as_region
 from repro.core.chiplet import Chiplet
 from repro.core.d2d import HOP_LATENCY_S
 from repro.core.evaluate import Metrics
@@ -797,10 +798,17 @@ class BatchEvaluator:
                               _interposer_cost_jnp(area, db), 0.0)
             package = db.substrate_cost_mm2 * area + f8(topo["assembly"])
             bond_y = f8(topo["bond_y"])
+            active_s = db.lifetime_years * SECONDS_PER_YEAR * db.use_fraction
+            runs = db.duty_runs_per_s * active_s
+            # regional axes (default-neutral): lifetime electricity bill
+            # on the dollar metric, fab-grid factor on embodied, 24h
+            # profile-weighted effective intensity on operational
             dollar = ((chip_cost + icost + package) / bond_y
-                      + jnp.take(f8(self.m_cost), mem_idx))
+                      + jnp.take(f8(self.m_cost), mem_idx)
+                      + energy * runs / 3.6e6 * db.electricity_price)
 
-            # embodied + operational CFP (Eqs. 2-3)
+            # embodied + operational CFP (Eqs. 2-3); t_mfg already
+            # carries the wasted-die + recycling terms (ECO-CHIP)
             mfg = jnp.sum(
                 jnp.where(mask, f8(self.t_mfg[a_idx, t_idx, s_idx]), 0.0),
                 axis=1)
@@ -815,10 +823,11 @@ class BatchEvaluator:
                              + f8(topo["p3_bonded"])) / bond_y
             pkg_cfp = jnp.where(jnp.asarray(topo["is2d"]),
                                 db.substrate_cfp_mm2 * area, pkg_cfp_multi)
-            emb = mfg + des + pkg_cfp
-            active_s = db.lifetime_years * SECONDS_PER_YEAR * db.use_fraction
-            runs = db.duty_runs_per_s * active_s
-            ope = energy * runs / 3.6e6 * db.carbon_intensity
+            pkg_cfp = pkg_cfp + db.router_area_frac * mfg
+            emb = (mfg + des + pkg_cfp) * db.emb_factor
+            eff_ci = effective_intensity(db.carbon_intensity,
+                                         db.grid_profile, db.load_profile)
+            ope = energy * runs / 3.6e6 * eff_ci
 
             out = [latency, energy, area, dollar, emb, ope, l_cr, l_d2d,
                    l_wr, e_compute_j, e_d2d_j, jnp.sum(loads, axis=1),
@@ -913,32 +922,47 @@ def fit_normalizer_batched(wl: GEMMWorkload, db: TechDB = DEFAULT_DB,
     return Normalizer.fit_arrays(mb.fields())
 
 
-def fit_region_normalizers(wl: GEMMWorkload, intensities,
+def fit_region_normalizers(wl: GEMMWorkload, regions,
                            db: TechDB = DEFAULT_DB,
                            samples: int = 400, seed: int = 1234,
                            space: Optional[DesignSpace] = None,
                            max_chiplets: int = 6) -> List[Normalizer]:
-    """One normalizer per grid carbon intensity from a *single* batched
-    evaluation.
+    """One normalizer per region spec from a *single* batched evaluation.
 
-    Of the six Eq. 17 metrics only operational CFP depends on the
-    deployment region, and it does so as a pure scalar multiple:
-    ``ope = energy * runs / 3.6e6 * carbon_intensity``. So a region
-    sweep's per-cell normalizer fits — previously one full
+    ``regions`` entries are bare carbon intensities (floats, the
+    historical axis) or :class:`repro.core.regions.Region` specs. Of
+    the six Eq. 17 metrics only three depend on the deployment region,
+    each as a closed-form rescale of the base evaluation:
+
+    * ``ope_cfp_kg``  = kwh x effective intensity (24h profile-weighted);
+    * ``dollar``      = base dollar + kwh x electricity price;
+    * ``emb_cfp_kg``  = base embodied x regional fab-grid factor.
+
+    So a region sweep's per-cell normalizer fits — previously one full
     ``evaluate_batch`` per (workload, region) cell — collapse to one
-    evaluation of the sample population at the base ``db`` plus an exact
-    per-region recompute of the ``ope`` column (identical operations in
-    identical order, so each returned normalizer is bit-identical to a
-    full per-region fit)."""
+    evaluation of the sample population at the base ``db`` plus exact
+    per-region column recomputes (identical operations in identical
+    order, so each returned normalizer is bit-identical to a full fit
+    under ``dataclasses.replace(db, **region.db_overrides())``; this
+    presumes the base ``db`` carries the neutral regional axes, which
+    is the default)."""
     space = space or DesignSpace(db, max_chiplets)
     mb = evaluate_batch(space.sample(samples, key=seed), wl, db, space=space)
     fields = mb.fields()
     active_s = db.lifetime_years * SECONDS_PER_YEAR * db.use_fraction
     runs = db.duty_runs_per_s * active_s
     energy = np.asarray(fields["energy_j"], dtype=np.float64)
+    dollar = np.asarray(fields["dollar"], dtype=np.float64)
+    emb = np.asarray(fields["emb_cfp_kg"], dtype=np.float64)
     out = []
-    for ci in intensities:
+    for spec in regions:
+        r = as_region(spec)
+        eff = effective_intensity(r.carbon_intensity, r.grid_profile,
+                                  db.load_profile)
         per_region = dict(fields)
-        per_region["ope_cfp_kg"] = energy * runs / 3.6e6 * np.float64(ci)
+        per_region["ope_cfp_kg"] = energy * runs / 3.6e6 * np.float64(eff)
+        per_region["dollar"] = (
+            dollar + energy * runs / 3.6e6 * np.float64(r.electricity_price))
+        per_region["emb_cfp_kg"] = emb * np.float64(r.emb_factor)
         out.append(Normalizer.fit_arrays(per_region))
     return out

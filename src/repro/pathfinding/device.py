@@ -73,7 +73,7 @@ import numpy as np
 from repro.core.carbon import SECONDS_PER_YEAR
 from repro.core.d2d import HOP_LATENCY_S
 from repro.core.scalesim import OPERAND_BYTES
-from repro.core.techdb import DEFAULT_DB, TechDB
+from repro.core.techdb import DEFAULT_DB, HOURS_PER_DAY, TechDB
 from repro.core.templates import Normalizer, Template
 from repro.core.workload import DEFAULT_TILE, GEMMWorkload
 from repro.pathfinding.batch import (
@@ -132,6 +132,8 @@ class _Cfg:
     lifetime_years: float
     use_fraction: float
     duty_runs_per_s: float
+    router_area_frac: float           # NoC share of die mfg carbon -> C_HI
+    load_profile: Tuple[float, ...]   # 24h diurnal duty weights (sum 1)
     use_pallas: bool
 
 
@@ -526,7 +528,7 @@ def _gather_sims(v, a_idx, s_idx, di, start, end, tb, cfg: _Cfg, rt=None):
     return sims, mn_bits
 
 
-def _metrics_jax(v, tb, cfg: _Cfg, ci, rt=None):
+def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, rt=None):
     """The 13 MetricsBatch arrays for an encoded population, fully jitted.
 
     Mirrors ``BatchEvaluator.__call__`` stage by stage (same operation
@@ -534,7 +536,13 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, rt=None):
 
     ``ci`` is the grid carbon intensity as a *runtime* scalar (or
     per-row vector): region sweeps ride through the compiled program as
-    data instead of forcing a retrace per region. ``rt`` optionally
+    data instead of forcing a retrace per region. ``price`` ($/kWh),
+    ``embf`` (regional embodied multiplier) and ``profile`` (24h grid
+    intensity row) are the remaining regional axes, runtime data too;
+    their neutral values (0.0, 1.0, flat-at-ci) reproduce the scalar
+    model bit-for-bit — operational CFP uses
+    ``ci + sum((profile - ci) * load)``, whose correction term is
+    exactly +0.0 for a flat profile. ``rt`` optionally
     overrides the per-workload compile-time constants (``T0``/``T1``
     tile totals, ``wr_bits``) with traced values — the stacked scenario
     engine's workload axis; ``cfg.T0``/``cfg.T1`` then only bound the
@@ -620,7 +628,10 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, rt=None):
     icost = jnp.where(topo["interp"], _interposer_cost(area, cfg), 0.0)
     package = cfg.substrate_cost_mm2 * area + topo["assembly"]
     bond_y = topo["bond_y"]
-    dollar = ((chip_cost + icost + package) / bond_y + mrow[:, 2])
+    active_s = cfg.lifetime_years * SECONDS_PER_YEAR * cfg.use_fraction
+    runs = cfg.duty_runs_per_s * active_s
+    dollar = ((chip_cost + icost + package) / bond_y + mrow[:, 2]
+              + energy * runs / 3.6e6 * price)
 
     # embodied + operational CFP (Eqs. 2-3)
     mfg = jnp.sum(jnp.where(mask, cphys[:, :, 3], 0.0), axis=1)
@@ -634,10 +645,11 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, rt=None):
                      + topo["p3_bonded"]) / bond_y
     pkg_cfp = jnp.where(topo["is2d"], cfg.substrate_cfp_mm2 * area,
                         pkg_cfp_multi)
-    emb = mfg + des + pkg_cfp
-    active_s = cfg.lifetime_years * SECONDS_PER_YEAR * cfg.use_fraction
-    runs = cfg.duty_runs_per_s * active_s
-    ope = energy * runs / 3.6e6 * ci
+    pkg_cfp = pkg_cfp + cfg.router_area_frac * mfg
+    emb = (mfg + des + pkg_cfp) * embf
+    load = jnp.asarray(cfg.load_profile, dtype=jnp.float64)
+    eff_ci = ci + jnp.sum((profile - ci) * load, axis=-1)
+    ope = energy * runs / 3.6e6 * eff_ci
 
     return (latency, energy, area, dollar, emb, ope, l_cr, l_d2d, l_wr,
             e_compute_j, e_d2d_j, jnp.sum(loads, axis=1),
@@ -660,17 +672,19 @@ def _nb_yield(area, d0: float, alpha: float):
     return (1.0 + area * d0 / alpha) ** (-alpha)
 
 
-def _eval_cost_jax(v, mins, medians, w, ci, tb, cfg: _Cfg, rt=None):
+def _eval_cost_jax(v, mins, medians, w, ci, price, embf, profile, tb,
+                   cfg: _Cfg, rt=None):
     """Fused metrics + Eq. 17 cost (METRIC_FIELDS column order) + the
     ``OBJECTIVE_AXES`` vector ``(latency_s, dollar, total_cfp)``.
 
     ``w`` is either a single ``[6]`` weight row or a per-row ``[P, 6]``
     matrix (the scalarization-sweep case: every chain scalarizes with
-    its own direction inside the same program). ``ci``/``rt`` are the
-    runtime region/workload knobs of :func:`_metrics_jax`."""
+    its own direction inside the same program). ``ci``/``price``/
+    ``embf``/``profile``/``rt`` are the runtime region/workload knobs
+    of :func:`_metrics_jax`."""
     import jax.numpy as jnp
 
-    mets = _metrics_jax(v, tb, cfg, ci, rt)
+    mets = _metrics_jax(v, tb, cfg, ci, price, embf, profile, rt)
     x = jnp.stack([mets[1], mets[2], mets[0], mets[3], mets[4], mets[5]],
                   axis=1)
     cost = ((x - mins[None, :]) / medians[None, :]
@@ -993,6 +1007,8 @@ def _base_cfg(sp: DesignSpace, db: TechDB, T0: int, T1: int,
         lifetime_years=db.lifetime_years,
         use_fraction=db.use_fraction,
         duty_runs_per_s=db.duty_runs_per_s,
+        router_area_frac=db.router_area_frac,
+        load_profile=tuple(db.load_profile),
         use_pallas=use_pallas,
     )
 
@@ -1139,6 +1155,23 @@ def _resolve_pallas(use_pallas: Optional[bool]) -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _db_region_cols(db: TechDB) -> Tuple[np.float64, np.float64,
+                                         np.ndarray]:
+    """The (price, embf, profile) runtime region columns a single-region
+    evaluator synthesizes from its TechDB. A ``None`` grid profile
+    becomes the flat row at ``carbon_intensity`` — the in-program
+    correction ``sum((profile - ci) * load)`` is then exactly +0.0, so
+    the default columns are bit-neutral."""
+    price = np.float64(db.electricity_price)
+    embf = np.float64(db.emb_factor)
+    if db.grid_profile is None:
+        profile = np.full(len(db.load_profile),
+                          np.float64(db.carbon_intensity))
+    else:
+        profile = np.asarray(db.grid_profile, dtype=np.float64)
+    return price, embf, profile
+
+
 class DeviceEvaluator:
     """Jit-compiled fused evaluate+cost + scan engine for one workload.
 
@@ -1174,9 +1207,10 @@ class DeviceEvaluator:
         # cannot reuse host-backed int buffers and would warn)
         donate = () if jax.default_backend() == "cpu" else (0,)
 
-        def _eval_fn(v, mins, med, w, ci):
+        def _eval_fn(v, mins, med, w, ci, price, embf, profile):
             _count_trace("eval_cost")
-            return _eval_cost_jax(v, mins, med, w, ci, tb, cfg)
+            return _eval_cost_jax(v, mins, med, w, ci, price, embf,
+                                  profile, tb, cfg)
 
         self._eval_cost_jit = jax.jit(_eval_fn, donate_argnums=donate)
         self._propose_jit = jax.jit(
@@ -1221,10 +1255,12 @@ class DeviceEvaluator:
         with enable_x64():
             v, n_real = self._pad(encoded)
             mins, medians = norm.weights_arrays()
+            price, embf, profile = _db_region_cols(self.db)
             mets, cost, vec = self._eval_cost_jit(
                 jnp.asarray(v), jnp.asarray(mins), jnp.asarray(medians),
                 jnp.asarray(np.asarray(template.weights, dtype=np.float64)),
-                jnp.asarray(np.float64(self.db.carbon_intensity)))
+                jnp.asarray(np.float64(self.db.carbon_intensity)),
+                jnp.asarray(price), jnp.asarray(embf), jnp.asarray(profile))
             arrs = [np.asarray(m)[:n_real] for m in mets]
             return (MetricsBatch(*arrs), np.asarray(cost)[:n_real],
                     np.asarray(vec)[:n_real])
@@ -1270,9 +1306,10 @@ class DeviceEvaluator:
 
         tb, cfg = self.tables, self.cfg
 
-        def init(v0, mins, med, w, ci):
+        def init(v0, mins, med, w, ci, price, embf, profile):
             _count_trace("pt_init")
-            _, cost0, vec0 = _eval_cost_jax(v0, mins, med, w, ci, tb, cfg)
+            _, cost0, vec0 = _eval_cost_jax(v0, mins, med, w, ci, price,
+                                            embf, profile, tb, cfg)
             return cost0, vec0
 
         fn = jax.jit(init)
@@ -1291,7 +1328,7 @@ class DeviceEvaluator:
         tb, cfg = self.tables, self.cfg
 
         def run(v0, costs0, best_v0, best_c0, key, sweep0, temps, mins,
-                med, w, pair_ok, ci):
+                med, w, pair_ok, ci, price, embf, profile):
             _count_trace("pt")
             inv_t = 1.0 / temps
 
@@ -1300,6 +1337,7 @@ class DeviceEvaluator:
                 key, kp, ka, ksw = jax.random.split(key, 4)
                 prop = _propose_jax(kp, v, tb, cfg)
                 _, pcost, pvec = _eval_cost_jax(prop, mins, med, w, ci,
+                                                price, embf, profile,
                                                 tb, cfg)
                 u = jax.random.uniform(ka, (n,), dtype=jnp.float64)
                 delta = pcost - costs
@@ -1411,10 +1449,13 @@ class DeviceEvaluator:
                         f"got {pair_ok.shape}")
             temps_np = np.asarray(temps, np.float64)
             ci = np.float64(self.db.carbon_intensity)
+            price, embf, profile = _db_region_cols(self.db)
             key0 = jax.random.PRNGKey(seed)
             args = (jnp.asarray(temps_np), jnp.asarray(mins),
                     jnp.asarray(medians), jnp.asarray(w),
-                    jnp.asarray(pair_ok), jnp.asarray(ci))
+                    jnp.asarray(pair_ok), jnp.asarray(ci),
+                    jnp.asarray(price), jnp.asarray(embf),
+                    jnp.asarray(profile))
 
             from repro.pathfinding.resume import (
                 run_segmented,
@@ -1428,7 +1469,8 @@ class DeviceEvaluator:
                     "device_pt", v0=v0, temps=temps_np,
                     swap_every=swap_every, seed=seed, mins=mins,
                     medians=medians, weights=w, pair_mask=pair_ok, ci=ci,
-                    segment=segment, collect=collect_samples)
+                    segment=segment, collect=collect_samples,
+                    price=price, embf=embf, profile=profile)
                 carry_like = dict(
                     v=np.zeros((n, width), np.int32),
                     costs=np.zeros(n, np.float64),
@@ -1442,7 +1484,8 @@ class DeviceEvaluator:
 
             def fresh():
                 cost0, vec0 = self._pt_init_fn(n)(
-                    jnp.asarray(v0), args[1], args[2], args[3], args[5])
+                    jnp.asarray(v0), args[1], args[2], args[3], args[5],
+                    args[6], args[7], args[8])
                 cost0_np = np.asarray(cost0)
                 st["cost0_np"] = cost0_np
                 bi = int(np.argmin(cost0_np))
@@ -1695,30 +1738,60 @@ class ScenarioEngine:
 
         cfg = self.cfg
 
-        def run(v, mins, med, w, ci, widx):
+        def run(v, mins, med, w, ci, price, embf, profile, widx):
             _count_trace("scenario_eval")
 
-            def cell(v_s, mins_s, med_s, w_s, ci_s, wi):
+            def cell(v_s, mins_s, med_s, w_s, ci_s, price_s, embf_s,
+                     profile_s, wi):
                 tbc, rt = self._cell_tables(wi)
                 _, cost, vec = _eval_cost_jax(v_s, mins_s, med_s, w_s,
-                                              ci_s, tbc, cfg, rt)
+                                              ci_s, price_s, embf_s,
+                                              profile_s, tbc, cfg, rt)
                 return cost, vec
 
-            return jax.vmap(cell)(v, mins, med, w, ci, widx)
+            return jax.vmap(cell)(v, mins, med, w, ci, price, embf,
+                                  profile, widx)
 
         fn = jax.jit(run)
         self._fn_cache[key_t] = fn
         return fn
 
+    @staticmethod
+    def _region_cols(S: int, ci: np.ndarray, price=None, embf=None,
+                     profile=None) -> Tuple[np.ndarray, np.ndarray,
+                                            np.ndarray]:
+        """Normalize/synthesize the per-cell region columns: ``price``
+        [S] (default zeros), ``embf`` [S] (default ones), ``profile``
+        [S, 24] (default flat-at-ci rows, whose in-program correction
+        is exactly +0.0). Always materialized so the jitted programs
+        have ONE signature — legacy scalar-CI callers and full
+        five-axis callers share the same compile."""
+        ci = np.asarray(ci, np.float64).reshape(S)
+        price = (np.zeros(S, np.float64) if price is None
+                 else np.asarray(price, np.float64).reshape(S))
+        embf = (np.ones(S, np.float64) if embf is None
+                else np.asarray(embf, np.float64).reshape(S))
+        profile = (np.repeat(ci[:, None], HOURS_PER_DAY, axis=1)
+                   if profile is None
+                   else np.asarray(profile, np.float64).reshape(
+                       S, HOURS_PER_DAY))
+        return price, embf, profile
+
     def evaluate_cost(self, encoded: np.ndarray, mins: np.ndarray,
                       medians: np.ndarray, weights: np.ndarray,
-                      ci: np.ndarray, widx: np.ndarray
+                      ci: np.ndarray, widx: np.ndarray,
+                      price: Optional[np.ndarray] = None,
+                      embf: Optional[np.ndarray] = None,
+                      profile: Optional[np.ndarray] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
         """Fused cost + objective vectors for a stacked ``[S, m, width]``
         population (per-cell ``[S, 6]`` normalizer rows / weight rows,
-        ``[S]`` carbon intensities and workload ids). Returns
-        ``(cost [S, m], vec [S, m, 3])``; the row axis is padded to a
-        power-of-two bucket so repeated calls share one program."""
+        ``[S]`` carbon intensities and workload ids, plus the optional
+        regional axes ``price`` [S], ``embf`` [S] and ``profile``
+        [S, 24] — omitted axes synthesize their neutral columns).
+        Returns ``(cost [S, m], vec [S, m, 3])``; the row axis is
+        padded to a power-of-two bucket so repeated calls share one
+        program."""
         import jax.numpy as jnp
         from jax.experimental import enable_x64
 
@@ -1729,13 +1802,17 @@ class ScenarioEngine:
             if mb != m:
                 v = np.concatenate(
                     [v, np.repeat(v[:, :1], mb - m, axis=1)], axis=1)
+            ci_a = np.asarray(ci, np.float64).reshape(S)
+            price_a, embf_a, profile_a = self._region_cols(
+                S, ci_a, price, embf, profile)
             fn = self._eval_fn(S, mb)
             cost, vec = fn(
                 jnp.asarray(v),
                 jnp.asarray(np.asarray(mins, np.float64).reshape(S, 6)),
                 jnp.asarray(np.asarray(medians, np.float64).reshape(S, 6)),
                 jnp.asarray(np.asarray(weights, np.float64).reshape(S, 6)),
-                jnp.asarray(np.asarray(ci, np.float64).reshape(S)),
+                jnp.asarray(ci_a), jnp.asarray(price_a),
+                jnp.asarray(embf_a), jnp.asarray(profile_a),
                 jnp.asarray(np.asarray(widx, np.int32).reshape(S)))
             return np.asarray(cost)[:, :m], np.asarray(vec)[:, :m]
 
@@ -1752,9 +1829,11 @@ class ScenarioEngine:
     def _eval_cell_fn(self):
         cfg = self.cfg
 
-        def eval_cell(v_s, mins_s, med_s, w_s, ci_s, wi):
+        def eval_cell(v_s, mins_s, med_s, w_s, ci_s, price_s, embf_s,
+                      profile_s, wi):
             tbc, rt = self._cell_tables(wi)
             _, cost, vec = _eval_cost_jax(v_s, mins_s, med_s, w_s, ci_s,
+                                          price_s, embf_s, profile_s,
                                           tbc, cfg, rt)
             return cost, vec
 
@@ -1770,11 +1849,12 @@ class ScenarioEngine:
 
         eval_cell = self._eval_cell_fn()
 
-        def init(v0, mins, med, w, ci, widx, key):
+        def init(v0, mins, med, w, ci, price, embf, profile, widx, key):
             _count_trace("scenario_init")
             keys0 = jax.vmap(
                 lambda i: jax.random.fold_in(key, i))(jnp.arange(S))
-            cost0, vec0 = jax.vmap(eval_cell)(v0, mins, med, w, ci, widx)
+            cost0, vec0 = jax.vmap(eval_cell)(v0, mins, med, w, ci,
+                                              price, embf, profile, widx)
             return keys0, cost0, vec0
 
         fn = jax.jit(init)
@@ -1794,10 +1874,12 @@ class ScenarioEngine:
         eval_cell = self._eval_cell_fn()
 
         def cell_step(key_s, v_s, costs_s, temps_s, inv_s, mins_s, med_s,
-                      w_s, pair_s, ci_s, wi, sweep):
+                      w_s, pair_s, ci_s, price_s, embf_s, profile_s, wi,
+                      sweep):
             key_s, kp, ka, ksw = jax.random.split(key_s, 4)
             prop = _propose_jax(kp, v_s, tb, cfg)
-            pcost, pvec = eval_cell(prop, mins_s, med_s, w_s, ci_s, wi)
+            pcost, pvec = eval_cell(prop, mins_s, med_s, w_s, ci_s,
+                                    price_s, embf_s, profile_s, wi)
             u = jax.random.uniform(ka, (n,), dtype=jnp.float64)
             delta = pcost - costs_s
             accept = (delta <= 0) | (
@@ -1818,7 +1900,7 @@ class ScenarioEngine:
             return key_s, v_s, costs_s, cand_v, cand_c, prop, pvec
 
         def run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps, mins,
-                med, w, pair_ok, ci, widx):
+                med, w, pair_ok, ci, price, embf, profile, widx):
             # ``sweep0`` is a per-cell [S] vector of job-local sweep
             # counters: every cell keeps its own swap schedule, so a
             # serving job that joins the batch mid-stream sees the same
@@ -1832,9 +1914,9 @@ class ScenarioEngine:
                 v, costs, best_v, best_c, keys = carry
                 keys, v, costs, cand_v, cand_c, prop, pvec = jax.vmap(
                     cell_step,
-                    in_axes=(0,) * 12,
+                    in_axes=(0,) * 15,
                 )(keys, v, costs, temps, inv_t, mins, med, w, pair_ok,
-                  ci, widx, sweep0 + t)
+                  ci, price, embf, profile, widx, sweep0 + t)
                 better = cand_c < best_c
                 best_c = jnp.where(better, cand_c, best_c)
                 best_v = jnp.where(better[:, None], cand_v, best_v)
@@ -1860,7 +1942,11 @@ class ScenarioEngine:
         time from its own scheduler, so it needs the compiled program
         without the host loop in :meth:`parallel_tempering`. The
         returned callable has signature ``run(v, costs, best_v, best_c,
-        keys, sweep0, temps, mins, med, w, pair_ok, ci, widx)`` where
+        keys, sweep0, temps, mins, med, w, pair_ok, ci, price, embf,
+        profile, widx)`` — ``price``/``embf`` are the per-cell [S]
+        regional price and embodied-factor columns and ``profile`` the
+        [S, 24] grid-intensity rows (neutral cells pass 0.0 / 1.0 /
+        flat-at-ci) — where
         ``sweep0`` is the per-cell [S] vector of job-local sweep
         counters; calling it twice with the same static shape tuple
         reuses the cached jit program (``trace_count("scenario_pt")``
@@ -1871,6 +1957,7 @@ class ScenarioEngine:
     def parallel_tempering(self, v0: np.ndarray, temps, sweeps: int,
                            swap_every: int, seed: int, mins, medians,
                            weights, pair_mask, ci, widx,
+                           price=None, embf=None, profile=None,
                            collect_samples: bool = True,
                            mesh=None, segment: Optional[int] = None,
                            checkpoint=None, resume: bool = True,
@@ -1883,7 +1970,14 @@ class ScenarioEngine:
         rows / exchange gates, ``mins``/``medians`` the per-cell
         normalizer rows, ``ci`` the per-cell grid carbon intensities and
         ``widx`` the per-cell workload indices into this engine's
-        workload tuple. ``mesh`` (optional) shards the scenario axis.
+        workload tuple. ``price``/``embf``/``profile`` are the optional
+        per-cell regional axes ([S] electricity prices, [S] embodied
+        factors, [S, 24] grid-intensity profiles); omitted axes
+        synthesize their neutral columns (0.0 / 1.0 / flat-at-ci), so
+        legacy scalar-CI grids compile and run the exact same program —
+        the columns are always part of the jitted signature and
+        ``trace_count("scenario_pt")`` stays flat across axis mixes.
+        ``mesh`` (optional) shards the scenario axis.
 
         ``segment``/``checkpoint``/``resume``/``archives`` mirror
         :meth:`DeviceEvaluator.parallel_tempering`: the grid scan runs in
@@ -1920,6 +2014,9 @@ class ScenarioEngine:
                     widx_a.max(initial=0) >= len(self.workloads):
                 raise ValueError(
                     f"widx out of range for {len(self.workloads)} workloads")
+            ci_a = np.asarray(ci, np.float64).reshape(S)
+            price_a, embf_a, profile_a = self._region_cols(
+                S, ci_a, price, embf, profile)
             arrays = dict(
                 v0=v0,
                 temps=np.asarray(temps, np.float64).reshape(S, n),
@@ -1928,7 +2025,10 @@ class ScenarioEngine:
                 w=np.asarray(weights, np.float64).reshape(S, n, 6),
                 pair_ok=np.asarray(pair_mask, bool).reshape(
                     S, max(n - 1, 1)),
-                ci=np.asarray(ci, np.float64).reshape(S),
+                ci=ci_a,
+                price=price_a,
+                embf=embf_a,
+                profile=profile_a,
                 widx=widx_a,
             )
             if mesh is not None:
@@ -1939,7 +2039,10 @@ class ScenarioEngine:
             args = (jnp.asarray(arrays["temps"]), jnp.asarray(arrays["mins"]),
                     jnp.asarray(arrays["med"]), jnp.asarray(arrays["w"]),
                     jnp.asarray(arrays["pair_ok"]),
-                    jnp.asarray(arrays["ci"]), jnp.asarray(arrays["widx"]))
+                    jnp.asarray(arrays["ci"]), jnp.asarray(arrays["price"]),
+                    jnp.asarray(arrays["embf"]),
+                    jnp.asarray(arrays["profile"]),
+                    jnp.asarray(arrays["widx"]))
 
             from repro.pathfinding.resume import (
                 run_segmented,
@@ -1956,7 +2059,8 @@ class ScenarioEngine:
                     mins=arrays["mins"], medians=arrays["med"],
                     weights=arrays["w"], pair_mask=arrays["pair_ok"],
                     ci=arrays["ci"], segment=segment,
-                    collect=collect_samples, widx=widx_a)
+                    collect=collect_samples, widx=widx_a,
+                    price=price_a, embf=embf_a, profile=profile_a)
                 carry_like = dict(
                     v=np.zeros((S, n, width), np.int32),
                     costs=np.zeros((S, n), np.float64),
@@ -1977,7 +2081,7 @@ class ScenarioEngine:
             def fresh():
                 keys0, cost0, vec0 = self._init_fn(S, n)(
                     jnp.asarray(arrays["v0"]), args[1], args[2], args[3],
-                    args[5], args[6], key0)
+                    args[5], args[6], args[7], args[8], args[9], key0)
                 bi0 = jnp.argmin(cost0, axis=1)
                 best_v0 = jnp.take_along_axis(
                     jnp.asarray(arrays["v0"]), bi0[:, None, None],
@@ -2089,13 +2193,21 @@ def get_scenario_engine(workloads: Sequence[GEMMWorkload],
 
     Like that twin, the resolved Pallas setting is part of the key, so
     flipping ``REPRO_PATHFINDER_PALLAS`` mid-process builds a fresh
-    engine instead of silently returning the cached other-path one."""
+    engine instead of silently returning the cached other-path one.
+
+    The db's ``_Cfg``-static lifecycle knobs (``load_profile``,
+    ``router_area_frac``) are default-resolved into the key as values:
+    two TechDBs that differ only in those knobs can never alias onto
+    one cached engine even if ``id()`` is recycled after a gc (the
+    ``hit[0] is db`` identity check in ``cached_evaluator`` guards the
+    rest of the db)."""
     from repro.pathfinding.batch import cached_evaluator
 
     use_pallas = _resolve_pallas(None)
     key = (tuple(workloads), id(db), tile_sizes,
            space.max_chiplets if space is not None else
-           DEFAULT_MAX_CHIPLETS, use_pallas)
+           DEFAULT_MAX_CHIPLETS, use_pallas,
+           tuple(db.load_profile), db.router_area_frac)
     return cached_evaluator(
         _SCENARIO_ENGINES, key, db,
         lambda: ScenarioEngine(workloads, db, tile_sizes, space,

@@ -52,6 +52,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.regions import Region, RegionLike, as_region
 from repro.core.sa import OBJECTIVE_AXES, random_system
 from repro.core.techdb import DEFAULT_DB, TechDB
 from repro.core.templates import TEMPLATES, Template
@@ -663,11 +664,16 @@ def fold_job_key(base: int, job_id: str) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One (workload, deployment region) cell of a sweep."""
+    """One (workload, deployment region) cell of a sweep.
+
+    ``spec`` carries the full regional axes (price, embodied factor,
+    24h grid profile); ``carbon_intensity`` stays a plain float for
+    backward-compatible reporting (it equals ``spec.carbon_intensity``)."""
 
     workload: GEMMWorkload
     region: str
     carbon_intensity: float
+    spec: Optional[Region] = None
 
     @property
     def key(self) -> Tuple[str, str]:
@@ -709,10 +715,16 @@ class ScenarioFrontier:
 class ScenarioSweep:
     """Map the Pareto frontier across deployment regions and workloads.
 
-    Each (workload, grid-carbon-intensity) cell runs the inner
-    :class:`ScalarizationSweep` under the region's intensity (operational
-    CFP scales with it, so both the frontier *and* the region-fitted
-    normalizer shift) with a distinct per-cell key (``fold_cell_key``).
+    Each (workload, region) cell runs the inner
+    :class:`ScalarizationSweep` under the region's axes — scalar grid
+    carbon intensity, and optionally (via :class:`repro.core.regions.
+    Region` values in ``regions``) a 24h grid-intensity profile, a
+    regional electricity price and an embodied-carbon factor.
+    Operational CFP, the dollar metric and embodied CFP all shift with
+    them, so both the frontier *and* the region-fitted normalizer
+    shift. Every cell gets a distinct key (``fold_cell_key``). Bare
+    float region values stay the historical scalar-CI cells,
+    bit-identical to the pre-Region sweep.
 
     On the device path the whole grid is **one stacked program**: the
     per-cell carbon intensities, normalizer rows, Eq. 17 weight rows and
@@ -736,7 +748,7 @@ class ScenarioSweep:
     strategy: ScalarizationSweep = dataclasses.field(
         default_factory=lambda: ScalarizationSweep(directions=8,
                                                    n_chains=4, sweeps=40))
-    regions: Dict[str, float] = dataclasses.field(
+    regions: Dict[str, RegionLike] = dataclasses.field(
         default_factory=lambda: dict(REGION_INTENSITIES))
     norm_samples: int = 400
     norm_seed: int = 1234
@@ -772,12 +784,16 @@ class ScenarioSweep:
         workloads = list(workloads)
         tpl = TEMPLATES[template] if isinstance(template, str) else template
         base = _resolve_key(key)
-        regions = list(self.regions.items())
+        # regions accept floats (historical scalar-CI cells) or Region
+        # specs carrying the price/embodied/profile axes; a float is a
+        # neutral-axes Region, bit-identical to the pre-Region sweep
+        regions = [(name, as_region(spec))
+                   for name, spec in self.regions.items()]
         # cell-major grid: workloads outer, regions inner (the historical
         # iteration order — cell index = wi * len(regions) + ri)
-        cells = [(wi, wl, region, ci)
+        cells = [(wi, wl, region, reg)
                  for wi, wl in enumerate(workloads)
-                 for region, ci in regions]
+                 for region, reg in regions]
         cell_budget = None
         if budget is not None:
             cell_budget = budget // len(cells)
@@ -807,7 +823,7 @@ class ScenarioSweep:
         norm_of: Dict[Tuple[int, str], object] = {}
         for wi, wl in enumerate(workloads):
             fitted = fit_region_normalizers(
-                wl, [ci for _, ci in regions], db,
+                wl, [reg for _, reg in regions], db,
                 samples=self.norm_samples, seed=self.norm_seed, space=space)
             for (region, _), nz in zip(regions, fitted):
                 norm_of[(wi, region)] = nz
@@ -820,13 +836,13 @@ class ScenarioSweep:
         # split budget, pre-fitted region normalizers
         scenarios: List[Scenario] = []
         results: Dict[Tuple[str, str], object] = {}
-        for idx, (wi, wl, region, ci) in enumerate(cells):
-            db_s = dataclasses.replace(db, carbon_intensity=ci)
+        for idx, (wi, wl, region, reg) in enumerate(cells):
+            db_s = dataclasses.replace(db, **reg.db_overrides())
             pf = Pathfinder(wl, tpl, db=db_s, device=False,
                             norm=norm_of[(wi, region)])
             res = pf.search(strategy=self.strategy, budget=cell_budget,
                             key=fold_cell_key(base, idx))
-            sc = Scenario(wl, region, ci)
+            sc = Scenario(wl, region, reg.carbon_intensity, reg)
             scenarios.append(sc)
             results[sc.key] = res
         return ScenarioFrontier(scenarios, results)
@@ -866,7 +882,13 @@ class ScenarioSweep:
               for (wi, _, region, _) in cells]
         mins = np.stack([a for a, _ in mm])
         medians = np.stack([b for _, b in mm])
-        ci = np.array([c for *_, c in cells], dtype=np.float64)
+        ci = np.array([reg.carbon_intensity for *_, reg in cells],
+                      dtype=np.float64)
+        price = np.array([reg.electricity_price for *_, reg in cells],
+                         dtype=np.float64)
+        embf = np.array([reg.emb_factor for *_, reg in cells],
+                        dtype=np.float64)
+        profile = np.stack([reg.profile_array() for *_, reg in cells])
         widx = np.array([wi for wi, *_ in cells], dtype=np.int32)
         v0 = np.stack([
             space.encode_many([
@@ -880,7 +902,8 @@ class ScenarioSweep:
         res = engine.parallel_tempering(
             v0, temps, sweeps, strat.swap_every, seed=base, mins=mins,
             medians=medians, weights=weights, pair_mask=pair, ci=ci,
-            widx=widx, mesh=self._mesh(), segment=segment,
+            widx=widx, price=price, embf=embf, profile=profile,
+            mesh=self._mesh(), segment=segment,
             archives=archives, checkpoint=_checkpointer(checkpoint_dir),
             resume=resume)
         # best-by-template per cell: ONE stacked re-evaluation of the
@@ -892,19 +915,21 @@ class ScenarioSweep:
                 [a.encoded, np.repeat(a.encoded[:1], m - len(a), axis=0)])
             for a in archives])
         wt = np.tile(np.asarray(tpl.weights, dtype=np.float64), (S, 1))
-        cost_f, _ = engine.evaluate_cost(enc_f, mins, medians, wt, ci, widx)
+        cost_f, _ = engine.evaluate_cost(enc_f, mins, medians, wt, ci,
+                                         widx, price=price, embf=embf,
+                                         profile=profile)
         cache = SimCache()
         evals_cell = nc * (1 + sweeps)
         scenarios: List[Scenario] = []
         results: Dict[Tuple[str, str], object] = {}
-        for s, (wi, wl, region, c) in enumerate(cells):
+        for s, (wi, wl, region, reg) in enumerate(cells):
             arch = archives[s]
             cc = cost_f[s, :len(arch)]
             i = int(np.argmin(cc))
             best = space.decode(arch.encoded[i])
-            db_s = dataclasses.replace(db, carbon_intensity=c)
+            db_s = dataclasses.replace(db, **reg.db_overrides())
             best_m = evaluate(best, wl, db_s, cache=cache)
-            sc = Scenario(wl, region, c)
+            sc = Scenario(wl, region, reg.carbon_intensity, reg)
             scenarios.append(sc)
             results[sc.key] = SearchResult(
                 best, best_m, float(cc[i]), res.history[s].tolist(),

@@ -94,6 +94,15 @@ def segment_fingerprint(kind: str, *, v0, temps, swap_every, seed, mins,
     Engine-specific fields (e.g. the scenario grid's workload ids) ride
     in ``extra``.
 
+    The regional lifecycle axes — per-cell ``price``, ``embf`` and the
+    24h grid-intensity ``profile`` — DO enter the fingerprint (via
+    ``extra``, from every engine): they are search *inputs* that change
+    the cost surface, so a checkpoint written under one regional grid
+    must not resume under another. Neutral columns are materialized
+    before hashing (0.0 / 1.0 / flat-at-ci), which means checkpoints
+    written before the axes existed do not fingerprint-match and are
+    ignored rather than mis-resumed.
+
     The kernel fast path is deliberately *outside* the fingerprint: the
     Pallas gather (``use_pallas`` / ``REPRO_PATHFINDER_PALLAS``) is an
     execution detail of the same search, exact on the integer prefix

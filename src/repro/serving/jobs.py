@@ -28,10 +28,11 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.techdb import HOURS_PER_DAY
 from repro.pathfinding.pareto import ParetoArchive, ScalarizationSweep
 
 
@@ -85,6 +86,13 @@ class JobSpec:
         default_factory=lambda: ScalarizationSweep(
             directions=2, n_chains=2, sweeps=8))
     carbon_intensity: float = 0.475
+    # regional lifecycle axes (neutral defaults reproduce the
+    # scalar-CI job bit-for-bit): $/kWh electricity price, embodied
+    # multiplier, optional 24h grid-intensity profile (None = flat at
+    # carbon_intensity)
+    electricity_price: float = 0.0
+    emb_factor: float = 1.0
+    grid_profile: Optional[Tuple[float, ...]] = None
     budget: Optional[int] = None
     key: Optional[int] = None
     # per-job overrides of the service's adaptive-budget knobs (None =
@@ -92,11 +100,28 @@ class JobSpec:
     stall_segments: Optional[int] = None
     stall_tol: Optional[float] = None
 
+    def __post_init__(self) -> None:
+        if self.grid_profile is not None:
+            prof = tuple(float(x) for x in self.grid_profile)
+            if len(prof) != HOURS_PER_DAY:
+                raise ValueError(
+                    f"grid_profile needs {HOURS_PER_DAY} hourly entries, "
+                    f"got {len(prof)}")
+            object.__setattr__(self, "grid_profile", prof)
+
     def bucket_key(self) -> tuple:
         """(total chains, swap cadence): the static shape of the batched
         program this job can share."""
         k = self.strategy.weight_rows().shape[0]
         return (k * self.strategy.n_chains, self.strategy.swap_every)
+
+    def profile_row(self) -> np.ndarray:
+        """float64[24] grid-intensity row for this job's slot; ``None``
+        synthesizes the flat row at ``carbon_intensity`` (in-program
+        correction exactly +0.0, i.e. the scalar model)."""
+        if self.grid_profile is None:
+            return np.full(HOURS_PER_DAY, np.float64(self.carbon_intensity))
+        return np.asarray(self.grid_profile, dtype=np.float64)
 
 
 @dataclasses.dataclass(frozen=True)

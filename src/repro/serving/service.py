@@ -55,8 +55,9 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.regions import Region
 from repro.core.sa import random_system
-from repro.core.techdb import DEFAULT_DB, TechDB
+from repro.core.techdb import DEFAULT_DB, HOURS_PER_DAY, TechDB
 from repro.core.workload import GEMMWorkload
 from repro.pathfinding.pareto import ParetoArchive, fold_job_key
 from repro.serving.jobs import (
@@ -98,6 +99,13 @@ class _Bucket:
         self.w = np.full((S, nc, 6), 1.0 / 6.0, np.float64)
         self.pair = np.zeros((S, max(nc - 1, 1)), bool)
         self.ci = np.full(S, 0.475, np.float64)
+        # regional axes of each lane: neutral columns (0.0 price, 1.0
+        # embodied factor, flat-at-ci profile) reproduce the scalar-CI
+        # program bit-for-bit; always present so the bucket programs
+        # keep ONE signature regardless of which jobs use the axes
+        self.price = np.zeros(S, np.float64)
+        self.embf = np.ones(S, np.float64)
+        self.profile = np.repeat(self.ci[:, None], HOURS_PER_DAY, axis=1)
         self.widx = np.zeros(S, np.int32)
         self.slot_jobs: List[Optional[SearchJob]] = [None] * S
 
@@ -126,6 +134,9 @@ class _Bucket:
         self.w[s] = 1.0 / 6.0
         self.pair[s] = False
         self.ci[s] = 0.475
+        self.price[s] = 0.0
+        self.embf[s] = 1.0
+        self.profile[s] = 0.475
         self.widx[s] = 0
 
 
@@ -430,7 +441,9 @@ class PathfinderService:
                 jnp.asarray(b.sweep0), jnp.asarray(b.temps),
                 jnp.asarray(b.mins), jnp.asarray(b.med),
                 jnp.asarray(b.w), jnp.asarray(b.pair),
-                jnp.asarray(b.ci), jnp.asarray(b.widx))
+                jnp.asarray(b.ci), jnp.asarray(b.price),
+                jnp.asarray(b.embf), jnp.asarray(b.profile),
+                jnp.asarray(b.widx))
             # np.array (not asarray): device outputs view as read-only
             # numpy and the slot state is written in place at boundaries
             b.v = np.array(carry[0])
@@ -555,7 +568,7 @@ class PathfinderService:
             job.weights = strat.chain_weights(w6)
             job.pair_mask = strat.chain_pair_mask(nc)
             job.mins, job.medians = self._norm_rows(
-                job.widx, float(spec.carbon_intensity))
+                job.widx, self._region_of(spec))
             sweeps = budget_sweeps(
                 strat.sweeps, nc, spec.budget,
                 detail=f" for job {spec.job_id!r}")
@@ -577,7 +590,10 @@ class PathfinderService:
                     spec.carbon_intensity),
                 segment=seg, collect=True,
                 workload=np.frombuffer(spec.workload.encode(), np.uint8),
-                job=np.frombuffer(spec.job_id.encode(), np.uint8))
+                job=np.frombuffer(spec.job_id.encode(), np.uint8),
+                price=np.float64(spec.electricity_price),
+                embf=np.float64(spec.emb_factor),
+                profile=spec.profile_row())
             job.checkpointer = _checkpointer(
                 os.path.join(self.checkpoint_root, spec.job_id))
         # slot statics (identical for fresh admission and re-admission)
@@ -587,6 +603,9 @@ class PathfinderService:
         b.w[slot] = job.weights
         b.pair[slot] = job.pair_mask
         b.ci[slot] = float(spec.carbon_intensity)
+        b.price[slot] = float(spec.electricity_price)
+        b.embf[slot] = float(spec.emb_factor)
+        b.profile[slot] = spec.profile_row()
         b.widx[slot] = job.widx
 
         if job.carry is None and job.checkpointer is not None:
@@ -618,8 +637,9 @@ class PathfinderService:
                 _, cost0, vec0 = self.engine._init_fn(self.slots, nc)(
                     jnp.asarray(b.v), jnp.asarray(b.mins),
                     jnp.asarray(b.med), jnp.asarray(b.w),
-                    jnp.asarray(b.ci), jnp.asarray(b.widx),
-                    jax.random.PRNGKey(0))
+                    jnp.asarray(b.ci), jnp.asarray(b.price),
+                    jnp.asarray(b.embf), jnp.asarray(b.profile),
+                    jnp.asarray(b.widx), jax.random.PRNGKey(0))
                 cost_row = np.asarray(cost0)[slot]
                 vec_row = np.asarray(vec0)[slot]
                 key_row = np.asarray(
@@ -685,7 +705,9 @@ class PathfinderService:
             keys0, cost0, _ = self.engine._init_fn(self.slots, b.nc)(
                 jnp.asarray(b.v), jnp.asarray(b.mins),
                 jnp.asarray(b.med), jnp.asarray(b.w), jnp.asarray(b.ci),
-                jnp.asarray(b.widx), jax.random.PRNGKey(0))
+                jnp.asarray(b.price), jnp.asarray(b.embf),
+                jnp.asarray(b.profile), jnp.asarray(b.widx),
+                jax.random.PRNGKey(0))
             fn = self.engine.segment_runner(
                 self.slots, b.nc, self.segment, b.swap_every,
                 collect_samples=True)
@@ -695,20 +717,33 @@ class PathfinderService:
                 jnp.asarray(b.sweep0), jnp.asarray(b.temps),
                 jnp.asarray(b.mins), jnp.asarray(b.med),
                 jnp.asarray(b.w), jnp.asarray(b.pair),
-                jnp.asarray(b.ci), jnp.asarray(b.widx))
+                jnp.asarray(b.ci), jnp.asarray(b.price),
+                jnp.asarray(b.embf), jnp.asarray(b.profile),
+                jnp.asarray(b.widx))
             np.asarray(carry[0])      # block until compiled + run
 
+    @staticmethod
+    def _region_of(spec: JobSpec) -> Region:
+        """The job's full deployment region (all four axes)."""
+        return Region(carbon_intensity=float(spec.carbon_intensity),
+                      electricity_price=float(spec.electricity_price),
+                      emb_factor=float(spec.emb_factor),
+                      grid_profile=spec.grid_profile)
+
     def _norm_rows(self, widx: int,
-                   ci: float) -> Tuple[np.ndarray, np.ndarray]:
-        nz = self._norms.get((widx, ci))
+                   region: Region) -> Tuple[np.ndarray, np.ndarray]:
+        # Region is frozen/hashable, so the cache key distinguishes jobs
+        # that share a scalar CI but differ in price/embodied/profile —
+        # a profile axis can never alias another job's normalizer rows
+        nz = self._norms.get((widx, region))
         if nz is None:
             from repro.pathfinding.batch import fit_region_normalizers
 
             nz = fit_region_normalizers(
-                self.workloads[widx], [ci], self.db,
+                self.workloads[widx], [region], self.db,
                 samples=self.norm_samples, seed=self.norm_seed,
                 space=self.space)[0]
-            self._norms[(widx, ci)] = nz
+            self._norms[(widx, region)] = nz
         mins, medians = nz.weights_arrays()
         return (np.asarray(mins, np.float64),
                 np.asarray(medians, np.float64))

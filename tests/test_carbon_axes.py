@@ -1,0 +1,338 @@
+"""Lifecycle carbon-axis tests: the full embodied model (wasted-die,
+recycling, router split), the 24h grid-intensity profile as a runtime
+column, the ``dies_per_wafer`` edge-loss raise, and the engine-cache
+aliasing guard.
+
+The bit-exactness contract under test: every lifecycle knob defaults to
+a *neutral* value (0.0 addend, 1.0 multiplier, flat profile), so the
+scalar and device paths with defaults reproduce the pre-lifecycle
+numbers bit-for-bit — the pinned goldens never move. Non-neutral knobs
+are then pinned scalar-vs-device at <= 1e-9 relative.
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import workload
+from repro.core import carbon
+from repro.core.evaluate import evaluate
+from repro.core.regions import Region, as_region, diurnal_profile
+from repro.core.sa import random_system
+from repro.core.scalesim import SimCache
+from repro.core.techdb import DEFAULT_DB, HOURS_PER_DAY, TechDB
+from repro.pathfinding import DesignSpace, DeviceEvaluator
+from repro.pathfinding.device import get_scenario_engine, trace_count
+
+WL = workload(1)
+SPACE = DesignSpace()
+
+#: every lifecycle knob set non-neutral at once — the parity tests must
+#: hold on the *full* model, not just one axis at a time
+LIFECYCLE_OVERRIDES = {
+    "carbon_intensity": 0.31,
+    "electricity_price": 0.12,
+    "emb_factor": 1.25,
+    "grid_profile": tuple(diurnal_profile(0.31, swing=0.4, peak_hour=19)),
+    "load_profile": tuple(
+        w / sum(1.0 + 0.5 * ((h % 12) / 11.0) for h in range(24))
+        for w in (1.0 + 0.5 * ((h % 12) / 11.0) for h in range(24))),
+    "rcy_mat_frac": 0.15,
+    "rcy_cpa_frac": 0.10,
+    "wasted_die_scale": 1.0,
+    "router_area_frac": 0.08,
+}
+
+
+# ---------------------------------------------------------------------------
+# dies_per_wafer: raise past the edge-loss boundary (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_dies_per_wafer_raises_past_edge_loss_boundary():
+    """The edge-corrected DPW formula crosses zero at A = r^2/2 =
+    11250 mm^2 on a 300 mm wafer; beyond it the estimate is negative
+    garbage and must raise, not clamp to 1."""
+    with pytest.raises(ValueError, match="does not fit"):
+        DEFAULT_DB.dies_per_wafer(11250.5)
+    with pytest.raises(ValueError, match="does not fit"):
+        DEFAULT_DB.dies_per_wafer(20000.0)
+
+
+def test_dies_per_wafer_rejects_nonpositive_area():
+    for area in (0.0, -5.0):
+        with pytest.raises(ValueError, match="positive"):
+            DEFAULT_DB.dies_per_wafer(area)
+
+
+def test_dies_per_wafer_positive_fraction_clamps_to_one():
+    """Just inside the boundary the formula yields 0 < DPW < 1: the die
+    does fit, so a wafer yields at least one (clamp, not raise)."""
+    assert DEFAULT_DB.dies_per_wafer(11000.0) == 1
+    assert DEFAULT_DB.dies_per_wafer(11249.0) == 1
+
+
+def test_dies_per_wafer_sane_for_real_die():
+    dpw = DEFAULT_DB.dies_per_wafer(20.0)
+    assert 3000 < dpw < 3600  # ~70685/20 minus edge loss
+
+
+# ---------------------------------------------------------------------------
+# TechDB knob hygiene: clamps, override resolution, profile validation
+# ---------------------------------------------------------------------------
+
+
+def test_recycling_fractions_clamped_to_unit_interval():
+    db = TechDB(rcy_mat_frac=1.5, rcy_cpa_frac=-0.2)
+    assert db.rcy_mat_frac == 1.0 and db.rcy_cpa_frac == 0.0
+    # fully recycled material -> zero manufacturing credit factor
+    assert carbon.recycling_credit(db) == 0.0
+    # the clamp also runs over the overrides path
+    db2 = TechDB(overrides={"rcy_mat_frac": 2.0, "rcy_cpa_frac": 0.25})
+    assert db2.rcy_mat_frac == 1.0 and db2.rcy_cpa_frac == 0.25
+    assert carbon.recycling_credit(DEFAULT_DB) == 1.0  # neutral default
+
+
+def test_overrides_unknown_name_raises():
+    with pytest.raises(ValueError, match="no knob named"):
+        TechDB(overrides={"grid_profle": (0.5,) * HOURS_PER_DAY})
+
+
+def test_overrides_resolve_new_columns_and_are_consumed():
+    """The new lifecycle columns patch via ``overrides`` like any other
+    knob, and the dict is consumed at construction — a later
+    ``dataclasses.replace`` must not have a stale overrides dict undo
+    the change (the satellite-3 default-resolution bug)."""
+    prof = tuple(diurnal_profile(0.5))
+    db = TechDB(overrides={"grid_profile": prof, "electricity_price": 0.2,
+                           "router_area_frac": 0.05})
+    assert db.grid_profile == prof
+    assert db.electricity_price == 0.2 and db.router_area_frac == 0.05
+    assert db.overrides is None
+    db2 = dataclasses.replace(db, electricity_price=0.3)
+    assert db2.electricity_price == 0.3       # not reverted to 0.2
+    assert db2.grid_profile == prof           # inherited, not dropped
+
+
+def test_profile_length_validation():
+    with pytest.raises(ValueError, match="hourly entries"):
+        TechDB(grid_profile=(0.5,) * 23)
+    with pytest.raises(ValueError, match="hourly entries"):
+        TechDB(load_profile=(1.0 / 12,) * 12)
+    with pytest.raises(ValueError, match="hourly entries"):
+        Region(carbon_intensity=0.5, grid_profile=(0.5,) * 25)
+
+
+def test_region_spec_roundtrip():
+    """``as_region`` lifts bare floats (the legacy regions dict value)
+    and passes Region specs through; ``db_overrides`` feeds TechDB."""
+    r = as_region(0.475)
+    assert r == Region(carbon_intensity=0.475)
+    spec = Region(carbon_intensity=0.3, electricity_price=0.1,
+                  emb_factor=1.1, grid_profile=tuple(diurnal_profile(0.3)))
+    assert as_region(spec) is spec
+    db = TechDB(overrides=spec.db_overrides())
+    assert db.carbon_intensity == 0.3 and db.emb_factor == 1.1
+    np.testing.assert_array_equal(spec.profile_array(),
+                                  np.asarray(spec.grid_profile))
+
+
+def test_diurnal_profile_preserves_daily_mean():
+    prof = diurnal_profile(0.42, swing=0.35, peak_hour=18)
+    assert len(prof) == HOURS_PER_DAY
+    assert float(np.mean(prof)) == pytest.approx(0.42, rel=1e-12)
+    assert max(prof) > 0.42 > min(prof)
+
+
+# ---------------------------------------------------------------------------
+# Flat profile == scalar model, bit-for-bit (satellite 4)
+# ---------------------------------------------------------------------------
+
+
+def test_effective_intensity_flat_profile_is_exact_identity():
+    """The device formulation ci + sum((p - ci) * load) makes a flat
+    profile a chain of exact +0.0 terms — bitwise, not approximately."""
+    ci = 0.475
+    flat = (ci,) * HOURS_PER_DAY
+    assert carbon.effective_intensity(ci, flat) == ci
+    assert carbon.effective_intensity(ci, None) == ci
+    skewed_load = tuple(
+        (1.0 if h < 12 else 3.0) / (12 * 4.0) for h in range(24))
+    assert carbon.effective_intensity(ci, flat, skewed_load) == ci
+    # a non-flat profile under flat load recovers its arithmetic mean
+    prof = diurnal_profile(ci, swing=0.5)
+    assert carbon.effective_intensity(ci, prof) == pytest.approx(
+        float(np.mean(prof)), rel=1e-12)
+
+
+def test_flat_profile_scalar_evaluate_bitwise():
+    """``evaluate`` under an explicit flat grid profile is bit-identical
+    to the scalar-CI model on every metric field."""
+    db_flat = dataclasses.replace(
+        DEFAULT_DB,
+        grid_profile=(DEFAULT_DB.carbon_intensity,) * HOURS_PER_DAY)
+    rng = random.Random(20260808)
+    cache = SimCache()
+    for _ in range(20):
+        sys = random_system(rng)
+        a = evaluate(sys, WL, cache=cache)
+        b = evaluate(sys, WL, db_flat, cache=cache)
+        for f in ("energy_j", "area_mm2", "latency_s", "dollar",
+                  "emb_cfp_kg", "ope_cfp_kg"):
+            assert getattr(a, f) == getattr(b, f), (sys.describe(), f)
+
+
+def test_neutral_knobs_leave_carbon_models_bitwise():
+    """Explicitly-neutral lifecycle knobs (0 addends, 1 multipliers)
+    reproduce the default model bit-for-bit through the carbon layer."""
+    neutral = TechDB(overrides={
+        "electricity_price": 0.0, "emb_factor": 1.0,
+        "rcy_mat_frac": 0.0, "rcy_cpa_frac": 0.0,
+        "wasted_die_scale": 0.0, "router_area_frac": 0.0})
+    rng = random.Random(7)
+    for _ in range(10):
+        sys = random_system(rng)
+        area = sum(c.area_mm2(DEFAULT_DB) for c in sys.chiplets) * 1.1
+        a = carbon.embodied_cfp(sys, area, DEFAULT_DB)
+        b = carbon.embodied_cfp(sys, area, neutral)
+        assert a == b
+        e = 1.7e-3
+        assert (carbon.operational_cfp(e, 1e-3, DEFAULT_DB)
+                == carbon.operational_cfp(e, 1e-3, neutral))
+        assert carbon.operational_cost_usd(e, neutral) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Scalar evaluate vs device _metrics_jax parity on the full lifecycle
+# model (satellites 2 + 4: packaging/router/recycling/wasted-die and
+# the price/embodied/profile columns)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lifecycle_db():
+    return TechDB(overrides=dict(LIFECYCLE_OVERRIDES))
+
+
+@pytest.fixture(scope="module")
+def lifecycle_dev(lifecycle_db):
+    return DeviceEvaluator(WL, db=lifecycle_db)
+
+
+def test_scalar_vs_device_parity_full_lifecycle(lifecycle_db,
+                                                lifecycle_dev):
+    """Every lifecycle knob non-neutral at once: the fused device
+    program (price/embf/profile as runtime columns, router split and
+    recycling baked into its tile tables) matches scalar ``evaluate``
+    within 1e-9 relative on dollar, embodied and operational CFP.
+
+    This is the ``packaging_cfp`` parity pin of satellite 2: embodied
+    carbon includes C_HI with the substrate term *inside* the
+    bonding-yield division on both paths (ECO-CHIP scraps the whole
+    assembly, substrate included, when a bond fails)."""
+    space = lifecycle_dev.space
+    rng = random.Random(20260801)
+    systems = [random_system(rng) for _ in range(200)]
+    mb = lifecycle_dev.metrics(space.encode_many(systems))
+    cache = SimCache()
+    styles = set()
+    for i, sys in enumerate(systems):
+        styles.add(sys.style)
+        m = evaluate(sys, WL, lifecycle_db, cache=cache)
+        for f in ("dollar", "emb_cfp_kg", "ope_cfp_kg", "energy_j",
+                  "latency_s", "area_mm2"):
+            ref = getattr(m, f)
+            got = float(getattr(mb, f)[i])
+            assert got == pytest.approx(ref, rel=1e-9, abs=1e-300), (
+                f"{sys.describe()} field {f}: scalar {ref} device {got}")
+    # the parity population must actually exercise bonded styles, or
+    # the packaging-yield pin proves nothing
+    assert {"2.5D", "3D"} <= styles
+
+
+def test_lifecycle_moves_every_metric_direction(lifecycle_db):
+    """Sanity on the model's signs: a dirty-peak profile with a peaky
+    load raises operational CFP, a nonzero price raises dollars, and
+    emb_factor > 1 with router/wasted-die terms raises embodied CFP."""
+    rng = random.Random(3)
+    sys = random_system(rng)
+    base = evaluate(sys, WL)
+    life = evaluate(sys, WL, lifecycle_db)
+    db_iso = dataclasses.replace(
+        DEFAULT_DB, electricity_price=0.12, emb_factor=1.25,
+        router_area_frac=0.08)
+    iso = evaluate(sys, WL, db_iso)
+    assert iso.dollar > base.dollar
+    assert iso.emb_cfp_kg > base.emb_cfp_kg
+    assert life.energy_j == base.energy_j  # lifecycle never touches perf
+    assert life.latency_s == base.latency_s
+
+
+# ---------------------------------------------------------------------------
+# Engine cache + compile-count regressions (satellite 3 / tentpole b)
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_engine_cache_keys_cfg_static_knobs():
+    """``load_profile`` and ``router_area_frac`` are trace-time
+    constants of the fused program, so they are default-resolved into
+    the ``get_scenario_engine`` cache key: two dbs differing only there
+    can never alias onto one engine. The runtime axes (price, embf,
+    grid profile) deliberately do NOT fork the engine."""
+    db_a = TechDB()
+    db_b = dataclasses.replace(db_a, load_profile=tuple(
+        w / 300.0 for w in range(1, 25)))
+    db_c = dataclasses.replace(db_a, router_area_frac=0.1)
+    e_a = get_scenario_engine((WL,), db_a)
+    assert get_scenario_engine((WL,), db_a) is e_a  # stable hit
+    assert get_scenario_engine((WL,), db_b) is not e_a
+    assert get_scenario_engine((WL,), db_c) is not e_a
+
+
+def test_profile_axis_is_data_not_a_recompile():
+    """The richer grid — per-cell price/embf/24h-profile columns — runs
+    on the same compiled program as the scalar-CI grid: neutral columns
+    are always materialized, so both calls share one signature and the
+    scenario trace count stays flat."""
+    engine = get_scenario_engine((WL,), DEFAULT_DB)
+    from repro.pathfinding import fit_normalizer_batched
+
+    nz = fit_normalizer_batched(WL, samples=80, seed=3, space=SPACE)
+    mins_v, medians_v = nz.weights_arrays()
+    S, m = 3, 4
+    enc = SPACE.sample(S * m, key=17).reshape(S, m, -1)
+    mins = np.tile(mins_v, (S, 1))
+    medians = np.tile(medians_v, (S, 1))
+    w = np.tile(np.full(6, 1.0 / 6.0), (S, 1))
+    ci = np.array([0.024, 0.475, 0.82])
+    widx = np.zeros(S, dtype=np.int64)
+
+    before = trace_count("scenario_eval")
+    cost_scalar, _ = engine.evaluate_cost(enc, mins, medians, w, ci, widx)
+    after_first = trace_count("scenario_eval")
+
+    price = np.array([0.05, 0.12, 0.20])
+    embf = np.array([0.9, 1.0, 1.3])
+    profile = np.stack([diurnal_profile(c, swing=0.3) for c in ci])
+    cost_rich, _ = engine.evaluate_cost(enc, mins, medians, w, ci, widx,
+                                        price=price, embf=embf,
+                                        profile=profile)
+    assert trace_count("scenario_eval") == after_first, (
+        "profile/price/embf columns forced a retrace — they must be "
+        "runtime data of the one fused program")
+
+    # flat columns reproduce the scalar grid bitwise on-device too
+    flat_prof = np.repeat(ci[:, None], HOURS_PER_DAY, axis=1)
+    cost_flat, _ = engine.evaluate_cost(
+        enc, mins, medians, w, ci, widx,
+        price=np.zeros(S), embf=np.ones(S), profile=flat_prof)
+    np.testing.assert_array_equal(cost_flat, cost_scalar)
+    # and the rich columns actually change the answer somewhere
+    assert not np.array_equal(cost_rich, cost_scalar)
+
+
+def test_before_first_trace_counts_exist():
+    """trace_count names used above are registered families."""
+    assert trace_count("scenario_eval") >= 0
+    assert trace_count("scenario_pt") >= 0
