@@ -2,16 +2,9 @@
 from __future__ import annotations
 
 import time
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import List, Tuple
 
-from repro.core import (
-    Chiplet,
-    HISystem,
-    Mapping,
-    SimCache,
-    evaluate,
-)
-from repro.core.chiplet import different_chiplet_system, identical_chiplet_system
+from repro.core import HISystem, Mapping, SimCache
 from repro.core.system import validate
 from repro.core.techdb import valid_pairs_25d, valid_pairs_3d, valid_pairs_hybrid
 

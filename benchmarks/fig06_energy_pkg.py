@@ -34,7 +34,6 @@ def run(out=print) -> str:
         out("combo,carbonpath,chipletgym")
         for name, e, g in rows:
             out(f"{name},{e/base:.3f},{g/base:.3f}")
-        hb = next(e for n, e, _ in rows if n == "3D-HybBond-UCIe-3D")
         pure = [(n, e) for n, e, _ in rows if not n.startswith("2.5D+3D")]
         lowest = min(pure, key=lambda r: r[1])
         checks.append(lowest[0] == "3D-HybBond-UCIe-3D")

@@ -6,7 +6,7 @@ latency variation for WL1 / WL2.
 """
 from __future__ import annotations
 
-from repro.core import Mapping, evaluate, workload
+from repro.core import evaluate, workload
 from repro.core.chiplet import different_chiplet_system
 from repro.core.workload import ALL_MAPPINGS
 from benchmarks.common import CACHE, row, sys_hybrid, timed

@@ -17,7 +17,6 @@ import os
 import random
 import time
 
-import numpy as np
 
 from repro.core import TEMPLATES, workload
 from repro.core.evaluate import evaluate

@@ -28,6 +28,7 @@ from typing import Optional
 
 from benchmarks import (
     checkpoint_resume,
+    comm_models,
     fig05_latency_vs_chiplets,
     fig06_energy_pkg,
     fig07_cost_pkg,
@@ -66,6 +67,7 @@ ALL = [
     ("prefix_gather", prefix_gather),
     ("pareto_frontier", pareto_frontier),
     ("scenario_sweep", scenario_sweep),
+    ("comm_models", comm_models),
     ("checkpoint_resume", checkpoint_resume),
     ("serving_throughput", serving_throughput),
 ]

@@ -12,7 +12,7 @@ instead (``repro.pathfinding.Pathfinder`` + a search strategy — see
 examples/quickstart.py); this example keeps its bespoke pod-level
 annealer because its design vector is not an HI system.
 """
-from repro.analysis.tpu_pathfinder import evaluate_plan, pathfind
+from repro.analysis.tpu_pathfinder import pathfind
 from repro.configs import get_config
 
 for arch in ("smollm-135m", "qwen3-8b", "deepseek-v2-236b"):

@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import random
-from typing import Dict, Tuple
+from typing import Tuple
 
 from repro.analysis.roofline import HBM_BW, ICI_LINK_BW, PEAK_FLOPS
 from repro.configs.base import ModelConfig

@@ -147,11 +147,24 @@ def embodied_cfp(sys: HISystem, package_area_mm2: float,
     ``router_c`` — does not pay the bonding-yield inflation (routers on
     good dies are not re-spent when a bond fails; the die is recovered
     carbon-wise through the die-yield term). ``router_area_frac=0.0``
-    (default) reproduces the pre-split packaging carbon exactly."""
-    mfg = sum(chiplet_mfg_cfp(c, db) for c in sys.chiplets)
+    (default) reproduces the pre-split packaging carbon exactly.
+
+    Under the mesh_noc comm model (``sys.noc`` non-empty) each chiplet's
+    router share scales with its physical router count ``mx * my`` —
+    structure-proportional instead of a flat area fraction. The neutral
+    ``(1, 1)`` mesh multiplies by exactly 1.0 per chiplet, reproducing
+    the legacy term bit-for-bit."""
+    per_chip = [chiplet_mfg_cfp(c, db) for c in sys.chiplets]
+    mfg = sum(per_chip)
     des = sum(chiplet_design_cfp(c, db) for c in sys.chiplets)
     pkg = packaging_cfp(sys, package_area_mm2, db)
-    pkg = pkg + db.router_area_frac * mfg
+    if sys.noc:
+        from repro.core.comm import system_n_routers
+        routers = system_n_routers(sys)
+        pkg = pkg + db.router_area_frac * sum(
+            m * r for m, r in zip(per_chip, routers))
+    else:
+        pkg = pkg + db.router_area_frac * mfg
     return EmbodiedBreakdown(mfg, des, pkg)
 
 

@@ -10,7 +10,6 @@ yield compounds per bonding event and depends on the interconnect type.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from repro.core.chiplet import Chiplet
 from repro.core.system import HISystem

@@ -15,12 +15,15 @@ import dataclasses
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.core import comm as comm_mod
 from repro.core import floorplan as fp
 from repro.core.chiplet import Chiplet
 from repro.core.system import HISystem
-from repro.core.techdb import DEFAULT_DB, TechDB
+from repro.core.techdb import DEFAULT_DB, DEFAULT_HOP_LATENCY_S, TechDB
 
-HOP_LATENCY_S = 2.0e-9      # per-hop switch/PHY latency
+# Back-compat alias: the per-hop switch/PHY latency now lives per protocol
+# in ``TechDB.protocols[*].hop_latency_s`` (neutral default = this value).
+HOP_LATENCY_S = DEFAULT_HOP_LATENCY_S
 
 
 @dataclasses.dataclass
@@ -30,6 +33,7 @@ class Link:
     bw_bits_s: float          # effective payload bandwidth (Eq. 6 min)
     energy_pj_bit: float
     kind: str                 # "2.5D" | "3D"
+    hop_latency_s: float = DEFAULT_HOP_LATENCY_S
 
     def key(self) -> Tuple[int, int]:
         return (self.a, self.b) if self.a < self.b else (self.b, self.a)
@@ -47,6 +51,15 @@ class Topology:
     base_die: Optional[int]                    # 3D/hybrid stack base
     floorplan: Optional[fp.Floorplan]
     stack_order: Tuple[int, ...]
+    # comm-model payload (repro.core.comm): per-chiplet mean NoC hop
+    # counts (empty = legacy model) plus the TechDB NoC knobs, stashed at
+    # build time so ``route_reduction`` keeps its db-free signature.
+    noc_hops: Tuple[float, ...] = ()
+    noc_hop_latency_s: float = 0.0
+    noc_energy_pj_bit: float = 0.0
+    # shared per-hop D2D latency when every protocol agrees (the default);
+    # None switches route_reduction to the per-link hop-latency sum
+    hop_latency_uniform: Optional[float] = DEFAULT_HOP_LATENCY_S
 
     # -- path helpers -------------------------------------------------------
 
@@ -85,15 +98,15 @@ class Topology:
 
     def effective_dram_bw(self, idx: int) -> float:
         """Eqs. 8-10: stacked dies reach DRAM via the base die; effective
-        bandwidth is min(DRAM bw, all D2D links along the path down)."""
+        bandwidth is min(DRAM bw, min-bandwidth of the path down). Routed
+        through :meth:`min_path_bw` so the two weakest-link semantics
+        cannot drift apart."""
         direct = self.mem_bw_bits_s.get(idx, 0.0)
         if direct > 0.0:
             return direct
         assert self.base_die is not None
-        bw = self.mem_bw_bits_s[self.base_die]
-        for link in self.path_links(idx, self.base_die):
-            bw = min(bw, link.bw_bits_s)
-        return bw
+        return min(self.mem_bw_bits_s[self.base_die],
+                   self.min_path_bw(idx, self.base_die))
 
     def dram_path_hops(self, idx: int) -> int:
         if self.mem_bw_bits_s.get(idx, 0.0) > 0.0:
@@ -165,6 +178,14 @@ def build_topology(sys: HISystem, db: TechDB = DEFAULT_DB) -> Topology:
     dest = max(range(n), key=lambda i: areas[i])
     mem = db.memories[sys.memory]
     total_mem_bw = mem.bw_gbs_per_channel * mem.max_channels * 8e9  # bits/s
+    # comm-model payload: NoC hop counts only exist under mesh_noc systems
+    # (empty tuple keeps route_reduction on the literal legacy code path)
+    comm_kw = dict(
+        noc_hops=comm_mod.system_noc_hops(sys) if sys.noc else (),
+        noc_hop_latency_s=db.noc_hop_latency_s,
+        noc_energy_pj_bit=db.noc_energy_pj_bit,
+        hop_latency_uniform=db.uniform_hop_latency(),
+    )
 
     links: Dict[Tuple[int, int], Link] = {}
     adj: Dict[int, Set[int]] = {i: set() for i in range(n)}
@@ -191,15 +212,17 @@ def build_topology(sys: HISystem, db: TechDB = DEFAULT_DB) -> Topology:
                 sys.chiplets[a], pkg.bump_pitch_um, proto, False, db))
             bw = min(bw, chiplet_d2d_bw_bits(
                 sys.chiplets[b], pkg.bump_pitch_um, proto, False, db))
-        e_bit = db.protocols[proto].energy_pj_bit
+        spec = db.protocols[proto]
         key = (a, b) if a < b else (b, a)
-        links[key] = Link(key[0], key[1], bw, e_bit, kind)
+        links[key] = Link(key[0], key[1], bw, spec.energy_pj_bit, kind,
+                          spec.hop_latency_s)
         adj[a].add(b)
         adj[b].add(a)
 
     if sys.style == "2D":
         mem_bw[0] = total_mem_bw
-        return Topology(sys, links, adj, dest, mem_bw, None, None, ())
+        return Topology(sys, links, adj, dest, mem_bw, None, None, (),
+                        **comm_kw)
 
     if sys.style in ("2.5D", "2.5D+3D"):
         planar = list(sys.planar_indices())
@@ -235,7 +258,8 @@ def build_topology(sys: HISystem, db: TechDB = DEFAULT_DB) -> Topology:
             add_link(lo, hi, sys.pkg_3d, sys.proto_3d, "3D")
         mem_bw[base_die] = total_mem_bw
 
-    return Topology(sys, links, adj, dest, mem_bw, base_die, plan, stack_order)
+    return Topology(sys, links, adj, dest, mem_bw, base_die, plan,
+                    stack_order, **comm_kw)
 
 
 # ---------------------------------------------------------------------------
@@ -257,17 +281,33 @@ def route_reduction(topo: Topology, src_bits: Sequence[int]) -> D2DResult:
 
     Shared links serialize (their loads add); disjoint links proceed in
     parallel, so the reduction-phase latency is the busiest-link time plus
-    per-hop overheads along the longest path.
+    per-hop overheads along the slowest path: package-level switch/PHY
+    hops (per-protocol ``hop_latency_s``; the uniform default collapses
+    to the bit-pinned ``max_hops * h``) plus, under the mesh_noc comm
+    model, the source and destination chiplets' mean on-die NoC hop
+    latencies. NoC router energy is charged per bit-hop alongside the
+    link energy — the traffic-proportional router bill.
     """
     link_bits: Dict[Tuple[int, int], int] = {k: 0 for k in topo.links}
     energy = 0.0
     max_hops = 0
     total = 0
+    hop_lat = 0.0
+    noc_h = topo.noc_hops
+    dest_noc = noc_h[topo.dest] if noc_h else 0.0
+    uniform = topo.hop_latency_uniform
     for src, bits in enumerate(src_bits):
         if src == topo.dest or bits <= 0:
             continue
         path = topo.path_links(src, topo.dest)
         max_hops = max(max_hops, len(path))
+        path_lat = (len(path) * uniform if uniform is not None
+                    else sum(l.hop_latency_s for l in path))
+        if noc_h:
+            pair_hops = noc_h[src] + dest_noc
+            path_lat += pair_hops * topo.noc_hop_latency_s
+            energy += bits * pair_hops * topo.noc_energy_pj_bit
+        hop_lat = max(hop_lat, path_lat)
         for link in path:
             link_bits[link.key()] += bits
             energy += link.energy_pj_bit * bits
@@ -276,5 +316,5 @@ def route_reduction(topo: Topology, src_bits: Sequence[int]) -> D2DResult:
     for key, bits in link_bits.items():
         if bits:
             latency = max(latency, bits / topo.links[key].bw_bits_s)
-    latency += max_hops * HOP_LATENCY_S
+    latency += hop_lat
     return D2DResult(latency, total, link_bits, energy, max_hops)

@@ -24,8 +24,9 @@ from __future__ import annotations
 import dataclasses
 import random
 import warnings
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Tuple
 
+from repro.core import comm as comm_mod
 from repro.core.chiplet import Chiplet
 from repro.core.evaluate import Metrics, evaluate
 from repro.core.scalesim import SimCache
@@ -207,11 +208,18 @@ def _move_chip_arch(sys: HISystem, rng: random.Random, db: TechDB,
         if n2 == n:
             n2 = min(max(n - delta, 1), max_chiplets)
         chips = list(sys.chiplets)
+        noc = list(sys.noc)
         if n2 > n:
             chips.append(random_chiplet(rng, db))
+            if noc:   # new chiplet starts at the neutral single-tile mesh
+                noc.append(comm_mod.NOC_NEUTRAL)
         else:
-            chips.pop(rng.randrange(len(chips)))
-        sys = dataclasses.replace(sys, chiplets=tuple(chips))
+            idx = rng.randrange(len(chips))
+            chips.pop(idx)
+            if noc:
+                noc.pop(idx)
+        sys = dataclasses.replace(sys, chiplets=tuple(chips),
+                                  noc=tuple(noc))
         return _repair_style(sys, rng, db)
     # memory-type move
     mem = rng.choice([m for m in db.memories if m != sys.memory])
@@ -226,6 +234,37 @@ def _move_chiplet(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
         new = random_chiplet(rng, db)
     chips[idx] = new
     return dataclasses.replace(sys, chiplets=tuple(chips))
+
+
+def _move_noc(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
+    """mesh_noc comm-model move: re-draw one chiplet's (mesh dims, entry
+    placement) pair uniformly, excluding the current assignment."""
+    idx = rng.randrange(sys.n_chiplets)
+    cur = sys.noc[idx]
+    while True:
+        cand = (rng.randrange(len(comm_mod.MESH_DIMS)),
+                rng.randrange(len(comm_mod.ENTRY_PLACEMENTS)))
+        if cand != cur:
+            break
+    noc = list(sys.noc)
+    noc[idx] = cand
+    return dataclasses.replace(sys, noc=tuple(noc))
+
+
+def seed_noc(sys: HISystem) -> HISystem:
+    """Attach the neutral per-chiplet NoC assignment to a legacy system.
+
+    Strategies searching a *live* mesh_noc space call this on their
+    random seeds before proposing: ``random_system`` draws no NoC axes
+    (keeping its RNG stream legacy-identical), and :func:`propose` only
+    fires NoC moves on systems that carry them. Neutral = (1x1 mesh,
+    corner entry) per chiplet — zero mesh hops, one router — so the
+    seeded system evaluates bit-identically to its legacy self. No RNG
+    draws."""
+    if sys.noc:
+        return sys
+    return dataclasses.replace(
+        sys, noc=(comm_mod.NOC_NEUTRAL,) * sys.n_chiplets)
 
 
 def _move_package(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
@@ -253,20 +292,29 @@ def _move_package(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
 
 
 def propose(sys: HISystem, rng: random.Random, db: TechDB = DEFAULT_DB,
-            max_chiplets: int = 6, p_application: float = 0.35) -> HISystem:
+            max_chiplets: int = 6, p_application: float = 0.35,
+            noc_moves: bool = False) -> HISystem:
     """Hierarchical move selection: application level first, then one of
-    the lower levels; repair + validity check, retry until valid."""
+    the lower levels; repair + validity check, retry until valid.
+
+    ``noc_moves=True`` (set by strategies searching a *live* mesh_noc
+    :class:`~repro.pathfinding.DesignSpace`) adds the NoC axes as a
+    fourth lower level; the default consumes the exact legacy RNG
+    stream, so legacy and frozen-neutral searches are bit-identical."""
+    n_levels = 4 if (noc_moves and sys.noc) else 3
     for _ in range(64):
         if rng.random() < p_application:
             cand = _move_application(sys, rng, db)
         else:
-            level = rng.randrange(3)
+            level = rng.randrange(n_levels)
             if level == 0:
                 cand = _move_chip_arch(sys, rng, db, max_chiplets)
             elif level == 1:
                 cand = _move_chiplet(sys, rng, db)
-            else:
+            elif level == 2:
                 cand = _move_package(sys, rng, db)
+            else:
+                cand = _move_noc(sys, rng, db)
         if is_valid(cand, db, max_chiplets):
             return cand
     return sys

@@ -16,7 +16,6 @@ the paper's ScaleSim configuration.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 from repro.core.chiplet import Chiplet

@@ -41,6 +41,10 @@ class HISystem:
     proto_3d: Optional[str] = None   # UCIe-3D
     # Indices of chiplets in the 3D stack (hybrid only; 3D uses all).
     stack: Tuple[int, ...] = ()
+    # mesh_noc comm model (repro.core.comm): per-chiplet
+    # (mesh_dims_idx, entry_placement_idx) pairs. Empty = legacy pairwise
+    # links; (0, 0) per chiplet is the bit-neutral single-tile mesh.
+    noc: Tuple[Tuple[int, int], ...] = ()
 
     @property
     def n_chiplets(self) -> int:
@@ -89,6 +93,12 @@ def validate(sys: HISystem, db: TechDB = DEFAULT_DB,
             raise InvalidSystem(f"chiplet {c.name} outside library")
         if c.sram_kb not in db.sram_sizes_kb[c.array]:
             raise InvalidSystem(f"chiplet {c.name} SRAM not in library")
+    if sys.noc:
+        from repro.core.comm import validate_noc
+        try:
+            validate_noc(sys.noc, n)
+        except ValueError as e:
+            raise InvalidSystem(f"bad noc assignment: {e}") from e
 
     if sys.style == "2D":
         if n != 1:

@@ -131,6 +131,13 @@ YIELD_CLUSTER_ALPHA = 2.0          # negative binomial clustering parameter
 # ---------------------------------------------------------------------------
 
 
+# Per-hop switch/PHY latency of a package-level D2D link. The neutral
+# default matches the pre-refactor module constant ``d2d.HOP_LATENCY_S``
+# exactly: with every protocol at this value the routed hop term is
+# computed as ``max_hops * h`` — bit-identical to all pinned goldens.
+DEFAULT_HOP_LATENCY_S = 2.0e-9
+
+
 @dataclasses.dataclass(frozen=True)
 class ProtocolSpec:
     name: str
@@ -138,6 +145,7 @@ class ProtocolSpec:
     efficiency: float          # eta_protocol: payload fraction after framing
     energy_pj_bit: float       # D2D link energy per bit
     max_bump_pitch_um: float   # coarsest pitch the PHY tolerates
+    hop_latency_s: float = DEFAULT_HOP_LATENCY_S   # per-hop switch/PHY
 
 
 PROTOCOLS: Mapping[str, ProtocolSpec] = {
@@ -244,6 +252,11 @@ RCY_MAT_FRAC = 0.0                    # recycled raw-material fraction [0,1]
 RCY_CPA_FRAC = 0.0                    # recycled share of CPA energy [0,1]
 WASTED_DIE_SCALE = 0.0                # gate on per-wafer scrap carbon term
 ROUTER_AREA_FRAC = 0.0                # on-die router share of chiplet area
+# mesh-NoC knobs (repro.core.comm): per-router-hop latency/energy of the
+# on-chiplet mesh. Both are multiplied by the mean NoC hop count, which is
+# exactly 0.0 at the neutral (1, 1) mesh — legacy results never see them.
+NOC_HOP_LATENCY_S = 2.0e-10           # on-die router hop (10x faster than D2D)
+NOC_ENERGY_PJ_BIT = 0.05              # on-die router+wire energy per bit-hop
 
 # Interposer: fabricated at 65nm [3],[45]
 INTERPOSER_NODE_CPA = 0.0125          # kgCO2e/mm^2 at 65nm
@@ -332,6 +345,8 @@ class TechDB:
     rcy_cpa_frac: float = RCY_CPA_FRAC
     wasted_die_scale: float = WASTED_DIE_SCALE
     router_area_frac: float = ROUTER_AREA_FRAC
+    noc_hop_latency_s: float = NOC_HOP_LATENCY_S
+    noc_energy_pj_bit: float = NOC_ENERGY_PJ_BIT
     overrides: Optional[Dict[str, Any]] = None
 
     def __post_init__(self) -> None:
@@ -410,6 +425,15 @@ class TechDB:
     def interposer_yield(self, area_mm2: float) -> float:
         a = self.yield_alpha
         return float((1.0 + area_mm2 * self.interposer_defect / a) ** (-a))
+
+    def uniform_hop_latency(self) -> Optional[float]:
+        """The shared per-hop D2D latency if every protocol agrees, else
+        ``None``. All three evaluator layers use this to pick the
+        bit-pinned ``max_hops * h`` fast path (the default: every stock
+        protocol sits at ``DEFAULT_HOP_LATENCY_S``) over the per-kind
+        weighted sum needed for heterogeneous hop latencies."""
+        lats = {p.hop_latency_s for p in self.protocols.values()}
+        return lats.pop() if len(lats) == 1 else None
 
 
 DEFAULT_DB = TechDB()

@@ -102,8 +102,6 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
                      "generated_code_size_in_bytes"):
             rec[attr] = getattr(mem, attr, None)
         if verbose:
-            per_dev = ((rec.get("argument_size_in_bytes") or 0)
-                       + (rec.get("temp_size_in_bytes") or 0))
             print(f"  memory_analysis: args="
                   f"{(rec['argument_size_in_bytes'] or 0)/2**30:.2f}GiB "
                   f"temp={(rec['temp_size_in_bytes'] or 0)/2**30:.2f}GiB "

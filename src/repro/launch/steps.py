@@ -7,8 +7,7 @@ launcher and the dry-run share one source of truth.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

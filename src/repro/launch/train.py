@@ -15,11 +15,9 @@ machinery over mesh/microbatch plans) and applies its chosen plan.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config

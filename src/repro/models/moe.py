@@ -11,7 +11,7 @@ gather/scatter lower to all-to-alls across it.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,7 @@ Layers are stacked and scanned: HLO size is O(1) in depth, which keeps the
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ ZeRO-1 falls out of sharding the state pytree over 'data'.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

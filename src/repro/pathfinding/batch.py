@@ -34,10 +34,10 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import comm as comm_mod
 from repro.core.carbon import SECONDS_PER_YEAR, effective_intensity
-from repro.core.regions import RegionLike, as_region
+from repro.core.regions import as_region
 from repro.core.chiplet import Chiplet
-from repro.core.d2d import HOP_LATENCY_S
 from repro.core.evaluate import Metrics
 from repro.core.scalesim import OPERAND_BYTES, PSUM_BYTES
 from repro.core.techdb import DEFAULT_DB, TechDB
@@ -305,10 +305,16 @@ class BatchEvaluator:
             proto = db.protocols[proto_name]
             return (pkg.bump_pitch_um, pkg.bonding_yield, pkg.cfp_kg_per_mm2,
                     pkg.cost_scale, proto.data_rate_gbps, proto.efficiency,
-                    proto.energy_pj_bit, pkg_name in ("Passive", "Active"))
+                    proto.energy_pj_bit, pkg_name in ("Passive", "Active"),
+                    proto.hop_latency_s)
 
         self.p25_info = [info(p, pr) for p, pr in self.space.pairs_25d]
         self.p3_info = [info(p, pr) for p, pr in self.space.pairs_3d]
+        # per-pair hop latencies for the heterogeneous-latency hop term
+        # (the uniform default never reads these at runtime)
+        self.p25_hl = np.array([i[8] for i in self.p25_info])
+        self.p3_hl = np.array([i[8] for i in self.p3_info])
+        self.hop_uniform = db.uniform_hop_latency()
 
     def _build_tile_tables(self) -> None:
         """Canonical tile lists (Algorithm 1 lines 1-4) and prefix-sum sim
@@ -394,6 +400,7 @@ class BatchEvaluator:
         de_v: List[float] = []
         ho_c: List[int] = []
         ho_v: List[int] = []
+        ho3_v: List[int] = []   # 3D-kind hops within each source's path
         lkbw: List[float] = []
         lke: List[float] = []
         in_l: List[int] = []
@@ -401,10 +408,10 @@ class BatchEvaluator:
         acost = self.db.assembly_cost
 
         (pitch25, y25, cfp25, scale25, rate25, eta25, ebit25,
-         is_interp) = self.p25_info[p25i]
+         is_interp, _hl25) = self.p25_info[p25i]
         if st == S_HYBRID:
             (pitch3, y3, cfp3, scale3, rate3, eta3, ebit3,
-             _) = self.p3_info[p3i]
+             _, _hl3) = self.p3_info[p3i]
             members = [i for i in range(n) if (stackmask >> i) & 1]
             order3 = sorted(members, key=lambda i: -ar[i])
             base = order3[0]
@@ -448,11 +455,13 @@ class BatchEvaluator:
 
         # 3D chain: face-area bonds, base-die-mediated DRAM (Eqs. 8-10)
         chain_links = []
+        links3 = set()          # link indices of 3D kind (hop-latency split)
         for lo, hi in zip(chain, chain[1:]):
             face = min(ar[lo], ar[hi])
             bw = (rate3 * 1e9
                   * max(1, int(face * 1e6 / (pitch3 * pitch3))) * eta3)
             chain_links.append(bw)
+            links3.add(len(lkbw))
             lidx[(lo, hi) if lo < hi else (hi, lo)] = len(lkbw)
             lkbw.append(bw)
             lke.append(ebit3)
@@ -480,10 +489,12 @@ class BatchEvaluator:
             if d in adj[src]:
                 # direct link: the unique length-1 shortest path, so
                 # BFS tie-breaking cannot matter — skip the search
-                in_l.append(lidx[(src, d) if src < d else (d, src)])
+                li = lidx[(src, d) if src < d else (d, src)]
+                in_l.append(li)
                 in_c.append(src)
                 ho_c.append(src)
                 ho_v.append(1)
+                ho3_v.append(1 if li in links3 else 0)
                 continue
             prev = {src: src}
             queue = [src]
@@ -501,14 +512,18 @@ class BatchEvaluator:
                         queue.append(w)
             node = d
             nh = 0
+            nh3 = 0
             while node != src:
                 u = prev[node]
-                in_l.append(lidx[(u, node) if u < node else (node, u)])
+                li = lidx[(u, node) if u < node else (node, u)]
+                in_l.append(li)
                 in_c.append(src)
                 nh += 1
+                nh3 += 1 if li in links3 else 0
                 node = u
             ho_c.append(src)
             ho_v.append(nh)
+            ho3_v.append(nh3)
 
         # bonding yield, assembly cost, carbon rates (Eqs. 15-16, 2)
         n_attach = len(planar)
@@ -520,7 +535,7 @@ class BatchEvaluator:
             bond_y = bond_y * y3 ** n_bonds
             assembly = assembly + len(chain) * acost * scale3
             p3_bonded = cfp3 * sum(ar[i] for i in chain[1:])
-        return ((bw_c, bw_v), (de_c, de_v), (ho_c, ho_v), (lkbw, lke),
+        return ((bw_c, bw_v), (de_c, de_v), (ho_c, ho_v, ho3_v), (lkbw, lke),
                 (in_l, in_c), bbox, bond_y, assembly, is_interp, cfp25,
                 p3_bonded)
 
@@ -536,6 +551,7 @@ class BatchEvaluator:
         bw_p, bw_c, bw_v = [], [], []          # eff_bw[p, c] = v
         de_p, de_c, de_v = [], [], []          # dram_e[p, c] = v
         ho_p, ho_c, ho_v = [], [], []          # hops[p, c] = v
+        ho3_v = []                             # 3D-kind hops[p, c] = v
         lk_p, lk_l, lk_bw, lk_e = [], [], [], []   # link_bw/link_e[p, l]
         in_p, in_l, in_c = [], [], []          # inc[p, l, c] = 1
 
@@ -587,6 +603,7 @@ class BatchEvaluator:
             ho_p.extend(r3[tr].tolist())
             ho_c.extend(order3[tr, tc + 1].tolist())
             ho_v.extend((tc + 1).tolist())
+            ho3_v.extend((tc + 1).tolist())   # every chain hop is 3D kind
             lk_p.extend(r3[tr].tolist())
             lk_l.extend(tc.tolist())
             lk_bw.extend(cbw[tr, tc].tolist())
@@ -651,6 +668,7 @@ class BatchEvaluator:
             ho_p.extend([p] * len(d_ho[0]))
             ho_c.extend(d_ho[0])
             ho_v.extend(d_ho[1])
+            ho3_v.extend(d_ho[2])
             lk_p.extend([p] * len(d_lk[0]))
             lk_l.extend(range(len(d_lk[0])))
             lk_bw.extend(d_lk[0])
@@ -672,6 +690,8 @@ class BatchEvaluator:
         dram_e[de_p, de_c] = de_v
         hops = np.zeros((P, C), dtype=np.int64)
         hops[ho_p, ho_c] = ho_v
+        hops3 = np.zeros((P, C), dtype=np.int64)
+        hops3[ho_p, ho_c] = ho3_v
         link_bw = np.full((P, MAX_LINKS), np.inf)
         link_bw[lk_p, lk_l] = lk_bw
         link_e = np.zeros((P, MAX_LINKS))
@@ -680,7 +700,8 @@ class BatchEvaluator:
         inc[in_p, in_l, in_c] = 1.0
         assembly = np.asarray(assembly_l)
         assembly[is2d] = acost
-        return dict(eff_bw=eff_bw, dram_e=dram_e, hops=hops, link_bw=link_bw,
+        return dict(eff_bw=eff_bw, dram_e=dram_e, hops=hops, hops3=hops3,
+                    link_bw=link_bw,
                     link_e=link_e, inc=inc, pkg_area=np.asarray(pkg_area_l),
                     bond_y=np.asarray(bond_y_l), assembly=assembly,
                     interp=np.asarray(interp_l),
@@ -711,6 +732,19 @@ class BatchEvaluator:
 
         areas = np.where(nmask, self.t_area[a_idx, t_idx, s_idx], 0.0)
         dest = np.where(nmask, areas, -1.0).argmax(axis=1)
+
+        # mesh_noc comm model: per-slot mean NoC hop counts and physical
+        # router counts, gathered from the closed-form tables by the
+        # encoded (mesh dims, entry placement) columns; neutral (0, 0)
+        # slots contribute exactly 0.0 hops / 1.0 routers
+        mesh_on = sp.comm == "mesh_noc"
+        if mesh_on:
+            nocv = v[:, sp.noc_col:sp.noc_col + 2 * C].reshape(P, C, 2)
+            h_tab, r_tab = comm_mod.noc_tables()
+            mi = np.where(nmask, nocv[:, :, 0], 0)
+            ei = np.where(nmask, nocv[:, :, 1], 0)
+            noc_h = np.where(nmask, h_tab[mi, ei], 0.0)
+            noc_r = np.where(nmask, r_tab[mi], 1.0)
 
         # Algorithm 1 + prefix-sum gathers of the cached simulations
         powers = np.where(nmask, self.t_power[a_idx, t_idx], 0.0)
@@ -760,9 +794,25 @@ class BatchEvaluator:
                 0.0, f8(mn_bits))
             loads = jnp.einsum("plc,pc->pl", f8(topo["inc"]), sbits)
             l_link = jnp.max(loads / f8(topo["link_bw"]), axis=1)
-            max_hops = jnp.max(
-                jnp.where(sbits > 0, f8(topo["hops"]), 0.0), axis=1)
-            l_d2d = l_link + max_hops * HOP_LATENCY_S
+            # per-source hop latency along the reduction path: uniform
+            # per-hop latency collapses to the bit-pinned hops * h; mixed
+            # protocol latencies split the count by link kind
+            if self.hop_uniform is not None:
+                path_lat = f8(topo["hops"]) * self.hop_uniform
+            else:
+                h25 = self.p25_hl[np.maximum(v[:, COL_PAIR25], 0)]
+                h3 = self.p3_hl[np.maximum(v[:, COL_PAIR3], 0)]
+                path_lat = (f8(topo["hops"] - topo["hops3"]) * f8(h25)[:, None]
+                            + f8(topo["hops3"]) * f8(h3)[:, None])
+            if mesh_on:
+                # src + dest chiplets' mean on-die NoC hops per bit
+                noc_hj = f8(noc_h)
+                noc_dest = jnp.take_along_axis(
+                    noc_hj, jnp.asarray(dest)[:, None], axis=1)
+                pair_noc = noc_hj + noc_dest
+                path_lat = path_lat + pair_noc * db.noc_hop_latency_s
+            hop_term = jnp.max(jnp.where(sbits > 0, path_lat, 0.0), axis=1)
+            l_d2d = l_link + hop_term
 
             # Eq. 5 term 3: DRAM write-back (split-K dependent)
             eff_dest = jnp.take_along_axis(
@@ -782,6 +832,10 @@ class BatchEvaluator:
                                 + macs * mac_e, axis=1)
             e_mem_d2d_pj = jnp.sum((rd + wr) * f8(topo["dram_e"]), axis=1)
             e_link_pj = jnp.sum(loads * f8(topo["link_e"]), axis=1)
+            if mesh_on:
+                # traffic-proportional NoC router energy (per bit-hop)
+                e_link_pj = e_link_pj + (jnp.sum(sbits * pair_noc, axis=1)
+                                         * db.noc_energy_pj_bit)
             e_compute_j = e_comp_pj * 1e-12
             e_d2d_j = (e_link_pj + e_mem_d2d_pj) * 1e-12
             static_w = jnp.where(
@@ -809,9 +863,8 @@ class BatchEvaluator:
 
             # embodied + operational CFP (Eqs. 2-3); t_mfg already
             # carries the wasted-die + recycling terms (ECO-CHIP)
-            mfg = jnp.sum(
-                jnp.where(mask, f8(self.t_mfg[a_idx, t_idx, s_idx]), 0.0),
-                axis=1)
+            mfg_pc = jnp.where(mask, f8(self.t_mfg[a_idx, t_idx, s_idx]), 0.0)
+            mfg = jnp.sum(mfg_pc, axis=1)
             des = jnp.sum(jnp.where(mask, jnp.take(f8(self.t_des), t_idx),
                                     0.0), axis=1)
             icfp = jnp.where(
@@ -823,7 +876,14 @@ class BatchEvaluator:
                              + f8(topo["p3_bonded"])) / bond_y
             pkg_cfp = jnp.where(jnp.asarray(topo["is2d"]),
                                 db.substrate_cfp_mm2 * area, pkg_cfp_multi)
-            pkg_cfp = pkg_cfp + db.router_area_frac * mfg
+            if mesh_on:
+                # structure-proportional router carbon: each chiplet's
+                # router share scales with its mesh router count mx*my
+                # (1.0 for the neutral (1,1) mesh -> legacy term exactly).
+                pkg_cfp = pkg_cfp + db.router_area_frac * jnp.sum(
+                    mfg_pc * f8(noc_r), axis=1)
+            else:
+                pkg_cfp = pkg_cfp + db.router_area_frac * mfg
             emb = (mfg + des + pkg_cfp) * db.emb_factor
             eff_ci = effective_intensity(db.carbon_intensity,
                                          db.grid_profile, db.load_profile)
@@ -867,10 +927,15 @@ def evaluator_cache_key(wl: GEMMWorkload, db: TechDB, tile_sizes,
                         space: Optional[DesignSpace]) -> tuple:
     """Key on the *resolved* chiplet bound so space=None and an
     equivalent default DesignSpace share one evaluator (tables + jax
-    warmup)."""
+    warmup). The comm model AND its liveness are part of the key: a
+    mesh_noc space needs a program with the NoC terms compiled in, and a
+    live-NoC space needs the 4-level move program (an env-frozen mesh
+    space must not alias onto it)."""
     return (wl, id(db), tile_sizes,
             space.max_chiplets if space is not None else
-            DEFAULT_MAX_CHIPLETS)
+            DEFAULT_MAX_CHIPLETS,
+            (space.comm, space.noc_live) if space is not None else
+            (comm_mod.resolve_comm(None), False))
 
 
 def cached_evaluator(registry: Dict[tuple, Tuple[TechDB, object]],

@@ -70,8 +70,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import comm as comm_mod
 from repro.core.carbon import SECONDS_PER_YEAR
-from repro.core.d2d import HOP_LATENCY_S
 from repro.core.scalesim import OPERAND_BYTES
 from repro.core.techdb import DEFAULT_DB, HOURS_PER_DAY, TechDB
 from repro.core.templates import Normalizer, Template
@@ -134,6 +134,17 @@ class _Cfg:
     duty_runs_per_s: float
     router_area_frac: float           # NoC share of die mfg carbon -> C_HI
     load_profile: Tuple[float, ...]   # 24h diurnal duty weights (sum 1)
+    comm: str                         # communication model (repro.core.comm)
+    noc_col: int                      # first NoC column (mesh_noc layouts)
+    n_mesh: int                       # len(comm.MESH_DIMS)
+    n_entry: int                      # len(comm.ENTRY_PLACEMENTS)
+    noc_hop_latency_s: float
+    noc_energy_pj_bit: float
+    # shared per-hop package latency when every protocol agrees (the
+    # bit-pinned hops * h form); None switches the hop term to the
+    # per-link-kind split using the p25_hl/p3_hl tables
+    hop_uniform: Optional[float]
+    noc_live: bool                    # NoC axes searchable (not frozen)
     use_pallas: bool
 
 
@@ -426,6 +437,8 @@ def _topology_jax(v, areas, tb, cfg: _Cfg):
     route_on = (~is2d)[:, None] & active & (srcs != dest[:, None])
     node = jnp.broadcast_to(dest[:, None], (P, C)).astype(jnp.int32)
     hops = jnp.zeros((P, C), dtype=jnp.int64)
+    hops3 = jnp.zeros((P, C), dtype=jnp.int64)
+    n_plane = C * (C - 1) // 2  # link ids >= n_plane are 3D chain bonds
     inc_s = jnp.zeros((P, C, L))
     for _ in range(C - 1):
         pu = jnp.take_along_axis(prev, node[..., None], axis=2)[..., 0]
@@ -434,6 +447,8 @@ def _topology_jax(v, areas, tb, cfg: _Cfg):
         inc_s = inc_s + ((jnp.arange(L)[None, None, :] == lk[..., None])
                          & go[..., None]).astype(jnp.float64)
         hops = hops + go
+        if cfg.hop_uniform is None:
+            hops3 = hops3 + (go & (lk >= n_plane))
         node = jnp.where(go, pu, node)
     inc = jnp.swapaxes(inc_s, 1, 2)  # [P, link, src]
 
@@ -458,7 +473,8 @@ def _topology_jax(v, areas, tb, cfg: _Cfg):
     pkg_area = jnp.where(is2d, areas[:, 0],
                          jnp.where(is3d, a_chain[:, 0], bbox))
     return dict(
-        eff_bw=eff_bw, dram_e=dram_e, hops=hops, link_bw=link_bw,
+        eff_bw=eff_bw, dram_e=dram_e, hops=hops, hops3=hops3,
+        link_bw=link_bw,
         link_e=link_e, inc=inc, pkg_area=pkg_area, bond_y=bond_y,
         assembly=assembly, interp=(is25 | ishyb) & interp25,
         p25_rate=jnp.where(is25 | ishyb, cfp25, 0.0),
@@ -594,8 +610,35 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, rt=None):
     sbits = jnp.where(slot[None, :] == dest[:, None], 0.0, f8(mn_bits))
     loads = jnp.einsum("plc,pc->pl", topo["inc"], sbits)
     l_link = jnp.max(loads / topo["link_bw"], axis=1)
-    max_hops = jnp.max(jnp.where(sbits > 0, f8(topo["hops"]), 0.0), axis=1)
-    l_d2d = l_link + max_hops * HOP_LATENCY_S
+    # per-source path latency: package hops x per-hop latency. With a
+    # uniform hop latency the product commutes with the masked max
+    # bit-exactly (h > 0 is monotone and the winning element is the
+    # same), so the legacy hops * HOP_LATENCY_S program is reproduced
+    # verbatim; heterogeneous protocol latencies split the hop count by
+    # link kind (2.5D plane vs 3D bond) instead.
+    mesh_on = cfg.comm == "mesh_noc"
+    if mesh_on:
+        nocv = v[:, cfg.noc_col:cfg.noc_col + 2 * C].reshape(P, C, 2)
+        mi = jnp.where(nmask, nocv[:, :, 0], 0)
+        ei = jnp.where(nmask, nocv[:, :, 1], 0)
+        noc_h = jnp.where(nmask, tb["noc_hops"][mi, ei], 0.0)
+        noc_r = jnp.where(nmask, tb["noc_routers"][mi], 1.0)
+    if cfg.hop_uniform is not None:
+        path_lat = f8(topo["hops"]) * cfg.hop_uniform
+    else:
+        h25 = tb["p25_hl"][jnp.maximum(v[:, COL_PAIR25], 0)]
+        h3 = tb["p3_hl"][jnp.maximum(v[:, COL_PAIR3], 0)]
+        path_lat = (f8(topo["hops"] - topo["hops3"]) * h25[:, None]
+                    + f8(topo["hops3"]) * h3[:, None])
+    if mesh_on:
+        # on-chiplet mesh traversal: source egress + destination ingress
+        # mean hop counts (closed-form Manhattan distances to the NoI
+        # entry router), per NoC hop latency
+        noc_dest = jnp.take_along_axis(noc_h, dest[:, None], axis=1)
+        pair_noc = noc_h + noc_dest
+        path_lat = path_lat + pair_noc * cfg.noc_hop_latency_s
+    hop_term = jnp.max(jnp.where(sbits > 0, path_lat, 0.0), axis=1)
+    l_d2d = l_link + hop_term
 
     # Eq. 5 term 3: DRAM write-back (split-K dependent)
     eff_dest = jnp.take_along_axis(eff_bw, dest[:, None], axis=1)[:, 0]
@@ -616,6 +659,10 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, rt=None):
                         + macs * mac_e, axis=1)
     e_mem_d2d_pj = jnp.sum((rd + wr) * topo["dram_e"], axis=1)
     e_link_pj = jnp.sum(loads * topo["link_e"], axis=1)
+    if mesh_on:
+        # NoC traversal energy: routed reduction bits x mesh hops x pJ/bit
+        e_link_pj = e_link_pj + (jnp.sum(sbits * pair_noc, axis=1)
+                                 * cfg.noc_energy_pj_bit)
     e_compute_j = e_comp_pj * 1e-12
     e_d2d_j = (e_link_pj + e_mem_d2d_pj) * 1e-12
     static_w = jnp.where(mask, cphys[:, :, 1], 0.0)
@@ -634,7 +681,8 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, rt=None):
               + energy * runs / 3.6e6 * price)
 
     # embodied + operational CFP (Eqs. 2-3)
-    mfg = jnp.sum(jnp.where(mask, cphys[:, :, 3], 0.0), axis=1)
+    mfg_pc = jnp.where(mask, cphys[:, :, 3], 0.0)
+    mfg = jnp.sum(mfg_pc, axis=1)
     des = jnp.sum(jnp.where(mask, nphys[:, :, 3], 0.0), axis=1)
     icfp = jnp.where(
         topo["interp"],
@@ -645,7 +693,13 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, rt=None):
                      + topo["p3_bonded"]) / bond_y
     pkg_cfp = jnp.where(topo["is2d"], cfg.substrate_cfp_mm2 * area,
                         pkg_cfp_multi)
-    pkg_cfp = pkg_cfp + cfg.router_area_frac * mfg
+    if mesh_on:
+        # router carbon scales with each die's physical router count
+        # (mx * my) instead of the flat per-die share
+        pkg_cfp = pkg_cfp + cfg.router_area_frac * jnp.sum(
+            mfg_pc * noc_r, axis=1)
+    else:
+        pkg_cfp = pkg_cfp + cfg.router_area_frac * mfg
     emb = (mfg + des + pkg_cfp) * embf
     load = jnp.asarray(cfg.load_profile, dtype=jnp.float64)
     eff_ci = ci + jnp.sum((profile - ci) * load, axis=-1)
@@ -719,6 +773,12 @@ def _validity_jax(v, tb, cfg: _Cfg):
     chip_ok = (a_ok & (t >= 0) & (t < cfg.T_nodes) & (s >= 0)
                & (s < tb["n_sram"][jnp.where(a_ok, a, 0)]))
     ok &= jnp.all(chip_ok | ~active, axis=1)
+    if cfg.comm == "mesh_noc":
+        nocv = v[:, cfg.noc_col:cfg.noc_col + 2 * C].reshape(-1, C, 2)
+        mi, ei = nocv[:, :, 0], nocv[:, :, 1]
+        noc_ok = ((mi >= 0) & (mi < cfg.n_mesh)
+                  & (ei >= 0) & (ei < cfg.n_entry))
+        ok &= jnp.all(noc_ok | ~active, axis=1)
     pc = _popcount(stck, C)
     no3d, no25, nostk = p3 == -1, p25 == -1, stck == 0
     has25 = (p25 >= 0) & (p25 < cfg.n_pairs25)
@@ -733,20 +793,29 @@ def _validity_jax(v, tb, cfg: _Cfg):
     return ok
 
 
-def _propose_jax(key, v, tb, cfg: _Cfg):
+def _propose_jax(key, v, tb, cfg: _Cfg, noc_on=None):
     """One hierarchical move per encoded row, mirroring the level/branch
     distribution of :func:`repro.core.sa.propose` with ``jax.random``.
 
     Chiplet redraw-until-different uses two resamples instead of an
     unbounded loop (residual collision probability ~ (1/80)^3); rows whose
     candidate fails validity keep the incumbent (the batched rendering of
-    the scalar retry loop)."""
+    the scalar retry loop).
+
+    Under the mesh_noc comm model a fourth move level redraws one
+    chiplet's (mesh dims, entry placement) pair, fed by a ``fold_in``
+    side-stream so the base draw matrix — and with it every legacy
+    move's randomness — is untouched. ``noc_on`` (0.0/1.0, traced
+    scalar) widens the level draw to include it; ``None`` falls back to
+    the static ``cfg.noc_live`` (frozen mesh spaces keep the exact
+    3-level legacy distribution)."""
     import jax
     import jax.numpy as jnp
 
     C = cfg.C
     P = v.shape[0]
     slot = jnp.arange(C, dtype=jnp.int32)
+    mesh = cfg.comm == "mesh_noc"
     # one threefry pass supplies every draw of the sweep: row i is the
     # i-th logical random stream (uniform ints come from floor(u * m))
     U = jax.random.uniform(key, (31 + C, P), dtype=jnp.float64)
@@ -797,7 +866,7 @@ def _propose_jax(key, v, tb, cfg: _Cfg):
                         draw_chiplet(ia, it, iu), new)
     chip_rep = jnp.where(slot[None, :, None] == r_rep[:, None, None],
                          new[:, None, :], chip)
-    cand_rep = v.at[:, COL_CHIP:].set(
+    cand_rep = v.at[:, COL_CHIP:COL_CHIP + 3 * C].set(
         chip_rep.reshape(P, -1).astype(jnp.int32))
 
     # -- chip-architecture: grow / shrink + dynamic HI-type repair ----------
@@ -844,8 +913,25 @@ def _propose_jax(key, v, tb, cfg: _Cfg):
                        jnp.where(bad, mask_new, keep), 0)
     head = jnp.stack([n2, style2, mem, order, df, sk, p25_2, p3_2, stack2],
                      axis=1)
-    cand_gs = jnp.concatenate(
-        [head, chip_gs.reshape(P, -1)], axis=1).astype(jnp.int32)
+    if mesh:
+        # mirror the chiplet-slot shift/append on the NoC columns: grown
+        # slots seed the neutral (1x1, corner) = (0, 0) pair — exactly
+        # sa._move_chip_arch's NOC_NEUTRAL append
+        noc = v[:, cfg.noc_col:cfg.noc_col + 2 * C].reshape(P, C, 2)
+        noc_shr = jnp.take_along_axis(
+            noc, jnp.broadcast_to(idx_shift[:, :, None], (P, C, 2)),
+            axis=1)
+        noc_grow = jnp.where(slot[None, :, None] == n[:, None, None],
+                             0, noc)
+        noc_gs = jnp.where(grow[:, None, None], noc_grow, noc_shr)
+        noc_gs = jnp.where((slot[None, :] < n2[:, None])[:, :, None],
+                           noc_gs, -1)
+        cand_gs = jnp.concatenate(
+            [head, chip_gs.reshape(P, -1), noc_gs.reshape(P, -1)],
+            axis=1).astype(jnp.int32)
+    else:
+        cand_gs = jnp.concatenate(
+            [head, chip_gs.reshape(P, -1)], axis=1).astype(jnp.int32)
 
     # -- package level ------------------------------------------------------
     cur_pkg25 = tb["pair25_pkg"][jnp.maximum(p25, 0)]
@@ -882,15 +968,51 @@ def _propose_jax(key, v, tb, cfg: _Cfg):
                       jnp.where(sel_proto25, proto25_res, p25)))
         .at[:, COL_PAIR3].set(jnp.where(sel_pkg3, pkg3_res, p3)))
 
+    # -- NoC level: redraw one chiplet's (mesh dims, entry) pair ------------
+    if mesh:
+        # side-stream so the base U matrix (= the legacy draw stream) is
+        # byte-identical whether or not NoC moves are enabled
+        Un = jax.random.uniform(jax.random.fold_in(key, 7), (5, P),
+                                dtype=jnp.float64)
+        r_noc = jnp.floor(Un[0] * n.astype(jnp.float64)).astype(jnp.int32)
+
+        def draw_noc(im, ie):
+            m_ = jnp.floor(Un[im] * cfg.n_mesh).astype(jnp.int32)
+            e_ = jnp.floor(Un[ie] * cfg.n_entry).astype(jnp.int32)
+            return jnp.stack([m_, e_], axis=1)
+
+        old_noc = jnp.take_along_axis(
+            noc, jnp.broadcast_to(r_noc[:, None, None], (P, 1, 2)),
+            axis=1)[:, 0]
+        new_noc = draw_noc(1, 2)
+        new_noc = jnp.where(jnp.all(new_noc == old_noc, axis=1)[:, None],
+                            draw_noc(3, 4), new_noc)
+        noc_mv = jnp.where(slot[None, :, None] == r_noc[:, None, None],
+                           new_noc[:, None, :], noc)
+        cand_noc = v.at[:, cfg.noc_col:cfg.noc_col + 2 * C].set(
+            noc_mv.reshape(P, -1).astype(jnp.int32))
+
     # -- hierarchical branch selection + validity gate ----------------------
     is_app = uni(28) < P_APPLICATION
-    level = ri(29, 3)
     coin = uni(30)
+    if mesh:
+        # noc_on in {0.0, 1.0} widens the uniform level draw from 3 to 4
+        # options as runtime data: floor(u * 3.0) == the legacy ri(29, 3)
+        # exactly, so frozen-NoC cells replay the 3-level distribution
+        noc_on_f = (noc_on if noc_on is not None
+                    else (1.0 if cfg.noc_live else 0.0))
+        level = jnp.floor(U[29] * (3.0 + noc_on_f)).astype(jnp.int32)
+        lower = jnp.where(
+            (level == 1)[:, None], cand_rep,
+            jnp.where((level == 2)[:, None], cand_pkg, cand_noc))
+    else:
+        level = ri(29, 3)
+        lower = jnp.where((level == 1)[:, None], cand_rep, cand_pkg)
     cand = jnp.where(
         is_app[:, None], cand_app,
         jnp.where((level == 0)[:, None],
                   jnp.where((coin < 0.5)[:, None], cand_gs, cand_mem),
-                  jnp.where((level == 1)[:, None], cand_rep, cand_pkg)))
+                  lower))
     ok = _validity_jax(cand, tb, cfg)
     return jnp.where(ok[:, None], cand, v).astype(jnp.int32)
 
@@ -1009,6 +1131,14 @@ def _base_cfg(sp: DesignSpace, db: TechDB, T0: int, T1: int,
         duty_runs_per_s=db.duty_runs_per_s,
         router_area_frac=db.router_area_frac,
         load_profile=tuple(db.load_profile),
+        comm=sp.comm,
+        noc_col=sp.noc_col,
+        n_mesh=len(comm_mod.MESH_DIMS),
+        n_entry=len(comm_mod.ENTRY_PLACEMENTS),
+        noc_hop_latency_s=db.noc_hop_latency_s,
+        noc_energy_pj_bit=db.noc_energy_pj_bit,
+        hop_uniform=db.uniform_hop_latency(),
+        noc_live=sp.noc_live,
         use_pallas=use_pallas,
     )
 
@@ -1022,6 +1152,7 @@ def _shared_tables(host, sp: DesignSpace) -> dict:
     import jax.numpy as jnp
 
     mt = sp.move_tables()
+    noc_h, noc_r = comm_mod.noc_tables()
     return dict(
         # per-chiplet physicals / node rates / memory energies are
         # stacked along a trailing axis: one gather per site
@@ -1038,6 +1169,13 @@ def _shared_tables(host, sp: DesignSpace) -> dict:
         p25=jnp.asarray([i[:7] for i in host.p25_info]),
         p25_interp=jnp.asarray([i[7] for i in host.p25_info]),
         p3=jnp.asarray([i[:7] for i in host.p3_info]),
+        # per-pair hop latencies (the heterogeneous-latency hop split)
+        # and the closed-form mesh-NoC lookup tables — tiny constants,
+        # carried unconditionally; legacy programs never gather them
+        p25_hl=jnp.asarray(host.p25_hl),
+        p3_hl=jnp.asarray(host.p3_hl),
+        noc_hops=jnp.asarray(noc_h),
+        noc_routers=jnp.asarray(noc_r),
         n_sram=jnp.asarray(sp.n_sram),
         **{k: jnp.asarray(a) for k, a in mt.items()},
     )
@@ -1465,12 +1603,18 @@ class DeviceEvaluator:
             fp = None
             carry_like = None
             if checkpoint is not None:
+                extra = {}
+                if self.cfg.comm != "legacy":
+                    # non-legacy comm reshapes the encoding + the fused
+                    # program: pre-NoC checkpoints must mismatch cleanly
+                    extra["comm"] = np.frombuffer(
+                        self.cfg.comm.encode(), dtype=np.uint8)
                 fp = segment_fingerprint(
                     "device_pt", v0=v0, temps=temps_np,
                     swap_every=swap_every, seed=seed, mins=mins,
                     medians=medians, weights=w, pair_mask=pair_ok, ci=ci,
                     segment=segment, collect=collect_samples,
-                    price=price, embf=embf, profile=profile)
+                    price=price, embf=embf, profile=profile, **extra)
                 carry_like = dict(
                     v=np.zeros((n, width), np.int32),
                     costs=np.zeros(n, np.float64),
@@ -1872,12 +2016,14 @@ class ScenarioEngine:
 
         tb, cfg = self.tables, self.cfg
         eval_cell = self._eval_cell_fn()
+        mesh_comm = cfg.comm == "mesh_noc"
 
         def cell_step(key_s, v_s, costs_s, temps_s, inv_s, mins_s, med_s,
                       w_s, pair_s, ci_s, price_s, embf_s, profile_s, wi,
-                      sweep):
+                      noc_s, sweep):
             key_s, kp, ka, ksw = jax.random.split(key_s, 4)
-            prop = _propose_jax(kp, v_s, tb, cfg)
+            prop = _propose_jax(kp, v_s, tb, cfg,
+                                noc_on=noc_s if mesh_comm else None)
             pcost, pvec = eval_cell(prop, mins_s, med_s, w_s, ci_s,
                                     price_s, embf_s, profile_s, wi)
             u = jax.random.uniform(ka, (n,), dtype=jnp.float64)
@@ -1899,14 +2045,16 @@ class ScenarioEngine:
                 lambda vc: vc, (v_s, costs_s))
             return key_s, v_s, costs_s, cand_v, cand_c, prop, pvec
 
-        def run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps, mins,
-                med, w, pair_ok, ci, price, embf, profile, widx):
+        def _run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps, mins,
+                 med, w, pair_ok, ci, price, embf, profile, widx, noc_on):
             # ``sweep0`` is a per-cell [S] vector of job-local sweep
             # counters: every cell keeps its own swap schedule, so a
             # serving job that joins the batch mid-stream sees the same
             # sweep indices it would solo. Lockstep callers pass
             # ``done * ones(S)`` and get the exact pre-vector program
             # semantics (the swap cond is per-lane either way).
+            # ``noc_on`` is the per-cell [S] NoC-move gate (mesh_noc
+            # engines only; a dead input elsewhere).
             _count_trace("scenario_pt")
             inv_t = 1.0 / temps
 
@@ -1914,9 +2062,9 @@ class ScenarioEngine:
                 v, costs, best_v, best_c, keys = carry
                 keys, v, costs, cand_v, cand_c, prop, pvec = jax.vmap(
                     cell_step,
-                    in_axes=(0,) * 15,
+                    in_axes=(0,) * 16,
                 )(keys, v, costs, temps, inv_t, mins, med, w, pair_ok,
-                  ci, price, embf, profile, widx, sweep0 + t)
+                  ci, price, embf, profile, widx, noc_on, sweep0 + t)
                 better = cand_c < best_c
                 best_c = jnp.where(better, cand_c, best_c)
                 best_v = jnp.where(better[:, None], cand_v, best_v)
@@ -1929,6 +2077,20 @@ class ScenarioEngine:
                 body, (v0, costs0, best_v0, best_c0, keys0),
                 jnp.arange(seg))
             return carry, ys
+
+        if mesh_comm:
+            run = _run
+        else:
+            # the legacy signature stays exactly 16 positional args (the
+            # serving layer's replay contract); the zero noc column is a
+            # dead input the compiler strips, so the emitted program is
+            # bit-identical to the pre-NoC one
+            def run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps,
+                    mins, med, w, pair_ok, ci, price, embf, profile,
+                    widx):
+                return _run(v0, costs0, best_v0, best_c0, keys0, sweep0,
+                            temps, mins, med, w, pair_ok, ci, price,
+                            embf, profile, widx, jnp.zeros_like(ci))
 
         fn = jax.jit(run)
         self._fn_cache[key_t] = fn
@@ -1946,7 +2108,8 @@ class ScenarioEngine:
         profile, widx)`` — ``price``/``embf`` are the per-cell [S]
         regional price and embodied-factor columns and ``profile`` the
         [S, 24] grid-intensity rows (neutral cells pass 0.0 / 1.0 /
-        flat-at-ci) — where
+        flat-at-ci); mesh_noc engines take one extra trailing ``noc_on``
+        [S] column (0.0/1.0 per-cell NoC-move gates) — where
         ``sweep0`` is the per-cell [S] vector of job-local sweep
         counters; calling it twice with the same static shape tuple
         reuses the cached jit program (``trace_count("scenario_pt")``
@@ -1958,6 +2121,7 @@ class ScenarioEngine:
                            swap_every: int, seed: int, mins, medians,
                            weights, pair_mask, ci, widx,
                            price=None, embf=None, profile=None,
+                           noc_on=None,
                            collect_samples: bool = True,
                            mesh=None, segment: Optional[int] = None,
                            checkpoint=None, resume: bool = True,
@@ -1977,6 +2141,10 @@ class ScenarioEngine:
         legacy scalar-CI grids compile and run the exact same program —
         the columns are always part of the jitted signature and
         ``trace_count("scenario_pt")`` stays flat across axis mixes.
+        ``noc_on`` ([S], mesh_noc engines only) gates the per-cell NoC
+        move level as runtime data (default: all-on for live-NoC
+        spaces, all-off for frozen ones), so mixed legacy-replay and
+        NoC-searching cells share one compile.
         ``mesh`` (optional) shards the scenario axis.
 
         ``segment``/``checkpoint``/``resume``/``archives`` mirror
@@ -2017,6 +2185,16 @@ class ScenarioEngine:
             ci_a = np.asarray(ci, np.float64).reshape(S)
             price_a, embf_a, profile_a = self._region_cols(
                 S, ci_a, price, embf, profile)
+            mesh_comm = self.cfg.comm == "mesh_noc"
+            noc_a = None
+            if mesh_comm:
+                noc_a = (np.full(
+                    S, 1.0 if self.space.noc_live else 0.0, np.float64)
+                    if noc_on is None
+                    else np.asarray(noc_on, np.float64).reshape(S))
+            elif noc_on is not None:
+                raise ValueError(
+                    "noc_on is only meaningful for mesh_noc engines")
             arrays = dict(
                 v0=v0,
                 temps=np.asarray(temps, np.float64).reshape(S, n),
@@ -2031,6 +2209,8 @@ class ScenarioEngine:
                 profile=profile_a,
                 widx=widx_a,
             )
+            if mesh_comm:
+                arrays["noc_on"] = noc_a
             if mesh is not None:
                 from repro.distributed.sharding import shard_scenarios
 
@@ -2043,6 +2223,8 @@ class ScenarioEngine:
                     jnp.asarray(arrays["embf"]),
                     jnp.asarray(arrays["profile"]),
                     jnp.asarray(arrays["widx"]))
+            if mesh_comm:
+                args = args + (jnp.asarray(arrays["noc_on"]),)
 
             from repro.pathfinding.resume import (
                 run_segmented,
@@ -2053,6 +2235,13 @@ class ScenarioEngine:
             carry_like = None
             if checkpoint is not None:
                 key_np = _key_to_np(key0)
+                extra = {}
+                if self.cfg.comm != "legacy":
+                    # non-legacy comm reshapes the encoding + the fused
+                    # program: pre-NoC checkpoints must mismatch cleanly
+                    extra["comm"] = np.frombuffer(
+                        self.cfg.comm.encode(), dtype=np.uint8)
+                    extra["noc_on"] = noc_a
                 fp = segment_fingerprint(
                     "scenario_pt", v0=v0, temps=arrays["temps"],
                     swap_every=swap_every, seed=seed,
@@ -2060,7 +2249,8 @@ class ScenarioEngine:
                     weights=arrays["w"], pair_mask=arrays["pair_ok"],
                     ci=arrays["ci"], segment=segment,
                     collect=collect_samples, widx=widx_a,
-                    price=price_a, embf=embf_a, profile=profile_a)
+                    price=price_a, embf=embf_a, profile=profile_a,
+                    **extra)
                 carry_like = dict(
                     v=np.zeros((S, n, width), np.int32),
                     costs=np.zeros((S, n), np.float64),
@@ -2207,7 +2397,9 @@ def get_scenario_engine(workloads: Sequence[GEMMWorkload],
     key = (tuple(workloads), id(db), tile_sizes,
            space.max_chiplets if space is not None else
            DEFAULT_MAX_CHIPLETS, use_pallas,
-           tuple(db.load_profile), db.router_area_frac)
+           tuple(db.load_profile), db.router_area_frac,
+           (space.comm, space.noc_live) if space is not None else
+           (comm_mod.resolve_comm(None), False))
     return cached_evaluator(
         _SCENARIO_ENGINES, key, db,
         lambda: ScenarioEngine(workloads, db, tile_sizes, space,

@@ -753,6 +753,10 @@ class ScenarioSweep:
     norm_samples: int = 400
     norm_seed: int = 1234
     shard: Union[bool, str] = "auto"
+    # communication model of the searched DesignSpace (None = the
+    # REPRO_COMM_MODEL-resolved default; "mesh_noc" adds the per-chiplet
+    # mesh-dims / NoI-entry axes to every cell's search)
+    comm: Optional[str] = None
 
     def run(self, workloads: Union[GEMMWorkload, Sequence[GEMMWorkload]],
             template: Union[str, Template] = "T1",
@@ -819,7 +823,7 @@ class ScenarioSweep:
                     f"population {nc} ({k} directions x {strat.n_chains} "
                     f"chains); total budget must be >= "
                     f"{nc * len(cells)}")
-        space = DesignSpace(db)
+        space = DesignSpace(db, comm=self.comm)
         norm_of: Dict[Tuple[int, str], object] = {}
         for wi, wl in enumerate(workloads):
             fitted = fit_region_normalizers(
@@ -839,7 +843,8 @@ class ScenarioSweep:
         for idx, (wi, wl, region, reg) in enumerate(cells):
             db_s = dataclasses.replace(db, **reg.db_overrides())
             pf = Pathfinder(wl, tpl, db=db_s, device=False,
-                            norm=norm_of[(wi, region)])
+                            norm=norm_of[(wi, region)],
+                            space=DesignSpace(db_s, comm=self.comm))
             res = pf.search(strategy=self.strategy, budget=cell_budget,
                             key=fold_cell_key(base, idx))
             sc = Scenario(wl, region, reg.carbon_intensity, reg)

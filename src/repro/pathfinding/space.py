@@ -16,6 +16,22 @@ Vector layout (one row per system, width ``9 + 3 * max_chiplets``)::
     [9 + 3i .. 11 + 3i] per-chiplet (array_idx, node_idx, sram_idx)
                         for i < n_chiplets; -1 padding beyond.
 
+Under ``comm="mesh_noc"`` (see :mod:`repro.core.comm`) the row grows two
+per-chiplet NoC columns appended after the chiplet block (total width
+``9 + 5 * max_chiplets``)::
+
+    [noc_col + 2i]      mesh_dims_idx  (index into comm.MESH_DIMS)
+    [noc_col + 2i + 1]  entry_idx      (index into comm.ENTRY_PLACEMENTS)
+                        for i < n_chiplets; -1 padding beyond.
+
+Legacy vectors round-trip unchanged: the NoC columns exist only when the
+space's ``comm`` resolves to ``mesh_noc``. When the mesh model is forced
+through the ``REPRO_COMM_MODEL`` env var (rather than requested
+explicitly), the axes are *frozen* at the bit-neutral ``(0, 0)`` mesh —
+sampling fills neutral values without consuming RNG draws and move
+generators skip NoC moves — so legacy searches replay identically
+through the mesh program.
+
 ``encode``/``decode`` round-trip exactly for every valid system (the
 stack tuple is canonicalized to sorted order, which is what the SA move
 generator produces anyway).
@@ -23,10 +39,11 @@ generator produces anyway).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core import comm as comm_mod
 from repro.core.chiplet import Chiplet
 from repro.core.system import HISystem, is_valid
 from repro.core.techdb import (
@@ -59,10 +76,21 @@ class DesignSpace:
 
     db: TechDB = DEFAULT_DB
     max_chiplets: int = DEFAULT_MAX_CHIPLETS
+    # Communication model ("legacy" | "mesh_noc"). None resolves through
+    # the REPRO_COMM_MODEL env var (default "legacy"). An env-forced
+    # mesh_noc keeps the NoC axes *frozen* at the neutral mesh
+    # (noc_live False): legacy searches replay bit-identically through
+    # the mesh program. Passing comm="mesh_noc" explicitly makes the
+    # axes live search dimensions.
+    comm: Optional[str] = None
 
     def __post_init__(self):
         db = self.db
         set_ = object.__setattr__
+        explicit = self.comm
+        set_(self, "comm", comm_mod.resolve_comm(explicit))
+        set_(self, "noc_live",
+             self.comm == "mesh_noc" and explicit == "mesh_noc")
         set_(self, "arrays", tuple(db.array_sizes))
         set_(self, "nodes", tuple(db.tech_nodes))
         set_(self, "memories", tuple(db.memories))
@@ -154,11 +182,23 @@ class DesignSpace:
 
     @property
     def width(self) -> int:
+        w = COL_CHIP + 3 * self.max_chiplets
+        if self.comm == "mesh_noc":
+            w += 2 * self.max_chiplets
+        return w
+
+    @property
+    def noc_col(self) -> int:
+        """First NoC column (mesh_noc spaces only)."""
         return COL_CHIP + 3 * self.max_chiplets
 
     def chip_cols(self, i: int):
         base = COL_CHIP + 3 * i
         return base, base + 1, base + 2
+
+    def noc_cols(self, i: int):
+        base = self.noc_col + 2 * i
+        return base, base + 1
 
     def chiplet_choices(self) -> int:
         """Distinct chiplets in the library (Table II: 80 by default)."""
@@ -197,6 +237,11 @@ class DesignSpace:
             hi[ca] = len(self.arrays) - 1
             hi[ct] = len(self.nodes) - 1
             hi[cs] = n_sram_max - 1
+        if self.comm == "mesh_noc":
+            for i in range(self.max_chiplets):
+                cm, ce = self.noc_cols(i)
+                hi[cm] = len(comm_mod.MESH_DIMS) - 1
+                hi[ce] = len(comm_mod.ENTRY_PLACEMENTS) - 1
         return lo, hi
 
     # -- encode / decode ----------------------------------------------------
@@ -224,6 +269,16 @@ class DesignSpace:
             vec[ca] = self.array_index[c.array]
             vec[ct] = self.node_index[c.node]
             vec[cs] = self.sram_index[c.array][c.sram_kb]
+        if self.comm == "mesh_noc":
+            noc = sys.noc or (comm_mod.NOC_NEUTRAL,) * n
+            for i, (mi, ei) in enumerate(noc):
+                cm, ce = self.noc_cols(i)
+                vec[cm] = mi
+                vec[ce] = ei
+        elif sys.noc:
+            raise ValueError(
+                "system carries NoC assignments but the space is "
+                "comm='legacy'; build the DesignSpace with comm='mesh_noc'")
         return vec
 
     def encode_many(self, systems: Sequence[HISystem]) -> np.ndarray:
@@ -249,6 +304,11 @@ class DesignSpace:
             pkg3, proto3 = self.pairs_3d[int(vec[COL_PAIR3])]
         mask = int(vec[COL_STACK])
         stack = tuple(i for i in range(n) if (mask >> i) & 1)
+        noc = ()
+        if self.comm == "mesh_noc":
+            noc = tuple((int(vec[self.noc_col + 2 * i]),
+                         int(vec[self.noc_col + 2 * i + 1]))
+                        for i in range(n))
         return HISystem(
             chiplets=tuple(chips),
             style=style,
@@ -259,6 +319,7 @@ class DesignSpace:
             pkg_25d=pkg25, proto_25d=proto25,
             pkg_3d=pkg3, proto_3d=proto3,
             stack=stack,
+            noc=noc,
         )
 
     def decode_many(self, batch: np.ndarray) -> List[HISystem]:
@@ -288,6 +349,14 @@ class DesignSpace:
             chip_ok = (a_ok & (t >= 0) & (t < len(self.nodes)) & (s >= 0)
                        & (s < self.n_sram[np.where(a_ok, a, 0)]))
             ok &= np.where(active, chip_ok, True)
+
+        if self.comm == "mesh_noc":
+            for i in range(self.max_chiplets):
+                cm, ce = self.noc_cols(i)
+                m, e = v[:, cm], v[:, ce]
+                noc_ok = ((m >= 0) & (m < len(comm_mod.MESH_DIMS))
+                          & (e >= 0) & (e < len(comm_mod.ENTRY_PLACEMENTS)))
+                ok &= np.where(i < n, noc_ok, True)
 
         popcount = sum((stack >> i) & 1 for i in range(self.max_chiplets))
         no3d, no25d, nostack = p3 == -1, p25 == -1, stack == 0
@@ -365,6 +434,22 @@ class DesignSpace:
         member = (ranks < size[:, None]).astype(np.int64)
         mask = (member << np.arange(C)[None, :]).sum(axis=1)
         v[:, COL_STACK] = np.where(hyb, mask, 0)
+
+        if self.comm == "mesh_noc":
+            if self.noc_live:
+                # live axes: uniform (mesh_dims, entry) per active slot
+                m = rng.integers(0, len(comm_mod.MESH_DIMS), (count, C))
+                e = rng.integers(0, len(comm_mod.ENTRY_PLACEMENTS),
+                                 (count, C))
+            else:
+                # frozen (env-forced) axes: neutral mesh, no RNG draws,
+                # so the legacy sampling stream is untouched
+                m = np.zeros((count, C), dtype=np.int64)
+                e = np.zeros((count, C), dtype=np.int64)
+            for i in range(C):
+                cm, ce = self.noc_cols(i)
+                v[:, cm] = np.where(active[:, i], m[:, i], -1)
+                v[:, ce] = np.where(active[:, i], e[:, i], -1)
         return v
 
     @staticmethod

@@ -268,7 +268,7 @@ class SimulatedAnnealing:
     def search(self, space: DesignSpace, objective: Objective,
                budget: Optional[int] = None,
                key: Optional[int] = None) -> SearchResult:
-        from repro.core.sa import SAConfig, propose, random_system
+        from repro.core.sa import SAConfig, propose, random_system, seed_noc
         from repro.pathfinding.pareto import FrontierFeed
 
         _check_budget(budget)
@@ -280,6 +280,8 @@ class SimulatedAnnealing:
         collect = feed.archive is not None
 
         cur = self.initial or random_system(rng, db, cfg.max_chiplets)
+        if space.noc_live:
+            cur = seed_noc(cur)
         cur_m = objective.evaluate(cur)
         cur_c = objective.cost(cur_m)
         if collect:
@@ -293,7 +295,8 @@ class SimulatedAnnealing:
             for _ in range(cfg.moves_per_temp):
                 if budget is not None and evals >= budget:
                     break
-                cand = propose(cur, rng, db, cfg.max_chiplets)
+                cand = propose(cur, rng, db, cfg.max_chiplets,
+                               noc_moves=space.noc_live)
                 if cand is cur:
                     continue
                 m = objective.evaluate(cand)
@@ -372,6 +375,10 @@ class ParallelTempering:
 
         chains = [random_system(rng, db, space.max_chiplets)
                   for _ in range(n)]
+        if space.noc_live:
+            from repro.core.sa import seed_noc
+
+            chains = [seed_noc(s) for s in chains]
         if objective.device:
             return self._search_device(space, objective, budget, key,
                                        chains, temps)
@@ -391,7 +398,8 @@ class ParallelTempering:
             k = n if budget is None else min(n, budget - evals)
             if k <= 0:
                 break
-            cands = [propose(chains[i], rng, db, space.max_chiplets)
+            cands = [propose(chains[i], rng, db, space.max_chiplets,
+                             noc_moves=space.noc_live)
                      for i in range(k)]
             enc = space.encode_many(cands)
             mb = objective.evaluate_encoded(enc, space)

@@ -22,7 +22,7 @@ import collections
 import dataclasses
 import statistics
 import time
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, List, Optional
 
 import numpy as np
 

@@ -95,6 +95,11 @@ class JobSpec:
     grid_profile: Optional[Tuple[float, ...]] = None
     budget: Optional[int] = None
     key: Optional[int] = None
+    # communication model of the searched design space: "legacy" (the
+    # bit-pinned default) or "mesh_noc" (adds per-chiplet mesh-dims /
+    # NoI-entry axes). Jobs with different comm models never share a
+    # bucket — the encoded row width and the fused program differ.
+    comm: str = "legacy"
     # per-job overrides of the service's adaptive-budget knobs (None =
     # service default); only read when the service runs adaptive=True
     stall_segments: Optional[int] = None
@@ -108,12 +113,19 @@ class JobSpec:
                     f"grid_profile needs {HOURS_PER_DAY} hourly entries, "
                     f"got {len(prof)}")
             object.__setattr__(self, "grid_profile", prof)
+        from repro.core.comm import COMM_MODELS
+
+        if self.comm not in COMM_MODELS:
+            raise ValueError(
+                f"unknown comm model {self.comm!r}; "
+                f"options: {sorted(COMM_MODELS)}")
 
     def bucket_key(self) -> tuple:
-        """(total chains, swap cadence): the static shape of the batched
-        program this job can share."""
+        """(total chains, swap cadence, comm model): the static shape of
+        the batched program this job can share."""
         k = self.strategy.weight_rows().shape[0]
-        return (k * self.strategy.n_chains, self.strategy.swap_every)
+        return (k * self.strategy.n_chains, self.strategy.swap_every,
+                self.comm)
 
     def profile_row(self) -> np.ndarray:
         """float64[24] grid-intensity row for this job's slot; ``None``

@@ -6,7 +6,7 @@ keeps ONE warm :class:`~repro.pathfinding.device.ScenarioEngine` and
 multiplexes many concurrent jobs onto it:
 
 * **Shape-bucketed programs.** Jobs whose strategies share a
-  ``(total chains, swap_every)`` shape share a *bucket*: a fixed
+  ``(total chains, swap_every, comm)`` shape share a *bucket*: a fixed
   ``slots``-wide batched scenario axis with exactly two compiled
   programs — the seed-population eval (``"scenario_init"``) and the
   ``segment``-sweep scan (``"scenario_pt"``) — both traced once by a
@@ -51,7 +51,7 @@ import os
 import random
 import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -76,15 +76,17 @@ class _Bucket:
     segments."""
 
     def __init__(self, service: "PathfinderService", nc: int,
-                 swap_every: int):
-        self.nc, self.swap_every = nc, swap_every
+                 swap_every: int, comm: str = "legacy"):
+        self.nc, self.swap_every, self.comm = nc, swap_every, comm
+        self.engine = service._engine_for(comm)
+        self.space = self.engine.space
         S = service.slots
         key_np = service._key_np(0)
         # deterministic filler rows: empty slots hold a valid population
         # so the fused program never sees degenerate inputs
-        fv = service.space.encode_many(
+        fv = self.space.encode_many(
             [random_system(random.Random(0), service.db,
-                           service.space.max_chiplets)
+                           self.space.max_chiplets)
              for _ in range(nc)])
         self.filler_v = fv
         self.v = np.repeat(fv[None], S, axis=0).astype(np.int32)
@@ -107,6 +109,11 @@ class _Bucket:
         self.embf = np.ones(S, np.float64)
         self.profile = np.repeat(self.ci[:, None], HOURS_PER_DAY, axis=1)
         self.widx = np.zeros(S, np.int32)
+        # per-lane NoC-move gate of mesh_noc buckets: constant 1.0 (every
+        # job here asked for the mesh model), so lanes stay independent
+        # of co-tenants; legacy buckets never pass the column at all
+        self.noc_on = np.full(S, 1.0 if comm == "mesh_noc" else 0.0,
+                              np.float64)
         self.slot_jobs: List[Optional[SearchJob]] = [None] * S
 
     def free_slot(self) -> Optional[int]:
@@ -198,6 +205,9 @@ class PathfinderService:
         self.base_key = _resolve_key(key)
         self.engine = get_scenario_engine(self.workloads, db, space=space)
         self.space = self.engine.space
+        #: per-comm warm engines; buckets resolve theirs lazily so a
+        #: service only pays for the comm models its jobs actually use
+        self._engines = {self.space.comm: self.engine}
         self._widx = {wl.name: i for i, wl in enumerate(self.workloads)}
         self._norms: Dict[Tuple[int, float], object] = {}
         self._buckets: Dict[tuple, _Bucket] = {}
@@ -432,9 +442,9 @@ class PathfinderService:
         b = self._buckets[bkey]
         seg = self.segment
         with enable_x64():
-            fn = self.engine.segment_runner(
+            fn = b.engine.segment_runner(
                 self.slots, b.nc, seg, b.swap_every, collect_samples=True)
-            carry, ys = fn(
+            args = (
                 jnp.asarray(b.v), jnp.asarray(b.costs),
                 jnp.asarray(b.best_v), jnp.asarray(b.best_c),
                 _key_from_np(b.keys, jax.random.PRNGKey(0)),
@@ -444,6 +454,9 @@ class PathfinderService:
                 jnp.asarray(b.ci), jnp.asarray(b.price),
                 jnp.asarray(b.embf), jnp.asarray(b.profile),
                 jnp.asarray(b.widx))
+            if b.comm == "mesh_noc":
+                args = args + (jnp.asarray(b.noc_on),)
+            carry, ys = fn(*args)
             # np.array (not asarray): device outputs view as read-only
             # numpy and the slot state is written in place at boundaries
             b.v = np.array(carry[0])
@@ -568,20 +581,26 @@ class PathfinderService:
             job.weights = strat.chain_weights(w6)
             job.pair_mask = strat.chain_pair_mask(nc)
             job.mins, job.medians = self._norm_rows(
-                job.widx, self._region_of(spec))
+                job.widx, self._region_of(spec), b.space)
             sweeps = budget_sweeps(
                 strat.sweeps, nc, spec.budget,
                 detail=f" for job {spec.job_id!r}")
             # jobs advance in whole segment quanta: round UP so the
             # nominal budget is never silently under-run
             job.target_sweeps = -(-sweeps // seg) * seg if sweeps else 0
-        v0 = self.space.encode_many(
+        v0 = b.space.encode_many(
             [random_system(random.Random(job.seed), self.db,
-                           self.space.max_chiplets)
+                           b.space.max_chiplets)
              for _ in range(nc)]).astype(np.int32)
         if self.checkpoint_root is not None and job.fingerprint is None:
             from repro.pathfinding.strategies import _checkpointer
 
+            fp_extra = {}
+            if b.comm != "legacy":
+                # comm model enters the envelope (legacy fingerprints
+                # stay byte-identical to pre-NoC checkpoints)
+                fp_extra["comm"] = np.frombuffer(
+                    b.comm.encode(), np.uint8)
             job.fingerprint = segment_fingerprint(
                 "serve_job", v0=v0, temps=job.temps,
                 swap_every=b.swap_every, seed=job.seed, mins=job.mins,
@@ -593,7 +612,7 @@ class PathfinderService:
                 job=np.frombuffer(spec.job_id.encode(), np.uint8),
                 price=np.float64(spec.electricity_price),
                 embf=np.float64(spec.emb_factor),
-                profile=spec.profile_row())
+                profile=spec.profile_row(), **fp_extra)
             job.checkpointer = _checkpointer(
                 os.path.join(self.checkpoint_root, spec.job_id))
         # slot statics (identical for fresh admission and re-admission)
@@ -611,9 +630,9 @@ class PathfinderService:
         if job.carry is None and job.checkpointer is not None:
             key_like = self._key_np(0)
             restored = job.checkpointer.restore(
-                dict(v=np.zeros((nc, self.space.width), np.int32),
+                dict(v=np.zeros((nc, b.space.width), np.int32),
                      costs=np.zeros(nc, np.float64),
-                     best_v=np.zeros(self.space.width, np.int32),
+                     best_v=np.zeros(b.space.width, np.int32),
                      best_c=np.zeros((), np.float64),
                      key=np.zeros_like(key_like)),
                 job.archive or self._fresh_archive(job), job.fingerprint)
@@ -634,7 +653,7 @@ class PathfinderService:
             job.archive = job.archive or self._fresh_archive(job)
             b.v[slot] = v0
             with enable_x64():
-                _, cost0, vec0 = self.engine._init_fn(self.slots, nc)(
+                _, cost0, vec0 = b.engine._init_fn(self.slots, nc)(
                     jnp.asarray(b.v), jnp.asarray(b.mins),
                     jnp.asarray(b.med), jnp.asarray(b.w),
                     jnp.asarray(b.ci), jnp.asarray(b.price),
@@ -685,6 +704,24 @@ class PathfinderService:
 
     # -- shared warm resources ----------------------------------------------
 
+    def _engine_for(self, comm: str):
+        """Warm :class:`ScenarioEngine` for a bucket's comm model. The
+        default-space engine built in ``__init__`` serves its own comm;
+        any other model gets a lazily-built engine over a same-shape
+        :class:`DesignSpace` (shared process-wide by
+        :func:`get_scenario_engine`'s cache)."""
+        eng = self._engines.get(comm)
+        if eng is None:
+            from repro.pathfinding.device import get_scenario_engine
+            from repro.pathfinding.space import DesignSpace
+
+            sp = DesignSpace(self.db,
+                             max_chiplets=self.space.max_chiplets,
+                             comm=comm)
+            eng = get_scenario_engine(self.workloads, self.db, space=sp)
+            self._engines[comm] = eng
+        return eng
+
     def _bucket(self, bkey: tuple) -> _Bucket:
         b = self._buckets.get(bkey)
         if b is None:
@@ -702,16 +739,16 @@ class PathfinderService:
         from jax.experimental import enable_x64
 
         with enable_x64():
-            keys0, cost0, _ = self.engine._init_fn(self.slots, b.nc)(
+            keys0, cost0, _ = b.engine._init_fn(self.slots, b.nc)(
                 jnp.asarray(b.v), jnp.asarray(b.mins),
                 jnp.asarray(b.med), jnp.asarray(b.w), jnp.asarray(b.ci),
                 jnp.asarray(b.price), jnp.asarray(b.embf),
                 jnp.asarray(b.profile), jnp.asarray(b.widx),
                 jax.random.PRNGKey(0))
-            fn = self.engine.segment_runner(
+            fn = b.engine.segment_runner(
                 self.slots, b.nc, self.segment, b.swap_every,
                 collect_samples=True)
-            carry, _ = fn(
+            args = (
                 jnp.asarray(b.v), cost0, jnp.asarray(b.best_v),
                 jnp.asarray(cost0[:, 0]), keys0,
                 jnp.asarray(b.sweep0), jnp.asarray(b.temps),
@@ -720,6 +757,9 @@ class PathfinderService:
                 jnp.asarray(b.ci), jnp.asarray(b.price),
                 jnp.asarray(b.embf), jnp.asarray(b.profile),
                 jnp.asarray(b.widx))
+            if b.comm == "mesh_noc":
+                args = args + (jnp.asarray(b.noc_on),)
+            carry, _ = fn(*args)
             np.asarray(carry[0])      # block until compiled + run
 
     @staticmethod
@@ -730,20 +770,23 @@ class PathfinderService:
                       emb_factor=float(spec.emb_factor),
                       grid_profile=spec.grid_profile)
 
-    def _norm_rows(self, widx: int,
-                   region: Region) -> Tuple[np.ndarray, np.ndarray]:
+    def _norm_rows(self, widx: int, region: Region,
+                   space=None) -> Tuple[np.ndarray, np.ndarray]:
         # Region is frozen/hashable, so the cache key distinguishes jobs
         # that share a scalar CI but differ in price/embodied/profile —
-        # a profile axis can never alias another job's normalizer rows
-        nz = self._norms.get((widx, region))
+        # a profile axis can never alias another job's normalizer rows.
+        # The comm model joins the key: mesh-space normalizers see the
+        # NoC cost terms and must not alias legacy rows.
+        space = self.space if space is None else space
+        nz = self._norms.get((widx, region, space.comm))
         if nz is None:
             from repro.pathfinding.batch import fit_region_normalizers
 
             nz = fit_region_normalizers(
                 self.workloads[widx], [region], self.db,
                 samples=self.norm_samples, seed=self.norm_seed,
-                space=self.space)[0]
-            self._norms[(widx, region)] = nz
+                space=space)[0]
+            self._norms[(widx, region, space.comm)] = nz
         mins, medians = nz.weights_arrays()
         return (np.asarray(mins, np.float64),
                 np.asarray(medians, np.float64))

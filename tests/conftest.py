@@ -10,8 +10,6 @@ collect and run.
 import os
 import sys
 
-import pytest
-
 try:
     import hypothesis  # noqa: F401
 except ImportError:

@@ -308,7 +308,6 @@ def test_profile_axis_is_data_not_a_recompile():
     ci = np.array([0.024, 0.475, 0.82])
     widx = np.zeros(S, dtype=np.int64)
 
-    before = trace_count("scenario_eval")
     cost_scalar, _ = engine.evaluate_cost(enc, mins, medians, w, ci, widx)
     after_first = trace_count("scenario_eval")
 

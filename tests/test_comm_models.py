@@ -1,0 +1,263 @@
+"""Pluggable communication-model tests: closed-form mesh-NoC hop counts
+vs a BFS reference, scalar-vs-device parity of the mesh_noc model,
+bit-identity of legacy replay through the env-forced mesh program,
+compile-count flatness across mesh-dim mixes, and the host-side NoC
+move/seeding satellites."""
+import dataclasses
+import random
+from collections import deque
+
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings
+from hypothesis import strategies as st
+
+from repro.core import comm as comm_mod
+from repro.core import workload
+from repro.core.evaluate import evaluate
+from repro.core.sa import propose, random_system, seed_noc
+from repro.core.scalesim import SimCache
+from repro.core.system import is_valid
+from repro.core.techdb import DEFAULT_DB
+from repro.core.templates import METRIC_FIELDS
+from repro.pathfinding import DesignSpace, get_device_evaluator
+from repro.pathfinding.device import get_scenario_engine, trace_count
+
+WL = workload(1)
+PARITY_FIELDS = METRIC_FIELDS + (
+    "l_compute_rd_s", "l_d2d_s", "l_dram_wr_s", "e_compute_j", "e_d2d_j",
+    "d2d_bits", "macs")
+
+
+# ---------------------------------------------------------------------------
+# Closed-form Manhattan hop arithmetic vs an explicit BFS reference
+# ---------------------------------------------------------------------------
+
+
+def _bfs_mean_hops(mx: int, my: int, ex: int, ey: int) -> float:
+    """Mean shortest-path distance from every tile of an ``mx x my``
+    mesh to the entry router at ``(ex, ey)``, by breadth-first search
+    over the grid graph — the model the closed form must reproduce."""
+    dist = {(ex, ey): 0}
+    q = deque([(ex, ey)])
+    while q:
+        x, y = q.popleft()
+        for nx, ny in ((x - 1, y), (x + 1, y), (x, y - 1), (x, y + 1)):
+            if 0 <= nx < mx and 0 <= ny < my and (nx, ny) not in dist:
+                dist[(nx, ny)] = dist[(x, y)] + 1
+                q.append((nx, ny))
+    assert len(dist) == mx * my
+    return sum(dist.values()) / (mx * my)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=1, max_value=9),
+       st.integers(min_value=1, max_value=9),
+       st.integers(min_value=0, max_value=8),
+       st.integers(min_value=0, max_value=8))
+def test_closed_form_hops_match_bfs(mx, my, ex, ey):
+    """Property: ``mesh_mean_hops`` equals the BFS mean over arbitrary
+    mesh dims and any in-mesh entry coordinate (XY routing on a grid is
+    Manhattan, and the per-axis sums telescope)."""
+    assume(ex < mx and ey < my)
+    closed = comm_mod.mesh_mean_hops(mx, my, ex, ey)
+    assert closed == pytest.approx(_bfs_mean_hops(mx, my, ex, ey),
+                                   rel=1e-12, abs=1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.sampled_from(range(len(comm_mod.MESH_DIMS))),
+       st.sampled_from(range(len(comm_mod.ENTRY_PLACEMENTS))),
+       st.sampled_from(range(len(comm_mod.MESH_DIMS))),
+       st.sampled_from(range(len(comm_mod.ENTRY_PLACEMENTS))))
+def test_src_dst_pair_hops_match_bfs(mi_s, ei_s, mi_d, ei_d):
+    """A src->dst transfer pays src egress + dst ingress NoC hops; both
+    legs must match the BFS reference for the encoded table entries."""
+    legs = []
+    for mi, ei in ((mi_s, ei_s), (mi_d, ei_d)):
+        mx, my = comm_mod.MESH_DIMS[mi]
+        ex, ey = comm_mod.entry_coords(mx, my, ei)
+        assert 0 <= ex < mx and 0 <= ey < my
+        legs.append(_bfs_mean_hops(mx, my, ex, ey))
+    pair = comm_mod.noc_hop_count(mi_s, ei_s) + comm_mod.noc_hop_count(
+        mi_d, ei_d)
+    assert pair == pytest.approx(sum(legs), rel=1e-12, abs=1e-12)
+
+
+def test_noc_tables_neutral_element():
+    """``MESH_DIMS[0]`` is the exact legacy limit: zero hops from every
+    entry placement, one physical router."""
+    hops, routers = comm_mod.noc_tables()
+    assert hops.shape == (len(comm_mod.MESH_DIMS),
+                          len(comm_mod.ENTRY_PLACEMENTS))
+    assert np.all(hops[0] == 0.0)
+    assert routers[0] == 1.0
+    # monotonicity: a bigger mesh never shrinks the router count
+    assert np.all(np.diff(routers) > 0)
+
+
+# ---------------------------------------------------------------------------
+# mesh_noc scalar-vs-device parity over a style-diverse population
+# ---------------------------------------------------------------------------
+
+
+def _mesh_systems(count: int, seed: int):
+    rng = random.Random(seed)
+    out = []
+    for _ in range(count):
+        sys = random_system(rng)
+        noc = tuple(
+            (rng.randrange(len(comm_mod.MESH_DIMS)),
+             rng.randrange(len(comm_mod.ENTRY_PLACEMENTS)))
+            for _ in range(sys.n_chiplets))
+        out.append(dataclasses.replace(sys, noc=noc))
+    return out
+
+
+def test_mesh_scalar_device_parity_240():
+    """The fused device program under ``comm="mesh_noc"`` matches scalar
+    ``evaluate`` within 1e-6 relative on every metric over >= 200 random
+    NoC-carrying systems, spanning 2.5D and 3D integration styles."""
+    systems = _mesh_systems(240, 20260808)
+    styles = {s.style for s in systems}
+    assert {"2.5D", "3D"} <= styles, f"population too narrow: {styles}"
+    space = DesignSpace(DEFAULT_DB, comm="mesh_noc")
+    assert space.noc_live
+    dev = get_device_evaluator(WL, space=space)
+    mb = dev.metrics(space.encode_many(systems))
+    cache = SimCache()
+    for i, sys in enumerate(systems):
+        m = evaluate(sys, WL, cache=cache)
+        for f in PARITY_FIELDS:
+            ref = getattr(m, f)
+            got = float(getattr(mb, f)[i])
+            assert got == pytest.approx(ref, rel=1e-6, abs=1e-300), (
+                f"{sys.describe()} noc={sys.noc} field {f}: "
+                f"scalar {ref} device {got}")
+
+
+def test_neutral_noc_is_bit_invisible():
+    """A system pinned at the neutral mesh evaluates bit-identically to
+    the same system without any NoC at all — the invariant that lets
+    the forced mesh program replay every legacy golden."""
+    rng = random.Random(7)
+    cache = SimCache()
+    for _ in range(25):
+        sys = random_system(rng)
+        neutral = dataclasses.replace(
+            sys, noc=(comm_mod.NOC_NEUTRAL,) * sys.n_chiplets)
+        a = evaluate(sys, WL, cache=cache)
+        b = evaluate(neutral, WL, cache=cache)
+        for f in PARITY_FIELDS:
+            assert getattr(a, f) == getattr(b, f), f
+        assert comm_mod.system_noc_hops(neutral) == (0.0,) * sys.n_chiplets
+        assert comm_mod.system_n_routers(neutral) == (1,) * sys.n_chiplets
+
+
+# ---------------------------------------------------------------------------
+# Env-forced mesh program: legacy replay bit-identity + compile flatness
+# ---------------------------------------------------------------------------
+
+
+def _scenario_args(space, S, n):
+    v0 = np.stack([space.sample(n, 10 + s) for s in range(S)])
+    return v0, dict(
+        temps=np.tile(np.geomspace(2.0, 0.01, n), (S, 1)),
+        sweeps=16, swap_every=2, seed=3, mins=np.zeros((S, 6)),
+        medians=np.ones((S, 6)),
+        weights=np.tile(np.ones(6) / 6, (S, n, 1)),
+        pair_mask=np.ones((S, n - 1), bool), ci=np.full(S, 0.475),
+        widx=np.zeros(S, np.int32))
+
+
+@pytest.mark.slow
+def test_env_forced_mesh_replays_legacy_bits(monkeypatch):
+    """``REPRO_COMM_MODEL=mesh_noc`` reroutes default DesignSpaces
+    through the mesh program with the NoC axes frozen at neutral; the
+    fused scenario trajectory must stay bit-identical to legacy."""
+    S, n = 2, 6
+    legacy = DesignSpace(DEFAULT_DB, comm="legacy")
+    v0, kw = _scenario_args(legacy, S, n)
+    eng_l = get_scenario_engine((WL,), DEFAULT_DB, space=legacy)
+    r_l = eng_l.parallel_tempering(v0, **kw)
+
+    monkeypatch.setenv(comm_mod.COMM_ENV_VAR, "mesh_noc")
+    forced = DesignSpace(DEFAULT_DB)
+    assert forced.comm == "mesh_noc" and not forced.noc_live
+    v0_f, kw_f = _scenario_args(forced, S, n)
+    # same systems, wider rows: the legacy columns must round-trip
+    assert np.array_equal(v0_f[:, :, :legacy.width], v0)
+    eng_f = get_scenario_engine((WL,), DEFAULT_DB, space=forced)
+    r_f = eng_f.parallel_tempering(v0_f, **kw_f)
+
+    assert np.array_equal(r_f.best_cost, r_l.best_cost)
+    assert np.array_equal(r_f.history, r_l.history)
+    assert np.array_equal(r_f.best_enc[:, :legacy.width], r_l.best_enc)
+
+
+@pytest.mark.slow
+def test_mesh_dims_are_data_not_shape():
+    """One fused compile serves every mesh-dim / entry-placement mix:
+    re-running the scenario grid with different encoded NoC axes and a
+    different per-cell ``noc_on`` mask must not retrace."""
+    S, n = 2, 6
+    space = DesignSpace(DEFAULT_DB, comm="mesh_noc")
+    eng = get_scenario_engine((WL,), DEFAULT_DB, space=space)
+    v0, kw = _scenario_args(space, S, n)
+    eng.parallel_tempering(v0, **kw)
+    c_pt, c_init = trace_count("scenario_pt"), trace_count("scenario_init")
+
+    # scramble the NoC columns to a different mesh per cell and flip one
+    # cell's move gate: runtime data only
+    v1 = v0.copy()
+    nc_col = space.noc_col
+    v1[..., nc_col::2] = np.where(v1[..., nc_col::2] >= 0,
+                                  (v1[..., nc_col::2] + 1)
+                                  % len(comm_mod.MESH_DIMS),
+                                  v1[..., nc_col::2])
+    r1 = eng.parallel_tempering(v1, noc_on=np.array([1.0, 0.0]), **kw)
+    assert trace_count("scenario_pt") == c_pt
+    assert trace_count("scenario_init") == c_init
+    assert np.isfinite(r1.best_cost).all()
+
+
+# ---------------------------------------------------------------------------
+# Host-side satellites: seeding, NoC moves, spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_seed_noc_and_noc_moves():
+    rng = random.Random(11)
+    sys = seed_noc(random_system(rng))
+    assert sys.noc == (comm_mod.NOC_NEUTRAL,) * sys.n_chiplets
+    assert seed_noc(sys) is sys          # idempotent
+    moved = 0
+    cur = sys
+    for _ in range(200):
+        cand = propose(cur, rng, DEFAULT_DB, noc_moves=True)
+        assert is_valid(cand, DEFAULT_DB)
+        assert len(cand.noc) == cand.n_chiplets
+        comm_mod.validate_noc(cand.noc, cand.n_chiplets)
+        if cand.n_chiplets == cur.n_chiplets and cand.noc != cur.noc:
+            moved += 1
+        cur = cand
+    assert moved > 0, "NoC move level never fired in 200 proposals"
+
+
+def test_propose_without_noc_moves_stays_legacy():
+    rng = random.Random(12)
+    cur = random_system(rng)
+    for _ in range(50):
+        cur = propose(cur, rng, DEFAULT_DB)
+        assert cur.noc == ()
+
+
+def test_jobspec_comm_validation():
+    from repro.serving.jobs import JobSpec
+
+    spec = JobSpec(job_id="j", workload="w", comm="mesh_noc")
+    assert spec.bucket_key()[-1] == "mesh_noc"
+    legacy = JobSpec(job_id="j", workload="w")
+    assert legacy.bucket_key()[-1] == "legacy"
+    with pytest.raises(ValueError, match="unknown comm model"):
+        JobSpec(job_id="j", workload="w", comm="torus")

@@ -1,12 +1,11 @@
 """Unit + property tests for the CarbonPATH analytical models."""
 import math
-import random
 
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import DEFAULT_DB, Chiplet, HISystem, Mapping, library
-from repro.core import validate, InvalidSystem, is_valid
+from repro.core import validate, InvalidSystem
 from repro.core import workload, tile_and_assign, all_pkg_protocol_pairs
 from repro.core import evaluate
 from repro.core.chiplet import different_chiplet_system, identical_chiplet_system

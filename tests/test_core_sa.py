@@ -1,11 +1,9 @@
 """SA engine tests: move validity (property-based), convergence, cache."""
 import random
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    DEFAULT_DB,
     SAConfig,
     SimCache,
     TEMPLATES,

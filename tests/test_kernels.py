@@ -135,7 +135,6 @@ def test_rglru_assoc_matches_sequential():
 
 def test_rglru_identity_decay():
     """a == 1 everywhere -> cumulative sum of inputs."""
-    b = jnp.ones((1, 10, 8))
     x = jnp.ones((1, 10, 8))
     out = rglru(jnp.ones_like(x), x, bc=8, ct=10)
     np.testing.assert_allclose(out[0, :, 0], jnp.arange(1, 11, dtype=jnp.float32),

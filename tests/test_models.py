@@ -7,12 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_NAMES, all_configs, get_config
+from repro.configs import ARCH_NAMES, get_config
 from repro.models.attention import chunked_attention
 from repro.models.transformer import (
     decode_step,
     forward,
-    init_cache,
     init_model,
     loss_fn,
     prefill,

@@ -14,7 +14,6 @@ from repro.core.sa import OBJECTIVE_AXES, cost_vector, random_system
 from repro.core.system import is_valid
 from repro.pathfinding import (
     DesignSpace,
-    ParallelTempering,
     ParetoArchive,
     Pathfinder,
     ScalarizationSweep,

@@ -16,7 +16,7 @@ from repro.core import (
     workload,
 )
 from repro.core.evaluate import Metrics
-from repro.core.sa import fit_normalizer, random_system
+from repro.core.sa import random_system
 from repro.core.system import is_valid
 from repro.core.templates import METRIC_FIELDS, Normalizer
 from repro.core.workload import ALL_MAPPINGS

@@ -16,7 +16,6 @@ from repro.optim import (
     apply_updates,
     compress_with_feedback,
     decompress,
-    global_norm,
     init as opt_init,
     init_error,
     schedule,

@@ -12,7 +12,6 @@ import random
 import pytest
 
 from repro.core import (
-    DEFAULT_DB,
     SAConfig,
     SimCache,
     TEMPLATES,
