@@ -27,6 +27,7 @@ import traceback
 from typing import Optional
 
 from benchmarks import (
+    carbon_scheduling,
     checkpoint_resume,
     comm_models,
     fig05_latency_vs_chiplets,
@@ -68,6 +69,7 @@ ALL = [
     ("pareto_frontier", pareto_frontier),
     ("scenario_sweep", scenario_sweep),
     ("comm_models", comm_models),
+    ("carbon_scheduling", carbon_scheduling),
     ("checkpoint_resume", checkpoint_resume),
     ("serving_throughput", serving_throughput),
 ]

@@ -47,7 +47,7 @@ from repro.pathfinding import (
     fold_cell_key,
     hypervolume,
 )
-from repro.core.regions import Region, diurnal_profile
+from repro.core.regions import Region, measured_profile
 from repro.pathfinding.device import trace_count
 from repro.pathfinding.pareto import REGION_INTENSITIES
 from benchmarks.common import row, timed
@@ -86,16 +86,16 @@ def _per_cell_baseline(wls, strat, cell_budget):
 
 def _lifecycle_regions() -> dict:
     """The scalar-CI regions upgraded to full lifecycle cells: each
-    gets a distinct diurnal grid profile (evening peak, mean = the
-    scalar CI), a distinct electricity price and a distinct embodied
+    gets its *measured* ElectricityMaps-style 24h grid trace
+    (``repro.core.regions.measured_profile``, replacing the synthetic
+    sinusoid), a distinct electricity price and a distinct embodied
     factor — five regions, no two sharing any axis value."""
     return {
         name: Region(
             carbon_intensity=ci,
             electricity_price=0.04 + 0.03 * i,
             emb_factor=0.90 + 0.06 * i,
-            grid_profile=diurnal_profile(ci, swing=0.25 + 0.05 * i,
-                                         peak_hour=17 + i))
+            grid_profile=measured_profile(name))
         for i, (name, ci) in enumerate(REGION_INTENSITIES.items())
     }
 

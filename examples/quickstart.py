@@ -13,10 +13,13 @@ still work as deprecation shims; new code should use
 """
 from repro.core import HISystem, Mapping, SAConfig, TEMPLATES, evaluate, workload
 from repro.core.chiplet import different_chiplet_system
+from repro.core.regions import Region, measured_profile
 from repro.pathfinding import (
     DesignSpace,
     ParallelTempering,
     Pathfinder,
+    ScalarizationSweep,
+    ScenarioSpec,
     SimulatedAnnealing,
     evaluate_batch,
 )
@@ -64,3 +67,30 @@ res_pt = pf.search(strategy=ParallelTempering(n_chains=8, sweeps=120), key=0)
 print(f"\n[tempering] best of {res_pt.evaluations} batched evaluations: "
       f"{res_pt.best.describe()}  cost {res_pt.best_cost:.3f} "
       f"(SA found {res.best_cost:.3f})")
+
+# -- 5. deployment scenarios as one value: ScenarioSpec --------------------
+# Regions carry measured 24h grid traces (ElectricityMaps-style) and
+# schedule="window" makes *when to run* a searched axis: every design
+# also picks a start hour + duty-window shape against its region's
+# trace, concentrating the same lifetime energy into low-carbon hours.
+spec = ScenarioSpec(
+    workloads=(wl,),
+    regions={
+        "hydro": Region(carbon_intensity=0.024,
+                        grid_profile=measured_profile("hydro")),
+        "solar-heavy": Region(carbon_intensity=0.31,
+                              grid_profile=measured_profile("solar-heavy")),
+    },
+    schedule="window", budget=2000)
+from repro.pathfinding import ScenarioSweep
+
+sf = ScenarioSweep(strategy=ScalarizationSweep(
+    directions=2, n_chains=2, sweeps=40)).run(spec, key=0)
+print("\n[scenarios] operational CFP with the schedule axis searched:")
+for s in sf.scenarios:
+    best = sf.results[s.key].best
+    mm = sf.results[s.key].best_metrics
+    when = ("always-on" if not best.schedule or best.schedule[1] == 0
+            else f"start {best.schedule[0]:2d}h shape {best.schedule[1]}")
+    print(f"  {s.region:12s} {when}  ope {mm.ope_cfp_kg:.3f} kg  "
+          f"total {mm.total_cfp:.2f} kg")

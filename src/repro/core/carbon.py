@@ -193,6 +193,16 @@ def effective_intensity(ci: float,
     return ci + corr
 
 
+def effective_price(price: float,
+                    profile: Optional[Sequence[float]] = None,
+                    load: Optional[Sequence[float]] = None) -> float:
+    """Load-weighted effective electricity price — the dollar-metric twin
+    of :func:`effective_intensity`, sharing its ``price + sum((p - price)
+    * load)`` formulation so a flat curve contributes exactly +0.0 and a
+    ``None`` curve is the scalar price bit-for-bit."""
+    return effective_intensity(price, profile, load)
+
+
 def lifetime_kwh(energy_j: float, db: TechDB = DEFAULT_DB) -> float:
     """Lifetime electrical energy (kWh) of one deployed unit: per-run
     energy x (duty_runs_per_s x active seconds) under the fixed-demand
@@ -202,27 +212,38 @@ def lifetime_kwh(energy_j: float, db: TechDB = DEFAULT_DB) -> float:
     return energy_j * runs / 3.6e6
 
 
-def operational_cost_usd(energy_j: float, db: TechDB = DEFAULT_DB) -> float:
+def operational_cost_usd(energy_j: float, db: TechDB = DEFAULT_DB,
+                         load: Optional[Sequence[float]] = None) -> float:
     """Lifetime electricity bill of one unit: lifetime kWh x regional
-    ``db.electricity_price`` ($/kWh). The neutral default price of 0.0
+    effective price. With the default flat ``db.price_profile=None`` the
+    effective price *is* ``db.electricity_price`` ($/kWh) bit-for-bit;
+    a 24h price curve is load-weighted like the grid intensity
+    (:func:`effective_price`), ``load`` overriding ``db.load_profile``
+    for schedule-carrying designs. The neutral default price of 0.0
     leaves the manufacturing-only dollar metric unchanged (x + 0.0 is
     bit-identical for finite x)."""
-    return lifetime_kwh(energy_j, db) * db.electricity_price
+    price = effective_price(db.electricity_price, db.price_profile,
+                            db.load_profile if load is None else load)
+    return lifetime_kwh(energy_j, db) * price
 
 
 def operational_cfp(energy_j: float, latency_s: float,
-                    db: TechDB = DEFAULT_DB, per_unit: bool = False) -> float:
+                    db: TechDB = DEFAULT_DB, per_unit: bool = False,
+                    load: Optional[Sequence[float]] = None) -> float:
     """Eq. 3 under a fixed-demand deployment: the system executes the
     workload ``duty_runs_per_s`` times per active second over its lifetime,
     so lifetime emissions scale with per-run energy (which itself carries a
     static-power x latency term added in ``evaluate``). The grid intensity
     is the load-weighted :func:`effective_intensity` of ``db.grid_profile``
     (``None`` = flat = the scalar ``db.carbon_intensity``, bit-identical).
+    ``load`` overrides ``db.load_profile`` for designs carrying an
+    encoded schedule (see :mod:`repro.core.schedule`); ``None`` keeps
+    the fixed per-db weighting bit-for-bit.
     Returns fleet lifetime kgCO2e, or per-unit with ``per_unit=True``."""
     del latency_s  # latency enters through the static-energy term upstream
     kwh = lifetime_kwh(energy_j, db)
     ci = effective_intensity(db.carbon_intensity, db.grid_profile,
-                             db.load_profile)
+                             db.load_profile if load is None else load)
     volume = 1 if per_unit else db.production_volume
     return kwh * ci * volume
 

@@ -155,9 +155,21 @@ def evaluate(
     # profile with the load profile (flat -> scalar, bit-identical).
     area = package_area_mm2(sys, topo, db)
     cost = cost_mod.system_cost(sys, area, db)
-    dollar = cost.total + carbon_mod.operational_cost_usd(energy, db)
+    # Encoded schedule (repro.core.schedule): a (start, shape) design
+    # axis overrides the fixed db.load_profile duty weighting for the
+    # operational terms. None keeps the legacy path verbatim; the
+    # neutral (0, 0) schedule decodes to db.load_profile's own values,
+    # so it is bit-identical too.
+    if sys.schedule is not None:
+        from repro.core.schedule import schedule_load_row
+        load = schedule_load_row(sys.schedule, db)
+    else:
+        load = None
+    dollar = cost.total + carbon_mod.operational_cost_usd(energy, db,
+                                                          load=load)
     emb = carbon_mod.embodied_cfp(sys, area, db)
-    ope = carbon_mod.operational_cfp(energy, latency, db, per_unit=True)
+    ope = carbon_mod.operational_cfp(energy, latency, db, per_unit=True,
+                                     load=load)
 
     return Metrics(
         latency_s=latency,

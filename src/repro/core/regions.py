@@ -9,11 +9,18 @@ engine (Carbon Connect / ECO-CHIP, see ``repro.core.carbon``):
 * ``electricity_price``— regional $/kWh, added to the dollar metric as the
   lifetime electricity bill (0.0 = neutral);
 * ``emb_factor``       — regional fab-grid embodied-carbon multiplier
-  (1.0 = neutral).
+  (1.0 = neutral);
+* ``price_profile``    — optional 24h $/kWh price curve; ``None`` = flat
+  at ``electricity_price`` (bit-identical to the scalar price). Like the
+  grid profile it is dotted with the design's decoded load profile, so
+  a schedule-axis search can chase cheap hours as well as clean ones.
 
 ``ScenarioSweep`` accepts ``{name: Region}`` as well as the historical
 ``{name: float}`` — :func:`as_region` coerces a bare float to a
 neutral-axes region, which reproduces the scalar-CI behavior exactly.
+:func:`measured_profile` pulls 24h intensity rows from the checked-in
+ElectricityMaps-style dataset (``repro.core.grid_traces``) instead of
+the synthetic :func:`diurnal_profile` sinusoid.
 """
 from __future__ import annotations
 
@@ -35,15 +42,18 @@ class Region:
     electricity_price: float = 0.0
     emb_factor: float = 1.0
     grid_profile: Optional[Tuple[float, ...]] = None
+    price_profile: Optional[Tuple[float, ...]] = None
 
     def __post_init__(self) -> None:
-        if self.grid_profile is not None:
-            prof = tuple(float(x) for x in self.grid_profile)
-            if len(prof) != HOURS_PER_DAY:
-                raise ValueError(
-                    f"grid_profile needs {HOURS_PER_DAY} hourly entries, "
-                    f"got {len(prof)}")
-            object.__setattr__(self, "grid_profile", prof)
+        for field in ("grid_profile", "price_profile"):
+            prof = getattr(self, field)
+            if prof is not None:
+                prof = tuple(float(x) for x in prof)
+                if len(prof) != HOURS_PER_DAY:
+                    raise ValueError(
+                        f"{field} needs {HOURS_PER_DAY} hourly entries, "
+                        f"got {len(prof)}")
+                object.__setattr__(self, field, prof)
 
     def profile_array(self) -> np.ndarray:
         """float64[24] grid-intensity row for the device program; a
@@ -53,13 +63,22 @@ class Region:
             return np.full(HOURS_PER_DAY, np.float64(self.carbon_intensity))
         return np.asarray(self.grid_profile, dtype=np.float64)
 
+    def price_array(self) -> np.ndarray:
+        """float64[24] electricity-price row for the device program; a
+        ``None`` curve synthesizes the flat row at ``electricity_price``
+        (whose in-program correction term is exactly +0.0)."""
+        if self.price_profile is None:
+            return np.full(HOURS_PER_DAY, np.float64(self.electricity_price))
+        return np.asarray(self.price_profile, dtype=np.float64)
+
     def db_overrides(self) -> dict:
         """Field patch for ``dataclasses.replace(db, **...)`` so the
         scalar path evaluates under this region's axes."""
         return dict(carbon_intensity=self.carbon_intensity,
                     electricity_price=self.electricity_price,
                     emb_factor=self.emb_factor,
-                    grid_profile=self.grid_profile)
+                    grid_profile=self.grid_profile,
+                    price_profile=self.price_profile)
 
 
 RegionLike = Union[float, Region]
@@ -84,3 +103,14 @@ def diurnal_profile(ci_mean: float, swing: float = 0.3,
         ci_mean * (1.0 + swing * math.cos(2.0 * math.pi
                                           * (h - peak_hour) / HOURS_PER_DAY))
         for h in range(HOURS_PER_DAY))
+
+
+def measured_profile(name: str, season: str = "summer",
+                     day: str = "weekday") -> Tuple[float, ...]:
+    """Measured 24h grid-intensity trace for a reference region
+    (ElectricityMaps-style checked-in dataset, see
+    :mod:`repro.core.grid_traces`) — the drop-in replacement for the
+    synthetic :func:`diurnal_profile` in examples and benchmarks."""
+    from repro.core.grid_traces import grid_trace
+
+    return grid_trace(name, season=season, day=day)

@@ -251,6 +251,40 @@ def _move_noc(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
     return dataclasses.replace(sys, noc=tuple(noc))
 
 
+def _move_schedule(sys: HISystem, rng: random.Random,
+                   db: TechDB) -> HISystem:
+    """window schedule-model move: shift the start hour or re-draw the
+    duty-window shape, excluding the current value (rejection-free —
+    the offset draw can never land on the current assignment)."""
+    from repro.core import schedule as sched_mod
+
+    start, shape = sys.schedule
+    if rng.randrange(2) == 0:
+        start = (start + 1 + rng.randrange(
+            sched_mod.HOURS_PER_DAY - 1)) % sched_mod.HOURS_PER_DAY
+    else:
+        n = sched_mod.n_schedule_shapes()
+        shape = (shape + 1 + rng.randrange(n - 1)) % n
+    return dataclasses.replace(sys, schedule=(start, shape))
+
+
+def seed_schedule(sys: HISystem) -> HISystem:
+    """Attach the neutral (0, 0) schedule to a fixed-schedule system.
+
+    The temporal twin of :func:`seed_noc`: strategies searching a *live*
+    window :class:`~repro.pathfinding.DesignSpace` call this on their
+    random seeds before proposing — ``random_system`` draws no schedule
+    axes (keeping its RNG stream legacy-identical) and :func:`propose`
+    only fires schedule moves on systems that carry one. Neutral (start
+    0, shape 0) decodes to ``db.load_profile`` itself, so the seeded
+    system evaluates bit-identically. No RNG draws."""
+    if sys.schedule is not None:
+        return sys
+    from repro.core.schedule import SCHED_NEUTRAL
+
+    return dataclasses.replace(sys, schedule=SCHED_NEUTRAL)
+
+
 def seed_noc(sys: HISystem) -> HISystem:
     """Attach the neutral per-chiplet NoC assignment to a legacy system.
 
@@ -293,15 +327,20 @@ def _move_package(sys: HISystem, rng: random.Random, db: TechDB) -> HISystem:
 
 def propose(sys: HISystem, rng: random.Random, db: TechDB = DEFAULT_DB,
             max_chiplets: int = 6, p_application: float = 0.35,
-            noc_moves: bool = False) -> HISystem:
+            noc_moves: bool = False,
+            schedule_moves: bool = False) -> HISystem:
     """Hierarchical move selection: application level first, then one of
     the lower levels; repair + validity check, retry until valid.
 
     ``noc_moves=True`` (set by strategies searching a *live* mesh_noc
     :class:`~repro.pathfinding.DesignSpace`) adds the NoC axes as a
-    fourth lower level; the default consumes the exact legacy RNG
-    stream, so legacy and frozen-neutral searches are bit-identical."""
-    n_levels = 4 if (noc_moves and sys.noc) else 3
+    fourth lower level; ``schedule_moves=True`` (live window schedule
+    spaces) adds the temporal axis as the next one. The defaults consume
+    the exact legacy RNG stream, so legacy and frozen-neutral searches
+    are bit-identical."""
+    noc_on = bool(noc_moves and sys.noc)
+    sched_on = bool(schedule_moves and sys.schedule is not None)
+    n_levels = 3 + noc_on + sched_on
     for _ in range(64):
         if rng.random() < p_application:
             cand = _move_application(sys, rng, db)
@@ -313,8 +352,10 @@ def propose(sys: HISystem, rng: random.Random, db: TechDB = DEFAULT_DB,
                 cand = _move_chiplet(sys, rng, db)
             elif level == 2:
                 cand = _move_package(sys, rng, db)
-            else:
+            elif level == 3 and noc_on:
                 cand = _move_noc(sys, rng, db)
+            else:
+                cand = _move_schedule(sys, rng, db)
         if is_valid(cand, db, max_chiplets):
             return cand
     return sys

@@ -45,6 +45,10 @@ class HISystem:
     # (mesh_dims_idx, entry_placement_idx) pairs. Empty = legacy pairwise
     # links; (0, 0) per chiplet is the bit-neutral single-tile mesh.
     noc: Tuple[Tuple[int, int], ...] = ()
+    # window schedule model (repro.core.schedule): one per-design
+    # (start_hour, shape_idx) pair. None = fixed db.load_profile duty
+    # weighting; (0, 0) is the bit-neutral always-on schedule.
+    schedule: Optional[Tuple[int, int]] = None
 
     @property
     def n_chiplets(self) -> int:
@@ -99,6 +103,12 @@ def validate(sys: HISystem, db: TechDB = DEFAULT_DB,
             validate_noc(sys.noc, n)
         except ValueError as e:
             raise InvalidSystem(f"bad noc assignment: {e}") from e
+    if sys.schedule is not None:
+        from repro.core.schedule import validate_schedule
+        try:
+            validate_schedule(sys.schedule)
+        except ValueError as e:
+            raise InvalidSystem(f"bad schedule: {e}") from e
 
     if sys.style == "2D":
         if n != 1:

@@ -340,6 +340,7 @@ class TechDB:
     electricity_price: float = ELECTRICITY_PRICE_USD_PER_KWH
     emb_factor: float = EMBODIED_REGION_FACTOR
     grid_profile: Optional[Tuple[float, ...]] = None
+    price_profile: Optional[Tuple[float, ...]] = None
     load_profile: Tuple[float, ...] = FLAT_LOAD_PROFILE
     rcy_mat_frac: float = RCY_MAT_FRAC
     rcy_cpa_frac: float = RCY_CPA_FRAC
@@ -362,12 +363,15 @@ class TechDB:
         # recycling credits are fractions of the bill: clamp to [0, 1]
         self.rcy_mat_frac = min(1.0, max(0.0, float(self.rcy_mat_frac)))
         self.rcy_cpa_frac = min(1.0, max(0.0, float(self.rcy_cpa_frac)))
-        if self.grid_profile is not None:
-            self.grid_profile = tuple(float(x) for x in self.grid_profile)
-            if len(self.grid_profile) != HOURS_PER_DAY:
-                raise ValueError(
-                    f"grid_profile needs {HOURS_PER_DAY} hourly entries, "
-                    f"got {len(self.grid_profile)}")
+        for name in ("grid_profile", "price_profile"):
+            prof = getattr(self, name)
+            if prof is not None:
+                prof = tuple(float(x) for x in prof)
+                if len(prof) != HOURS_PER_DAY:
+                    raise ValueError(
+                        f"{name} needs {HOURS_PER_DAY} hourly entries, "
+                        f"got {len(prof)}")
+                setattr(self, name, prof)
         self.load_profile = tuple(float(x) for x in self.load_profile)
         if len(self.load_profile) != HOURS_PER_DAY:
             raise ValueError(

@@ -61,6 +61,7 @@ from repro.pathfinding.pareto import (
     workloads_from_configs,
 )
 from repro.pathfinding.pathfinder import OBJECTIVES, Pathfinder
+from repro.pathfinding.scenario import ScenarioSpec
 from repro.pathfinding.resume import (
     SearchCheckpointer,
     run_segmented,
@@ -86,7 +87,8 @@ __all__ = [
     "get_evaluator", "get_scenario_engine", "propose_batch", "OBJECTIVES",
     "Pathfinder", "DesignSpace", "GridSweep", "Objective",
     "ParallelTempering", "ParetoArchive", "RandomSearch",
-    "ScalarizationSweep", "ScenarioSweep", "SearchCheckpointer",
+    "ScalarizationSweep", "ScenarioSpec", "ScenarioSweep",
+    "SearchCheckpointer",
     "SearchResult", "SearchStrategy", "run_segmented",
     "search_fingerprint", "segment_fingerprint",
     "SimulatedAnnealing", "crowding_distance", "hypervolume",

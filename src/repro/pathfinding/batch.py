@@ -35,12 +35,17 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import comm as comm_mod
-from repro.core.carbon import SECONDS_PER_YEAR, effective_intensity
+from repro.core import schedule as sched_mod
+from repro.core.carbon import (
+    SECONDS_PER_YEAR,
+    effective_intensity,
+    effective_price,
+)
 from repro.core.regions import as_region
 from repro.core.chiplet import Chiplet
 from repro.core.evaluate import Metrics
 from repro.core.scalesim import OPERAND_BYTES, PSUM_BYTES
-from repro.core.techdb import DEFAULT_DB, TechDB
+from repro.core.techdb import DEFAULT_DB, HOURS_PER_DAY, TechDB
 from repro.core.templates import Normalizer
 from repro.core.workload import DEFAULT_TILE, GEMMWorkload, _partition
 from repro.pathfinding.space import (
@@ -856,10 +861,24 @@ class BatchEvaluator:
             runs = db.duty_runs_per_s * active_s
             # regional axes (default-neutral): lifetime electricity bill
             # on the dollar metric, fab-grid factor on embodied, 24h
-            # profile-weighted effective intensity on operational
+            # profile-weighted effective intensity on operational.
+            # Window-schedule spaces decode the encoded (start, shape)
+            # columns to per-row duty loads; the neutral (0, 0) rows
+            # reproduce db.load_profile's values bit-for-bit.
+            if sp.schedule == "window":
+                loads24 = _schedule_loads(v, sp, db)
+                eff_price = _effective_rows(
+                    db.electricity_price, db.price_profile, loads24)
+                eff_ci = _effective_rows(
+                    db.carbon_intensity, db.grid_profile, loads24)
+            else:
+                eff_price = effective_price(
+                    db.electricity_price, db.price_profile, db.load_profile)
+                eff_ci = effective_intensity(
+                    db.carbon_intensity, db.grid_profile, db.load_profile)
             dollar = ((chip_cost + icost + package) / bond_y
                       + jnp.take(f8(self.m_cost), mem_idx)
-                      + energy * runs / 3.6e6 * db.electricity_price)
+                      + energy * runs / 3.6e6 * jnp.asarray(eff_price))
 
             # embodied + operational CFP (Eqs. 2-3); t_mfg already
             # carries the wasted-die + recycling terms (ECO-CHIP)
@@ -885,9 +904,7 @@ class BatchEvaluator:
             else:
                 pkg_cfp = pkg_cfp + db.router_area_frac * mfg
             emb = (mfg + des + pkg_cfp) * db.emb_factor
-            eff_ci = effective_intensity(db.carbon_intensity,
-                                         db.grid_profile, db.load_profile)
-            ope = energy * runs / 3.6e6 * eff_ci
+            ope = energy * runs / 3.6e6 * jnp.asarray(eff_ci)
 
             out = [latency, energy, area, dollar, emb, ope, l_cr, l_d2d,
                    l_wr, e_compute_j, e_d2d_j, jnp.sum(loads, axis=1),
@@ -912,6 +929,35 @@ def _nb_yield_jnp(area, d0: float, alpha: float):
     return (1.0 + area * d0 / alpha) ** (-alpha)
 
 
+def _schedule_loads(v: np.ndarray, space: DesignSpace,
+                    db: TechDB) -> np.ndarray:
+    """``[P, 24]`` per-row duty loads decoded from the encoded
+    ``(start_hour, shape_idx)`` schedule columns of a window-schedule
+    population (the shape row rolled to the start hour, exactly
+    :func:`repro.core.schedule.schedule_load_row` per row)."""
+    tab = sched_mod.schedule_tables(db)
+    sc = space.sched_col
+    start = v[:, sc].astype(np.int64)
+    shape = np.clip(v[:, sc + 1], 0, tab.shape[0] - 1).astype(np.int64)
+    hrs = np.arange(HOURS_PER_DAY, dtype=np.int64)
+    roll = (hrs[None, :] - start[:, None]) % HOURS_PER_DAY
+    return np.take_along_axis(tab[shape], roll, axis=1)
+
+
+def _effective_rows(base: float, profile, loads: np.ndarray):
+    """Per-row effective intensity/price under per-row duty loads, in the
+    left-to-right hour accumulation order of
+    :func:`repro.core.carbon.effective_intensity` so neutral rows are
+    bit-identical to the scalar path. A ``None`` profile is the scalar
+    ``base`` for every row, bit-for-bit."""
+    if profile is None:
+        return np.float64(base)
+    corr = np.zeros(loads.shape[0], dtype=np.float64)
+    for h, p in enumerate(profile):
+        corr += (np.float64(p) - np.float64(base)) * loads[:, h]
+    return np.float64(base) + corr
+
+
 # ---------------------------------------------------------------------------
 # module-level evaluator cache + functional entry points
 # ---------------------------------------------------------------------------
@@ -930,12 +976,17 @@ def evaluator_cache_key(wl: GEMMWorkload, db: TechDB, tile_sizes,
     warmup). The comm model AND its liveness are part of the key: a
     mesh_noc space needs a program with the NoC terms compiled in, and a
     live-NoC space needs the 4-level move program (an env-frozen mesh
-    space must not alias onto it)."""
+    space must not alias onto it). The schedule model and its liveness
+    key the same way: a window space carries two extra encoded columns
+    and a windowed operational tail, so it must not alias onto a
+    fixed-schedule evaluator (or vice versa)."""
     return (wl, id(db), tile_sizes,
             space.max_chiplets if space is not None else
             DEFAULT_MAX_CHIPLETS,
             (space.comm, space.noc_live) if space is not None else
-            (comm_mod.resolve_comm(None), False))
+            (comm_mod.resolve_comm(None), False),
+            (space.schedule, space.sched_live) if space is not None else
+            (sched_mod.resolve_schedule(None), False))
 
 
 def cached_evaluator(registry: Dict[tuple, Tuple[TechDB, object]],
@@ -1012,22 +1063,35 @@ def fit_region_normalizers(wl: GEMMWorkload, regions,
     presumes the base ``db`` carries the neutral regional axes, which
     is the default)."""
     space = space or DesignSpace(db, max_chiplets)
-    mb = evaluate_batch(space.sample(samples, key=seed), wl, db, space=space)
+    pop = space.sample(samples, key=seed)
+    mb = evaluate_batch(pop, wl, db, space=space)
     fields = mb.fields()
     active_s = db.lifetime_years * SECONDS_PER_YEAR * db.use_fraction
     runs = db.duty_runs_per_s * active_s
     energy = np.asarray(fields["energy_j"], dtype=np.float64)
     dollar = np.asarray(fields["dollar"], dtype=np.float64)
     emb = np.asarray(fields["emb_cfp_kg"], dtype=np.float64)
+    # window-schedule spaces: per-row duty loads reshape the regional
+    # effective intensity/price row-by-row (neutral rows = db.load_profile)
+    if space.schedule == "window":
+        loads = _schedule_loads(pop.astype(np.int64), space, db)
+    else:
+        loads = None
     out = []
     for spec in regions:
         r = as_region(spec)
-        eff = effective_intensity(r.carbon_intensity, r.grid_profile,
-                                  db.load_profile)
+        if loads is None:
+            eff = np.float64(effective_intensity(
+                r.carbon_intensity, r.grid_profile, db.load_profile))
+            eprice = np.float64(effective_price(
+                r.electricity_price, r.price_profile, db.load_profile))
+        else:
+            eff = _effective_rows(r.carbon_intensity, r.grid_profile, loads)
+            eprice = _effective_rows(
+                r.electricity_price, r.price_profile, loads)
         per_region = dict(fields)
-        per_region["ope_cfp_kg"] = energy * runs / 3.6e6 * np.float64(eff)
-        per_region["dollar"] = (
-            dollar + energy * runs / 3.6e6 * np.float64(r.electricity_price))
+        per_region["ope_cfp_kg"] = energy * runs / 3.6e6 * eff
+        per_region["dollar"] = dollar + energy * runs / 3.6e6 * eprice
         per_region["emb_cfp_kg"] = emb * np.float64(r.emb_factor)
         out.append(Normalizer.fit_arrays(per_region))
     return out

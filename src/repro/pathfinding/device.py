@@ -71,6 +71,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import comm as comm_mod
+from repro.core import schedule as sched_mod
 from repro.core.carbon import SECONDS_PER_YEAR
 from repro.core.scalesim import OPERAND_BYTES
 from repro.core.techdb import DEFAULT_DB, HOURS_PER_DAY, TechDB
@@ -133,7 +134,6 @@ class _Cfg:
     use_fraction: float
     duty_runs_per_s: float
     router_area_frac: float           # NoC share of die mfg carbon -> C_HI
-    load_profile: Tuple[float, ...]   # 24h diurnal duty weights (sum 1)
     comm: str                         # communication model (repro.core.comm)
     noc_col: int                      # first NoC column (mesh_noc layouts)
     n_mesh: int                       # len(comm.MESH_DIMS)
@@ -145,6 +145,14 @@ class _Cfg:
     # per-link-kind split using the p25_hl/p3_hl tables
     hop_uniform: Optional[float]
     noc_live: bool                    # NoC axes searchable (not frozen)
+    # temporal scheduling seam (repro.core.schedule): the 24h duty
+    # weighting rides in the trace-constant tb["sched_tab"] lookup —
+    # fixed spaces gather its row 0 (= db.load_profile verbatim),
+    # window spaces gather per-design (start, shape) columns
+    schedule: str                     # schedule model (fixed | window)
+    sched_col: int                    # first schedule column (window)
+    n_sched: int                      # schedule-shape table rows
+    sched_live: bool                  # schedule axes searchable
     use_pallas: bool
 
 
@@ -544,7 +552,8 @@ def _gather_sims(v, a_idx, s_idx, di, start, end, tb, cfg: _Cfg, rt=None):
     return sims, mn_bits
 
 
-def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, rt=None):
+def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, pprofile,
+                 rt=None):
     """The 13 MetricsBatch arrays for an encoded population, fully jitted.
 
     Mirrors ``BatchEvaluator.__call__`` stage by stage (same operation
@@ -553,12 +562,18 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, rt=None):
     ``ci`` is the grid carbon intensity as a *runtime* scalar (or
     per-row vector): region sweeps ride through the compiled program as
     data instead of forcing a retrace per region. ``price`` ($/kWh),
-    ``embf`` (regional embodied multiplier) and ``profile`` (24h grid
-    intensity row) are the remaining regional axes, runtime data too;
-    their neutral values (0.0, 1.0, flat-at-ci) reproduce the scalar
-    model bit-for-bit — operational CFP uses
-    ``ci + sum((profile - ci) * load)``, whose correction term is
-    exactly +0.0 for a flat profile. ``rt`` optionally
+    ``embf`` (regional embodied multiplier), ``profile`` (24h grid
+    intensity row) and ``pprofile`` (24h electricity-price row) are the
+    remaining regional axes, runtime data too; their neutral values
+    (0.0, 1.0, flat-at-ci, flat-at-price) reproduce the scalar model
+    bit-for-bit — operational CFP uses
+    ``ci + sum((profile - ci) * load)`` and the lifetime bill
+    ``price + sum((pprofile - price) * load)``, whose correction terms
+    are exactly +0.0 for flat rows. The ``load`` weights come from the
+    trace-constant ``tb["sched_tab"]``: fixed-schedule programs read
+    row 0 (= ``db.load_profile`` verbatim), window programs gather the
+    per-design encoded (start_hour, shape_idx) columns — schedules are
+    data, not shapes. ``rt`` optionally
     overrides the per-workload compile-time constants (``T0``/``T1``
     tile totals, ``wr_bits``) with traced values — the stacked scenario
     engine's workload axis; ``cfg.T0``/``cfg.T1`` then only bound the
@@ -677,8 +692,26 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, rt=None):
     bond_y = topo["bond_y"]
     active_s = cfg.lifetime_years * SECONDS_PER_YEAR * cfg.use_fraction
     runs = cfg.duty_runs_per_s * active_s
+    # decoded duty weights: window spaces roll the gathered shape row to
+    # the per-design start hour; fixed spaces read the shared row 0
+    # (= the legacy static load_profile values). Both branches shape
+    # the weights [P, 24] — a scalar-vs-vector effective intensity
+    # would let XLA reassociate the operational products differently
+    # between the fixed and window programs, an ulp of cross-program
+    # drift the neutral-schedule bit-invisibility contract forbids.
+    if cfg.schedule == "window":
+        sc = cfg.sched_col
+        s_start = v[:, sc]
+        s_shape = jnp.clip(v[:, sc + 1], 0, cfg.n_sched - 1)
+        hrs = jnp.arange(HOURS_PER_DAY, dtype=jnp.int32)
+        roll = (hrs[None, :] - s_start[:, None]) % HOURS_PER_DAY
+        load = jnp.take_along_axis(tb["sched_tab"][s_shape], roll,
+                                   axis=-1)
+    else:
+        load = jnp.broadcast_to(tb["sched_tab"][0], (P, HOURS_PER_DAY))
+    eff_price = price + jnp.sum((pprofile - price) * load, axis=-1)
     dollar = ((chip_cost + icost + package) / bond_y + mrow[:, 2]
-              + energy * runs / 3.6e6 * price)
+              + energy * runs / 3.6e6 * eff_price)
 
     # embodied + operational CFP (Eqs. 2-3)
     mfg_pc = jnp.where(mask, cphys[:, :, 3], 0.0)
@@ -701,7 +734,6 @@ def _metrics_jax(v, tb, cfg: _Cfg, ci, price, embf, profile, rt=None):
     else:
         pkg_cfp = pkg_cfp + cfg.router_area_frac * mfg
     emb = (mfg + des + pkg_cfp) * embf
-    load = jnp.asarray(cfg.load_profile, dtype=jnp.float64)
     eff_ci = ci + jnp.sum((profile - ci) * load, axis=-1)
     ope = energy * runs / 3.6e6 * eff_ci
 
@@ -726,19 +758,20 @@ def _nb_yield(area, d0: float, alpha: float):
     return (1.0 + area * d0 / alpha) ** (-alpha)
 
 
-def _eval_cost_jax(v, mins, medians, w, ci, price, embf, profile, tb,
-                   cfg: _Cfg, rt=None):
+def _eval_cost_jax(v, mins, medians, w, ci, price, embf, profile,
+                   pprofile, tb, cfg: _Cfg, rt=None):
     """Fused metrics + Eq. 17 cost (METRIC_FIELDS column order) + the
     ``OBJECTIVE_AXES`` vector ``(latency_s, dollar, total_cfp)``.
 
     ``w`` is either a single ``[6]`` weight row or a per-row ``[P, 6]``
     matrix (the scalarization-sweep case: every chain scalarizes with
     its own direction inside the same program). ``ci``/``price``/
-    ``embf``/``profile``/``rt`` are the runtime region/workload knobs
-    of :func:`_metrics_jax`."""
+    ``embf``/``profile``/``pprofile``/``rt`` are the runtime
+    region/workload knobs of :func:`_metrics_jax`."""
     import jax.numpy as jnp
 
-    mets = _metrics_jax(v, tb, cfg, ci, price, embf, profile, rt)
+    mets = _metrics_jax(v, tb, cfg, ci, price, embf, profile, pprofile,
+                        rt)
     x = jnp.stack([mets[1], mets[2], mets[0], mets[3], mets[4], mets[5]],
                   axis=1)
     cost = ((x - mins[None, :]) / medians[None, :]
@@ -779,6 +812,11 @@ def _validity_jax(v, tb, cfg: _Cfg):
         noc_ok = ((mi >= 0) & (mi < cfg.n_mesh)
                   & (ei >= 0) & (ei < cfg.n_entry))
         ok &= jnp.all(noc_ok | ~active, axis=1)
+    if cfg.schedule == "window":
+        st_ = v[:, cfg.sched_col]
+        sh_ = v[:, cfg.sched_col + 1]
+        ok &= ((st_ >= 0) & (st_ < HOURS_PER_DAY)
+               & (sh_ >= 0) & (sh_ < cfg.n_sched))
     pc = _popcount(stck, C)
     no3d, no25, nostk = p3 == -1, p25 == -1, stck == 0
     has25 = (p25 >= 0) & (p25 < cfg.n_pairs25)
@@ -793,7 +831,7 @@ def _validity_jax(v, tb, cfg: _Cfg):
     return ok
 
 
-def _propose_jax(key, v, tb, cfg: _Cfg, noc_on=None):
+def _propose_jax(key, v, tb, cfg: _Cfg, noc_on=None, sched_on=None):
     """One hierarchical move per encoded row, mirroring the level/branch
     distribution of :func:`repro.core.sa.propose` with ``jax.random``.
 
@@ -808,7 +846,15 @@ def _propose_jax(key, v, tb, cfg: _Cfg, noc_on=None):
     move's randomness — is untouched. ``noc_on`` (0.0/1.0, traced
     scalar) widens the level draw to include it; ``None`` falls back to
     the static ``cfg.noc_live`` (frozen mesh spaces keep the exact
-    3-level legacy distribution)."""
+    3-level legacy distribution).
+
+    Under the window schedule model one more level perturbs the design's
+    (start_hour, shape_idx) schedule pair, fed by its own ``fold_in``
+    side-stream (the temporal twin of the NoC level); ``sched_on``
+    (0.0/1.0, traced scalar) gates it the same way, with ``None``
+    falling back to the static ``cfg.sched_live`` — forced-neutral
+    window spaces consume no extra base draws and replay the legacy
+    level distribution exactly."""
     import jax
     import jax.numpy as jnp
 
@@ -816,6 +862,7 @@ def _propose_jax(key, v, tb, cfg: _Cfg, noc_on=None):
     P = v.shape[0]
     slot = jnp.arange(C, dtype=jnp.int32)
     mesh = cfg.comm == "mesh_noc"
+    win = cfg.schedule == "window"
     # one threefry pass supplies every draw of the sweep: row i is the
     # i-th logical random stream (uniform ints come from floor(u * m))
     U = jax.random.uniform(key, (31 + C, P), dtype=jnp.float64)
@@ -926,12 +973,13 @@ def _propose_jax(key, v, tb, cfg: _Cfg, noc_on=None):
         noc_gs = jnp.where(grow[:, None, None], noc_grow, noc_shr)
         noc_gs = jnp.where((slot[None, :] < n2[:, None])[:, :, None],
                            noc_gs, -1)
-        cand_gs = jnp.concatenate(
-            [head, chip_gs.reshape(P, -1), noc_gs.reshape(P, -1)],
-            axis=1).astype(jnp.int32)
+        gs_parts = [head, chip_gs.reshape(P, -1), noc_gs.reshape(P, -1)]
     else:
-        cand_gs = jnp.concatenate(
-            [head, chip_gs.reshape(P, -1)], axis=1).astype(jnp.int32)
+        gs_parts = [head, chip_gs.reshape(P, -1)]
+    if win:
+        # whole-design schedule columns ride through grow/shrink intact
+        gs_parts.append(v[:, cfg.sched_col:cfg.sched_col + 2])
+    cand_gs = jnp.concatenate(gs_parts, axis=1).astype(jnp.int32)
 
     # -- package level ------------------------------------------------------
     cur_pkg25 = tb["pair25_pkg"][jnp.maximum(p25, 0)]
@@ -992,19 +1040,64 @@ def _propose_jax(key, v, tb, cfg: _Cfg, noc_on=None):
         cand_noc = v.at[:, cfg.noc_col:cfg.noc_col + 2 * C].set(
             noc_mv.reshape(P, -1).astype(jnp.int32))
 
+    # -- schedule level: nudge start hour or redraw the window shape --------
+    if win:
+        # own fold_in side-stream (8), mirroring the NoC stream (7): the
+        # base U matrix and the NoC draws stay byte-identical whether or
+        # not schedule moves exist, so forced-neutral window spaces
+        # replay legacy/mesh trajectories bit-for-bit
+        Us = jax.random.uniform(jax.random.fold_in(key, 8), (3, P),
+                                dtype=jnp.float64)
+        sc = cfg.sched_col
+        s_start = v[:, sc]
+        s_shape = v[:, sc + 1]
+        start2 = (s_start + 1 + jnp.floor(
+            Us[1] * (HOURS_PER_DAY - 1)).astype(jnp.int32)) % HOURS_PER_DAY
+        shape2 = (s_shape + 1 + jnp.floor(
+            Us[2] * (cfg.n_sched - 1)).astype(jnp.int32)) % cfg.n_sched
+        s_coin = Us[0] < 0.5  # start-hour nudge vs shape redraw
+        cand_sched = (
+            v.at[:, sc].set(jnp.where(s_coin, start2, s_start))
+            .at[:, sc + 1].set(jnp.where(s_coin, s_shape, shape2)))
+
     # -- hierarchical branch selection + validity gate ----------------------
     is_app = uni(28) < P_APPLICATION
     coin = uni(30)
-    if mesh:
-        # noc_on in {0.0, 1.0} widens the uniform level draw from 3 to 4
-        # options as runtime data: floor(u * 3.0) == the legacy ri(29, 3)
-        # exactly, so frozen-NoC cells replay the 3-level distribution
-        noc_on_f = (noc_on if noc_on is not None
-                    else (1.0 if cfg.noc_live else 0.0))
-        level = jnp.floor(U[29] * (3.0 + noc_on_f)).astype(jnp.int32)
-        lower = jnp.where(
-            (level == 1)[:, None], cand_rep,
-            jnp.where((level == 2)[:, None], cand_pkg, cand_noc))
+    if mesh or win:
+        # noc_on/sched_on in {0.0, 1.0} widen the uniform level draw
+        # from 3 to up-to-5 options as runtime data: floor(u * 3.0) ==
+        # the legacy ri(29, 3) exactly, so frozen-axis cells replay the
+        # 3-level distribution
+        noc_on_f = ((noc_on if noc_on is not None
+                     else (1.0 if cfg.noc_live else 0.0))
+                    if mesh else None)
+        sched_on_f = ((sched_on if sched_on is not None
+                       else (1.0 if cfg.sched_live else 0.0))
+                      if win else None)
+        n_levels = 3.0
+        if mesh:
+            n_levels = n_levels + noc_on_f
+        if win:
+            n_levels = n_levels + sched_on_f
+        level = jnp.floor(U[29] * n_levels).astype(jnp.int32)
+        if mesh and win:
+            # runtime mapping: the schedule level sits after the NoC
+            # level iff NoC moves are on for this row/cell
+            noc_i = jnp.floor(noc_on_f).astype(jnp.int32)
+            is_noc = (level == 3) & (noc_i == 1)
+            lower = jnp.where(
+                (level == 1)[:, None], cand_rep,
+                jnp.where((level == 2)[:, None], cand_pkg,
+                          jnp.where(is_noc[:, None], cand_noc,
+                                    cand_sched)))
+        elif mesh:
+            lower = jnp.where(
+                (level == 1)[:, None], cand_rep,
+                jnp.where((level == 2)[:, None], cand_pkg, cand_noc))
+        else:
+            lower = jnp.where(
+                (level == 1)[:, None], cand_rep,
+                jnp.where((level == 2)[:, None], cand_pkg, cand_sched))
     else:
         level = ri(29, 3)
         lower = jnp.where((level == 1)[:, None], cand_rep, cand_pkg)
@@ -1130,7 +1223,6 @@ def _base_cfg(sp: DesignSpace, db: TechDB, T0: int, T1: int,
         use_fraction=db.use_fraction,
         duty_runs_per_s=db.duty_runs_per_s,
         router_area_frac=db.router_area_frac,
-        load_profile=tuple(db.load_profile),
         comm=sp.comm,
         noc_col=sp.noc_col,
         n_mesh=len(comm_mod.MESH_DIMS),
@@ -1139,6 +1231,10 @@ def _base_cfg(sp: DesignSpace, db: TechDB, T0: int, T1: int,
         noc_energy_pj_bit=db.noc_energy_pj_bit,
         hop_uniform=db.uniform_hop_latency(),
         noc_live=sp.noc_live,
+        schedule=sp.schedule,
+        sched_col=sp.sched_col if sp.schedule == "window" else -1,
+        n_sched=sched_mod.n_schedule_shapes(),
+        sched_live=sp.sched_live,
         use_pallas=use_pallas,
     )
 
@@ -1176,6 +1272,10 @@ def _shared_tables(host, sp: DesignSpace) -> dict:
         p3_hl=jnp.asarray(host.p3_hl),
         noc_hops=jnp.asarray(noc_h),
         noc_routers=jnp.asarray(noc_r),
+        # duty-weight shape table (row 0 = db.load_profile verbatim):
+        # fixed-schedule programs gather row 0, window programs gather
+        # the encoded per-design (start, shape) columns against it
+        sched_tab=jnp.asarray(sched_mod.schedule_tables(host.db)),
         n_sram=jnp.asarray(sp.n_sram),
         **{k: jnp.asarray(a) for k, a in mt.items()},
     )
@@ -1294,12 +1394,13 @@ def _resolve_pallas(use_pallas: Optional[bool]) -> bool:
 
 
 def _db_region_cols(db: TechDB) -> Tuple[np.float64, np.float64,
-                                         np.ndarray]:
-    """The (price, embf, profile) runtime region columns a single-region
-    evaluator synthesizes from its TechDB. A ``None`` grid profile
-    becomes the flat row at ``carbon_intensity`` — the in-program
-    correction ``sum((profile - ci) * load)`` is then exactly +0.0, so
-    the default columns are bit-neutral."""
+                                         np.ndarray, np.ndarray]:
+    """The (price, embf, profile, pprofile) runtime region columns a
+    single-region evaluator synthesizes from its TechDB. A ``None`` grid
+    (price) profile becomes the flat row at ``carbon_intensity``
+    (``electricity_price``) — the in-program corrections
+    ``sum((profile - ci) * load)`` / ``sum((pprofile - price) * load)``
+    are then exactly +0.0, so the default columns are bit-neutral."""
     price = np.float64(db.electricity_price)
     embf = np.float64(db.emb_factor)
     if db.grid_profile is None:
@@ -1307,7 +1408,11 @@ def _db_region_cols(db: TechDB) -> Tuple[np.float64, np.float64,
                           np.float64(db.carbon_intensity))
     else:
         profile = np.asarray(db.grid_profile, dtype=np.float64)
-    return price, embf, profile
+    if db.price_profile is None:
+        pprofile = np.full(len(db.load_profile), price)
+    else:
+        pprofile = np.asarray(db.price_profile, dtype=np.float64)
+    return price, embf, profile, pprofile
 
 
 class DeviceEvaluator:
@@ -1345,10 +1450,10 @@ class DeviceEvaluator:
         # cannot reuse host-backed int buffers and would warn)
         donate = () if jax.default_backend() == "cpu" else (0,)
 
-        def _eval_fn(v, mins, med, w, ci, price, embf, profile):
+        def _eval_fn(v, mins, med, w, ci, price, embf, profile, pprofile):
             _count_trace("eval_cost")
             return _eval_cost_jax(v, mins, med, w, ci, price, embf,
-                                  profile, tb, cfg)
+                                  profile, pprofile, tb, cfg)
 
         self._eval_cost_jit = jax.jit(_eval_fn, donate_argnums=donate)
         self._propose_jit = jax.jit(
@@ -1393,12 +1498,13 @@ class DeviceEvaluator:
         with enable_x64():
             v, n_real = self._pad(encoded)
             mins, medians = norm.weights_arrays()
-            price, embf, profile = _db_region_cols(self.db)
+            price, embf, profile, pprofile = _db_region_cols(self.db)
             mets, cost, vec = self._eval_cost_jit(
                 jnp.asarray(v), jnp.asarray(mins), jnp.asarray(medians),
                 jnp.asarray(np.asarray(template.weights, dtype=np.float64)),
                 jnp.asarray(np.float64(self.db.carbon_intensity)),
-                jnp.asarray(price), jnp.asarray(embf), jnp.asarray(profile))
+                jnp.asarray(price), jnp.asarray(embf), jnp.asarray(profile),
+                jnp.asarray(pprofile))
             arrs = [np.asarray(m)[:n_real] for m in mets]
             return (MetricsBatch(*arrs), np.asarray(cost)[:n_real],
                     np.asarray(vec)[:n_real])
@@ -1444,10 +1550,11 @@ class DeviceEvaluator:
 
         tb, cfg = self.tables, self.cfg
 
-        def init(v0, mins, med, w, ci, price, embf, profile):
+        def init(v0, mins, med, w, ci, price, embf, profile, pprofile):
             _count_trace("pt_init")
             _, cost0, vec0 = _eval_cost_jax(v0, mins, med, w, ci, price,
-                                            embf, profile, tb, cfg)
+                                            embf, profile, pprofile,
+                                            tb, cfg)
             return cost0, vec0
 
         fn = jax.jit(init)
@@ -1466,7 +1573,7 @@ class DeviceEvaluator:
         tb, cfg = self.tables, self.cfg
 
         def run(v0, costs0, best_v0, best_c0, key, sweep0, temps, mins,
-                med, w, pair_ok, ci, price, embf, profile):
+                med, w, pair_ok, ci, price, embf, profile, pprofile):
             _count_trace("pt")
             inv_t = 1.0 / temps
 
@@ -1476,7 +1583,7 @@ class DeviceEvaluator:
                 prop = _propose_jax(kp, v, tb, cfg)
                 _, pcost, pvec = _eval_cost_jax(prop, mins, med, w, ci,
                                                 price, embf, profile,
-                                                tb, cfg)
+                                                pprofile, tb, cfg)
                 u = jax.random.uniform(ka, (n,), dtype=jnp.float64)
                 delta = pcost - costs
                 accept = (delta <= 0) | (
@@ -1587,13 +1694,13 @@ class DeviceEvaluator:
                         f"got {pair_ok.shape}")
             temps_np = np.asarray(temps, np.float64)
             ci = np.float64(self.db.carbon_intensity)
-            price, embf, profile = _db_region_cols(self.db)
+            price, embf, profile, pprofile = _db_region_cols(self.db)
             key0 = jax.random.PRNGKey(seed)
             args = (jnp.asarray(temps_np), jnp.asarray(mins),
                     jnp.asarray(medians), jnp.asarray(w),
                     jnp.asarray(pair_ok), jnp.asarray(ci),
                     jnp.asarray(price), jnp.asarray(embf),
-                    jnp.asarray(profile))
+                    jnp.asarray(profile), jnp.asarray(pprofile))
 
             from repro.pathfinding.resume import (
                 run_segmented,
@@ -1609,6 +1716,14 @@ class DeviceEvaluator:
                     # program: pre-NoC checkpoints must mismatch cleanly
                     extra["comm"] = np.frombuffer(
                         self.cfg.comm.encode(), dtype=np.uint8)
+                if self.cfg.schedule != "fixed":
+                    # the window encoding reshapes the row: pre-schedule
+                    # checkpoints must mismatch cleanly (fixed-schedule
+                    # fingerprints stay byte-identical to pre-PR ones)
+                    extra["schedule"] = np.frombuffer(
+                        self.cfg.schedule.encode(), dtype=np.uint8)
+                if not np.all(pprofile == price):
+                    extra["pprofile"] = pprofile
                 fp = segment_fingerprint(
                     "device_pt", v0=v0, temps=temps_np,
                     swap_every=swap_every, seed=seed, mins=mins,
@@ -1629,7 +1744,7 @@ class DeviceEvaluator:
             def fresh():
                 cost0, vec0 = self._pt_init_fn(n)(
                     jnp.asarray(v0), args[1], args[2], args[3], args[5],
-                    args[6], args[7], args[8])
+                    args[6], args[7], args[8], args[9])
                 cost0_np = np.asarray(cost0)
                 st["cost0_np"] = cost0_np
                 bi = int(np.argmin(cost0_np))
@@ -1882,19 +1997,21 @@ class ScenarioEngine:
 
         cfg = self.cfg
 
-        def run(v, mins, med, w, ci, price, embf, profile, widx):
+        def run(v, mins, med, w, ci, price, embf, profile, pprofile,
+                widx):
             _count_trace("scenario_eval")
 
             def cell(v_s, mins_s, med_s, w_s, ci_s, price_s, embf_s,
-                     profile_s, wi):
+                     profile_s, pprofile_s, wi):
                 tbc, rt = self._cell_tables(wi)
                 _, cost, vec = _eval_cost_jax(v_s, mins_s, med_s, w_s,
                                               ci_s, price_s, embf_s,
-                                              profile_s, tbc, cfg, rt)
+                                              profile_s, pprofile_s,
+                                              tbc, cfg, rt)
                 return cost, vec
 
             return jax.vmap(cell)(v, mins, med, w, ci, price, embf,
-                                  profile, widx)
+                                  profile, pprofile, widx)
 
         fn = jax.jit(run)
         self._fn_cache[key_t] = fn
@@ -1902,14 +2019,16 @@ class ScenarioEngine:
 
     @staticmethod
     def _region_cols(S: int, ci: np.ndarray, price=None, embf=None,
-                     profile=None) -> Tuple[np.ndarray, np.ndarray,
-                                            np.ndarray]:
+                     profile=None, pprofile=None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray]:
         """Normalize/synthesize the per-cell region columns: ``price``
         [S] (default zeros), ``embf`` [S] (default ones), ``profile``
         [S, 24] (default flat-at-ci rows, whose in-program correction
-        is exactly +0.0). Always materialized so the jitted programs
-        have ONE signature — legacy scalar-CI callers and full
-        five-axis callers share the same compile."""
+        is exactly +0.0) and ``pprofile`` [S, 24] (default
+        flat-at-price rows, correction +0.0 too). Always materialized
+        so the jitted programs have ONE signature — legacy scalar-CI
+        callers and full six-axis callers share the same compile."""
         ci = np.asarray(ci, np.float64).reshape(S)
         price = (np.zeros(S, np.float64) if price is None
                  else np.asarray(price, np.float64).reshape(S))
@@ -1919,20 +2038,26 @@ class ScenarioEngine:
                    if profile is None
                    else np.asarray(profile, np.float64).reshape(
                        S, HOURS_PER_DAY))
-        return price, embf, profile
+        pprofile = (np.repeat(price[:, None], HOURS_PER_DAY, axis=1)
+                    if pprofile is None
+                    else np.asarray(pprofile, np.float64).reshape(
+                        S, HOURS_PER_DAY))
+        return price, embf, profile, pprofile
 
     def evaluate_cost(self, encoded: np.ndarray, mins: np.ndarray,
                       medians: np.ndarray, weights: np.ndarray,
                       ci: np.ndarray, widx: np.ndarray,
                       price: Optional[np.ndarray] = None,
                       embf: Optional[np.ndarray] = None,
-                      profile: Optional[np.ndarray] = None
+                      profile: Optional[np.ndarray] = None,
+                      pprofile: Optional[np.ndarray] = None
                       ) -> Tuple[np.ndarray, np.ndarray]:
         """Fused cost + objective vectors for a stacked ``[S, m, width]``
         population (per-cell ``[S, 6]`` normalizer rows / weight rows,
         ``[S]`` carbon intensities and workload ids, plus the optional
-        regional axes ``price`` [S], ``embf`` [S] and ``profile``
-        [S, 24] — omitted axes synthesize their neutral columns).
+        regional axes ``price`` [S], ``embf`` [S], ``profile`` [S, 24]
+        and ``pprofile`` [S, 24] — omitted axes synthesize their
+        neutral columns).
         Returns ``(cost [S, m], vec [S, m, 3])``; the row axis is
         padded to a power-of-two bucket so repeated calls share one
         program."""
@@ -1947,8 +2072,8 @@ class ScenarioEngine:
                 v = np.concatenate(
                     [v, np.repeat(v[:, :1], mb - m, axis=1)], axis=1)
             ci_a = np.asarray(ci, np.float64).reshape(S)
-            price_a, embf_a, profile_a = self._region_cols(
-                S, ci_a, price, embf, profile)
+            price_a, embf_a, profile_a, pprofile_a = self._region_cols(
+                S, ci_a, price, embf, profile, pprofile)
             fn = self._eval_fn(S, mb)
             cost, vec = fn(
                 jnp.asarray(v),
@@ -1957,6 +2082,7 @@ class ScenarioEngine:
                 jnp.asarray(np.asarray(weights, np.float64).reshape(S, 6)),
                 jnp.asarray(ci_a), jnp.asarray(price_a),
                 jnp.asarray(embf_a), jnp.asarray(profile_a),
+                jnp.asarray(pprofile_a),
                 jnp.asarray(np.asarray(widx, np.int32).reshape(S)))
             return np.asarray(cost)[:, :m], np.asarray(vec)[:, :m]
 
@@ -1974,11 +2100,11 @@ class ScenarioEngine:
         cfg = self.cfg
 
         def eval_cell(v_s, mins_s, med_s, w_s, ci_s, price_s, embf_s,
-                      profile_s, wi):
+                      profile_s, pprofile_s, wi):
             tbc, rt = self._cell_tables(wi)
             _, cost, vec = _eval_cost_jax(v_s, mins_s, med_s, w_s, ci_s,
                                           price_s, embf_s, profile_s,
-                                          tbc, cfg, rt)
+                                          pprofile_s, tbc, cfg, rt)
             return cost, vec
 
         return eval_cell
@@ -1993,12 +2119,14 @@ class ScenarioEngine:
 
         eval_cell = self._eval_cell_fn()
 
-        def init(v0, mins, med, w, ci, price, embf, profile, widx, key):
+        def init(v0, mins, med, w, ci, price, embf, profile, pprofile,
+                 widx, key):
             _count_trace("scenario_init")
             keys0 = jax.vmap(
                 lambda i: jax.random.fold_in(key, i))(jnp.arange(S))
             cost0, vec0 = jax.vmap(eval_cell)(v0, mins, med, w, ci,
-                                              price, embf, profile, widx)
+                                              price, embf, profile,
+                                              pprofile, widx)
             return keys0, cost0, vec0
 
         fn = jax.jit(init)
@@ -2017,15 +2145,18 @@ class ScenarioEngine:
         tb, cfg = self.tables, self.cfg
         eval_cell = self._eval_cell_fn()
         mesh_comm = cfg.comm == "mesh_noc"
+        win_sched = cfg.schedule == "window"
 
         def cell_step(key_s, v_s, costs_s, temps_s, inv_s, mins_s, med_s,
-                      w_s, pair_s, ci_s, price_s, embf_s, profile_s, wi,
-                      noc_s, sweep):
+                      w_s, pair_s, ci_s, price_s, embf_s, profile_s,
+                      pprofile_s, wi, noc_s, sched_s, sweep):
             key_s, kp, ka, ksw = jax.random.split(key_s, 4)
             prop = _propose_jax(kp, v_s, tb, cfg,
-                                noc_on=noc_s if mesh_comm else None)
+                                noc_on=noc_s if mesh_comm else None,
+                                sched_on=sched_s if win_sched else None)
             pcost, pvec = eval_cell(prop, mins_s, med_s, w_s, ci_s,
-                                    price_s, embf_s, profile_s, wi)
+                                    price_s, embf_s, profile_s,
+                                    pprofile_s, wi)
             u = jax.random.uniform(ka, (n,), dtype=jnp.float64)
             delta = pcost - costs_s
             accept = (delta <= 0) | (
@@ -2046,15 +2177,17 @@ class ScenarioEngine:
             return key_s, v_s, costs_s, cand_v, cand_c, prop, pvec
 
         def _run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps, mins,
-                 med, w, pair_ok, ci, price, embf, profile, widx, noc_on):
+                 med, w, pair_ok, ci, price, embf, profile, pprofile,
+                 widx, noc_on, sched_on):
             # ``sweep0`` is a per-cell [S] vector of job-local sweep
             # counters: every cell keeps its own swap schedule, so a
             # serving job that joins the batch mid-stream sees the same
             # sweep indices it would solo. Lockstep callers pass
             # ``done * ones(S)`` and get the exact pre-vector program
             # semantics (the swap cond is per-lane either way).
-            # ``noc_on`` is the per-cell [S] NoC-move gate (mesh_noc
-            # engines only; a dead input elsewhere).
+            # ``noc_on``/``sched_on`` are the per-cell [S] NoC-move /
+            # schedule-move gates (mesh_noc / window engines only; dead
+            # inputs elsewhere).
             _count_trace("scenario_pt")
             inv_t = 1.0 / temps
 
@@ -2062,9 +2195,10 @@ class ScenarioEngine:
                 v, costs, best_v, best_c, keys = carry
                 keys, v, costs, cand_v, cand_c, prop, pvec = jax.vmap(
                     cell_step,
-                    in_axes=(0,) * 16,
+                    in_axes=(0,) * 18,
                 )(keys, v, costs, temps, inv_t, mins, med, w, pair_ok,
-                  ci, price, embf, profile, widx, noc_on, sweep0 + t)
+                  ci, price, embf, profile, pprofile, widx, noc_on,
+                  sched_on, sweep0 + t)
                 better = cand_c < best_c
                 best_c = jnp.where(better, cand_c, best_c)
                 best_v = jnp.where(better[:, None], cand_v, best_v)
@@ -2078,19 +2212,38 @@ class ScenarioEngine:
                 jnp.arange(seg))
             return carry, ys
 
-        if mesh_comm:
+        # the public replay contract (the serving layer's) is exactly 17
+        # positional args, plus a trailing ``noc_on`` iff mesh_noc and a
+        # trailing ``sched_on`` iff window — neutral gates for absent
+        # axes are dead inputs the compiler strips, so every engine
+        # whose optional axes are off emits the same program it did
+        # before those axes existed
+        if mesh_comm and win_sched:
             run = _run
-        else:
-            # the legacy signature stays exactly 16 positional args (the
-            # serving layer's replay contract); the zero noc column is a
-            # dead input the compiler strips, so the emitted program is
-            # bit-identical to the pre-NoC one
+        elif mesh_comm:
             def run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps,
                     mins, med, w, pair_ok, ci, price, embf, profile,
-                    widx):
+                    pprofile, widx, noc_on):
                 return _run(v0, costs0, best_v0, best_c0, keys0, sweep0,
                             temps, mins, med, w, pair_ok, ci, price,
-                            embf, profile, widx, jnp.zeros_like(ci))
+                            embf, profile, pprofile, widx, noc_on,
+                            jnp.zeros_like(ci))
+        elif win_sched:
+            def run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps,
+                    mins, med, w, pair_ok, ci, price, embf, profile,
+                    pprofile, widx, sched_on):
+                return _run(v0, costs0, best_v0, best_c0, keys0, sweep0,
+                            temps, mins, med, w, pair_ok, ci, price,
+                            embf, profile, pprofile, widx,
+                            jnp.zeros_like(ci), sched_on)
+        else:
+            def run(v0, costs0, best_v0, best_c0, keys0, sweep0, temps,
+                    mins, med, w, pair_ok, ci, price, embf, profile,
+                    pprofile, widx):
+                return _run(v0, costs0, best_v0, best_c0, keys0, sweep0,
+                            temps, mins, med, w, pair_ok, ci, price,
+                            embf, profile, pprofile, widx,
+                            jnp.zeros_like(ci), jnp.zeros_like(ci))
 
         fn = jax.jit(run)
         self._fn_cache[key_t] = fn
@@ -2105,15 +2258,17 @@ class ScenarioEngine:
         without the host loop in :meth:`parallel_tempering`. The
         returned callable has signature ``run(v, costs, best_v, best_c,
         keys, sweep0, temps, mins, med, w, pair_ok, ci, price, embf,
-        profile, widx)`` — ``price``/``embf`` are the per-cell [S]
-        regional price and embodied-factor columns and ``profile`` the
-        [S, 24] grid-intensity rows (neutral cells pass 0.0 / 1.0 /
-        flat-at-ci); mesh_noc engines take one extra trailing ``noc_on``
-        [S] column (0.0/1.0 per-cell NoC-move gates) — where
-        ``sweep0`` is the per-cell [S] vector of job-local sweep
-        counters; calling it twice with the same static shape tuple
-        reuses the cached jit program (``trace_count("scenario_pt")``
-        does not move)."""
+        profile, pprofile, widx)`` — ``price``/``embf`` are the
+        per-cell [S] regional price and embodied-factor columns,
+        ``profile`` the [S, 24] grid-intensity rows and ``pprofile``
+        the [S, 24] electricity-price rows (neutral cells pass 0.0 /
+        1.0 / flat-at-ci / flat-at-price); mesh_noc engines take an
+        extra trailing ``noc_on`` [S] column and window-schedule
+        engines a trailing ``sched_on`` [S] column (0.0/1.0 per-cell
+        move gates) — where ``sweep0`` is the per-cell [S] vector of
+        job-local sweep counters; calling it twice with the same static
+        shape tuple reuses the cached jit program
+        (``trace_count("scenario_pt")`` does not move)."""
         return self._pt_fn(int(S), int(n), int(seg), int(swap_every),
                            bool(collect_samples))
 
@@ -2121,7 +2276,7 @@ class ScenarioEngine:
                            swap_every: int, seed: int, mins, medians,
                            weights, pair_mask, ci, widx,
                            price=None, embf=None, profile=None,
-                           noc_on=None,
+                           pprofile=None, noc_on=None, sched_on=None,
                            collect_samples: bool = True,
                            mesh=None, segment: Optional[int] = None,
                            checkpoint=None, resume: bool = True,
@@ -2134,17 +2289,20 @@ class ScenarioEngine:
         rows / exchange gates, ``mins``/``medians`` the per-cell
         normalizer rows, ``ci`` the per-cell grid carbon intensities and
         ``widx`` the per-cell workload indices into this engine's
-        workload tuple. ``price``/``embf``/``profile`` are the optional
-        per-cell regional axes ([S] electricity prices, [S] embodied
-        factors, [S, 24] grid-intensity profiles); omitted axes
-        synthesize their neutral columns (0.0 / 1.0 / flat-at-ci), so
-        legacy scalar-CI grids compile and run the exact same program —
-        the columns are always part of the jitted signature and
-        ``trace_count("scenario_pt")`` stays flat across axis mixes.
-        ``noc_on`` ([S], mesh_noc engines only) gates the per-cell NoC
-        move level as runtime data (default: all-on for live-NoC
-        spaces, all-off for frozen ones), so mixed legacy-replay and
-        NoC-searching cells share one compile.
+        workload tuple. ``price``/``embf``/``profile``/``pprofile``
+        are the optional per-cell regional axes ([S] electricity
+        prices, [S] embodied factors, [S, 24] grid-intensity profiles,
+        [S, 24] electricity-price profiles); omitted axes synthesize
+        their neutral columns (0.0 / 1.0 / flat-at-ci /
+        flat-at-price), so legacy scalar-CI grids compile and run the
+        exact same program — the columns are always part of the jitted
+        signature and ``trace_count("scenario_pt")`` stays flat across
+        axis mixes. ``noc_on`` ([S], mesh_noc engines only) gates the
+        per-cell NoC move level as runtime data (default: all-on for
+        live-NoC spaces, all-off for frozen ones) and ``sched_on``
+        ([S], window-schedule engines only) gates the per-cell
+        schedule move level the same way, so mixed legacy-replay and
+        axis-searching cells share one compile.
         ``mesh`` (optional) shards the scenario axis.
 
         ``segment``/``checkpoint``/``resume``/``archives`` mirror
@@ -2183,8 +2341,8 @@ class ScenarioEngine:
                 raise ValueError(
                     f"widx out of range for {len(self.workloads)} workloads")
             ci_a = np.asarray(ci, np.float64).reshape(S)
-            price_a, embf_a, profile_a = self._region_cols(
-                S, ci_a, price, embf, profile)
+            price_a, embf_a, profile_a, pprofile_a = self._region_cols(
+                S, ci_a, price, embf, profile, pprofile)
             mesh_comm = self.cfg.comm == "mesh_noc"
             noc_a = None
             if mesh_comm:
@@ -2195,6 +2353,17 @@ class ScenarioEngine:
             elif noc_on is not None:
                 raise ValueError(
                     "noc_on is only meaningful for mesh_noc engines")
+            win_sched = self.cfg.schedule == "window"
+            sched_a = None
+            if win_sched:
+                sched_a = (np.full(
+                    S, 1.0 if self.space.sched_live else 0.0, np.float64)
+                    if sched_on is None
+                    else np.asarray(sched_on, np.float64).reshape(S))
+            elif sched_on is not None:
+                raise ValueError(
+                    "sched_on is only meaningful for window-schedule "
+                    "engines")
             arrays = dict(
                 v0=v0,
                 temps=np.asarray(temps, np.float64).reshape(S, n),
@@ -2207,10 +2376,13 @@ class ScenarioEngine:
                 price=price_a,
                 embf=embf_a,
                 profile=profile_a,
+                pprofile=pprofile_a,
                 widx=widx_a,
             )
             if mesh_comm:
                 arrays["noc_on"] = noc_a
+            if win_sched:
+                arrays["sched_on"] = sched_a
             if mesh is not None:
                 from repro.distributed.sharding import shard_scenarios
 
@@ -2222,9 +2394,12 @@ class ScenarioEngine:
                     jnp.asarray(arrays["ci"]), jnp.asarray(arrays["price"]),
                     jnp.asarray(arrays["embf"]),
                     jnp.asarray(arrays["profile"]),
+                    jnp.asarray(arrays["pprofile"]),
                     jnp.asarray(arrays["widx"]))
             if mesh_comm:
                 args = args + (jnp.asarray(arrays["noc_on"]),)
+            if win_sched:
+                args = args + (jnp.asarray(arrays["sched_on"]),)
 
             from repro.pathfinding.resume import (
                 run_segmented,
@@ -2242,6 +2417,16 @@ class ScenarioEngine:
                     extra["comm"] = np.frombuffer(
                         self.cfg.comm.encode(), dtype=np.uint8)
                     extra["noc_on"] = noc_a
+                if self.cfg.schedule != "fixed":
+                    # the window encoding reshapes the row the same way:
+                    # pre-schedule checkpoints must mismatch cleanly,
+                    # while fixed-schedule fingerprints stay byte-
+                    # identical to pre-PR ones
+                    extra["schedule"] = np.frombuffer(
+                        self.cfg.schedule.encode(), dtype=np.uint8)
+                    extra["sched_on"] = sched_a
+                if not np.all(pprofile_a == price_a[:, None]):
+                    extra["pprofile"] = pprofile_a
                 fp = segment_fingerprint(
                     "scenario_pt", v0=v0, temps=arrays["temps"],
                     swap_every=swap_every, seed=seed,
@@ -2271,7 +2456,8 @@ class ScenarioEngine:
             def fresh():
                 keys0, cost0, vec0 = self._init_fn(S, n)(
                     jnp.asarray(arrays["v0"]), args[1], args[2], args[3],
-                    args[5], args[6], args[7], args[8], args[9], key0)
+                    args[5], args[6], args[7], args[8], args[9],
+                    args[10], key0)
                 bi0 = jnp.argmin(cost0, axis=1)
                 best_v0 = jnp.take_along_axis(
                     jnp.asarray(arrays["v0"]), bi0[:, None, None],
@@ -2399,7 +2585,9 @@ def get_scenario_engine(workloads: Sequence[GEMMWorkload],
            DEFAULT_MAX_CHIPLETS, use_pallas,
            tuple(db.load_profile), db.router_area_frac,
            (space.comm, space.noc_live) if space is not None else
-           (comm_mod.resolve_comm(None), False))
+           (comm_mod.resolve_comm(None), False),
+           (space.schedule, space.sched_live) if space is not None else
+           (sched_mod.resolve_schedule(None), False))
     return cached_evaluator(
         _SCENARIO_ENGINES, key, db,
         lambda: ScenarioEngine(workloads, db, tile_sizes, space,

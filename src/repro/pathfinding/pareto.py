@@ -757,8 +757,14 @@ class ScenarioSweep:
     # REPRO_COMM_MODEL-resolved default; "mesh_noc" adds the per-chiplet
     # mesh-dims / NoI-entry axes to every cell's search)
     comm: Optional[str] = None
+    # schedule model of the searched DesignSpace (None = the
+    # REPRO_SCHEDULE-resolved default; "window" adds the per-design
+    # start-hour / duty-shape axes so every cell co-optimizes *when*
+    # its designs run against the region's 24h grid profile)
+    schedule: Optional[str] = None
 
-    def run(self, workloads: Union[GEMMWorkload, Sequence[GEMMWorkload]],
+    def run(self, workloads: Union[GEMMWorkload, Sequence[GEMMWorkload],
+                                   "ScenarioSpec"],
             template: Union[str, Template] = "T1",
             db: TechDB = DEFAULT_DB, device: bool = True,
             budget: Optional[int] = None,
@@ -772,11 +778,36 @@ class ScenarioSweep:
         incumbents, RNG streams and sweep counters) plus every per-cell
         frontier archive at each boundary; ``resume=True`` restores the
         newest valid snapshot, continuing bit-identically to the
-        uninterrupted run. Device path only."""
+        uninterrupted run. Device path only.
+
+        ``workloads`` also accepts a
+        :class:`~repro.pathfinding.scenario.ScenarioSpec` — the unified
+        frozen description of the whole sweep. The spec then supplies
+        the workloads, regions, comm/schedule models and the
+        budget/segment/checkpoint knobs; passing any of those loose
+        kwargs alongside a spec is an error (one source of truth)."""
         from repro.pathfinding.batch import fit_region_normalizers
         from repro.pathfinding.pathfinder import Pathfinder
+        from repro.pathfinding.scenario import ScenarioSpec
         from repro.pathfinding.strategies import _check_budget, _resolve_key
 
+        if isinstance(workloads, ScenarioSpec):
+            spec = workloads
+            if (budget is not None or checkpoint_dir is not None
+                    or segment is not None):
+                raise ValueError(
+                    "budget/segment/checkpoint_dir ride inside the "
+                    "ScenarioSpec; don't also pass them to run()")
+            sweep = dataclasses.replace(
+                self, regions=spec.region_map(),
+                comm=spec.comm if spec.comm is not None else self.comm,
+                schedule=(spec.schedule if spec.schedule is not None
+                          else self.schedule))
+            return sweep.run(
+                list(spec.workloads), template=template, db=db,
+                device=device, budget=spec.budget, key=key,
+                checkpoint_dir=spec.checkpoint_dir, resume=spec.resume,
+                segment=spec.segment)
         _check_budget(budget)
         if checkpoint_dir is not None and not device:
             raise ValueError(
@@ -823,7 +854,7 @@ class ScenarioSweep:
                     f"population {nc} ({k} directions x {strat.n_chains} "
                     f"chains); total budget must be >= "
                     f"{nc * len(cells)}")
-        space = DesignSpace(db, comm=self.comm)
+        space = DesignSpace(db, comm=self.comm, schedule=self.schedule)
         norm_of: Dict[Tuple[int, str], object] = {}
         for wi, wl in enumerate(workloads):
             fitted = fit_region_normalizers(
@@ -844,7 +875,8 @@ class ScenarioSweep:
             db_s = dataclasses.replace(db, **reg.db_overrides())
             pf = Pathfinder(wl, tpl, db=db_s, device=False,
                             norm=norm_of[(wi, region)],
-                            space=DesignSpace(db_s, comm=self.comm))
+                            space=DesignSpace(db_s, comm=self.comm,
+                                              schedule=self.schedule))
             res = pf.search(strategy=self.strategy, budget=cell_budget,
                             key=fold_cell_key(base, idx))
             sc = Scenario(wl, region, reg.carbon_intensity, reg)
@@ -894,6 +926,7 @@ class ScenarioSweep:
         embf = np.array([reg.emb_factor for *_, reg in cells],
                         dtype=np.float64)
         profile = np.stack([reg.profile_array() for *_, reg in cells])
+        pprofile = np.stack([reg.price_array() for *_, reg in cells])
         widx = np.array([wi for wi, *_ in cells], dtype=np.int32)
         v0 = np.stack([
             space.encode_many([
@@ -908,7 +941,7 @@ class ScenarioSweep:
             v0, temps, sweeps, strat.swap_every, seed=base, mins=mins,
             medians=medians, weights=weights, pair_mask=pair, ci=ci,
             widx=widx, price=price, embf=embf, profile=profile,
-            mesh=self._mesh(), segment=segment,
+            pprofile=pprofile, mesh=self._mesh(), segment=segment,
             archives=archives, checkpoint=_checkpointer(checkpoint_dir),
             resume=resume)
         # best-by-template per cell: ONE stacked re-evaluation of the
@@ -922,7 +955,8 @@ class ScenarioSweep:
         wt = np.tile(np.asarray(tpl.weights, dtype=np.float64), (S, 1))
         cost_f, _ = engine.evaluate_cost(enc_f, mins, medians, wt, ci,
                                          widx, price=price, embf=embf,
-                                         profile=profile)
+                                         profile=profile,
+                                         pprofile=pprofile)
         cache = SimCache()
         evals_cell = nc * (1 + sweeps)
         scenarios: List[Scenario] = []

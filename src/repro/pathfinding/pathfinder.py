@@ -178,6 +178,17 @@ class Pathfinder:
         device path (one compile; see
         :class:`repro.pathfinding.device.ScenarioEngine`).
 
+        ``sweep`` accepts either a :class:`ScenarioSweep` (search knobs)
+        or a :class:`~repro.pathfinding.scenario.ScenarioSpec` — the
+        unified frozen description of the whole run (workloads, regions,
+        comm/schedule models, budget/segment/checkpoint knobs). With a
+        spec, this Pathfinder contributes only its workload default (a
+        spec without workloads is impossible), template, TechDB and
+        device flag; passing the loose ``workloads``/``regions``/
+        ``budget``/``checkpoint_dir``/``segment`` kwargs alongside a
+        spec is an error. The loose ``regions=`` mapping keeps working
+        bit-identically but is deprecated in favor of the spec.
+
         ``budget`` is the sweep's *total* evaluation budget, split evenly
         across cells. ``checkpoint_dir`` makes the sweep interruptible:
         the grid scan advances in ``segment``-sweep chunks and snapshots
@@ -188,6 +199,7 @@ class Pathfinder:
         import dataclasses
 
         from repro.pathfinding.pareto import ScenarioSweep
+        from repro.pathfinding.scenario import ScenarioSpec
 
         if not self.batched:
             raise ValueError(
@@ -195,8 +207,27 @@ class Pathfinder:
                 "ScenarioSweep rebuilds per-cell objectives from the "
                 "TechDB and cannot carry a custom or chipletgym "
                 "evaluate_fn")
+        if isinstance(sweep, ScenarioSpec):
+            if (workloads is not None or regions is not None
+                    or budget is not None or checkpoint_dir is not None
+                    or segment is not None):
+                raise ValueError(
+                    "a ScenarioSpec already carries the workloads, "
+                    "regions and budget/segment/checkpoint knobs; don't "
+                    "also pass them to run_scenarios()")
+            return ScenarioSweep().run(
+                sweep, template=self.template, db=self.db,
+                device=self.device, key=key)
         sweep = sweep or ScenarioSweep()
         if regions is not None:
+            import warnings
+
+            warnings.warn(
+                "run_scenarios(regions=...) is deprecated: pass a "
+                "repro.pathfinding.scenario.ScenarioSpec (unified "
+                "workloads + {name: Region} + run knobs) as the first "
+                "argument instead",
+                DeprecationWarning, stacklevel=2)
             sweep = dataclasses.replace(sweep, regions=dict(regions))
         wls = [self.wl] if workloads is None else list(workloads)
         return sweep.run(wls, template=self.template, db=self.db,

@@ -103,6 +103,17 @@ def segment_fingerprint(kind: str, *, v0, temps, swap_every, seed, mins,
     written before the axes existed do not fingerprint-match and are
     ignored rather than mis-resumed.
 
+    The schedule policy is the one exception to that materialize-first
+    rule: the ``schedule`` model name (and the 24h ``pprofile`` price
+    curve on the serving path) enters the fingerprint **only when
+    non-neutral** — a ``"window"`` bucket hashes its schedule bytes, a
+    ``"fixed"`` one hashes exactly the pre-scheduling field set. The
+    neutral ``(0, 0)`` schedule is bit-invisible to the search, so a
+    pre-scheduling checkpoint must stay byte-identical and keep
+    resuming; a windowed search, whose encoded rows are wider and whose
+    cost surface moves with the duty table, must never resume from a
+    fixed-schedule snapshot (and vice versa).
+
     The kernel fast path is deliberately *outside* the fingerprint: the
     Pallas gather (``use_pallas`` / ``REPRO_PATHFINDER_PALLAS``) is an
     execution detail of the same search, exact on the integer prefix

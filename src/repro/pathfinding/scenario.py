@@ -1,0 +1,88 @@
+"""Unified scenario configuration: one value for *what to sweep*.
+
+Scenario inputs used to travel as loose kwargs — a workload list here, a
+``{name: carbon_intensity}`` mapping there, comm model on the sweep,
+budget/checkpoint knobs on ``run(...)`` — and the serving layer carried
+a third spelling (scalar ``carbon_intensity`` + ``electricity_price`` +
+``emb_factor`` + ``grid_profile`` fields on ``JobSpec``).
+:class:`ScenarioSpec` is the single frozen, hashable description all of
+them accept:
+
+* :meth:`repro.pathfinding.pareto.ScenarioSweep.run` takes a spec in
+  place of its loose ``workloads`` argument,
+* :meth:`repro.pathfinding.pathfinder.Pathfinder.run_scenarios` takes a
+  spec in place of a sweep,
+* :class:`repro.serving.jobs.JobSpec` collapses its loose regional
+  fields into one :class:`~repro.core.regions.Region` (``region=``).
+
+The old spellings keep working bit-identically (deprecation shims warn
+once per call site); only the *packaging* of the inputs changed, never
+the math, the RNG streams, or the checkpoint fingerprints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+from repro.core.comm import COMM_MODELS
+from repro.core.regions import Region, RegionLike, as_region
+from repro.core.schedule import SCHEDULE_MODELS
+from repro.core.workload import GEMMWorkload
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """What to sweep: workloads x deployment regions, plus the design
+    axes (comm / schedule models) and the run knobs (budget, segment
+    size, checkpointing) that used to arrive as loose kwargs.
+
+    ``regions`` accepts a ``{name: Region-or-float}`` mapping (floats
+    are historical scalar-CI regions) and normalizes it to a sorted-free,
+    insertion-ordered tuple of ``(name, Region)`` pairs so the spec is
+    hashable — usable directly as a cache key. ``comm`` / ``schedule``
+    of ``None`` defer to the environment-resolved defaults
+    (``REPRO_COMM_MODEL`` / ``REPRO_SCHEDULE``), exactly like the loose
+    kwargs did."""
+
+    workloads: Tuple[GEMMWorkload, ...]
+    regions: Tuple[Tuple[str, Region], ...]
+    comm: Optional[str] = None
+    schedule: Optional[str] = None
+    budget: Optional[int] = None
+    segment: Optional[int] = None
+    checkpoint_dir: Optional[str] = None
+    resume: bool = True
+
+    def __post_init__(self) -> None:
+        wls = self.workloads
+        if isinstance(wls, GEMMWorkload):
+            wls = (wls,)
+        wls = tuple(wls)
+        if not wls or not all(isinstance(w, GEMMWorkload) for w in wls):
+            raise ValueError(
+                "ScenarioSpec.workloads needs >= 1 GEMMWorkload")
+        object.__setattr__(self, "workloads", wls)
+        regs = self.regions
+        items = regs.items() if isinstance(regs, dict) else regs
+        norm = tuple((str(name), as_region(spec)) for name, spec in items)
+        if not norm:
+            raise ValueError("ScenarioSpec.regions needs >= 1 region")
+        object.__setattr__(self, "regions", norm)
+        if self.comm is not None and self.comm not in COMM_MODELS:
+            raise ValueError(
+                f"unknown comm model {self.comm!r}; "
+                f"options: {sorted(COMM_MODELS)}")
+        if self.schedule is not None \
+                and self.schedule not in SCHEDULE_MODELS:
+            raise ValueError(
+                f"unknown schedule model {self.schedule!r}; "
+                f"options: {sorted(SCHEDULE_MODELS)}")
+
+    def region_map(self) -> Dict[str, Region]:
+        """The ``{name: Region}`` view (insertion order preserved)."""
+        return dict(self.regions)
+
+
+#: what sweep entry points accept where a region mapping is expected
+RegionsLike = Union[Dict[str, RegionLike],
+                    Tuple[Tuple[str, Region], ...]]

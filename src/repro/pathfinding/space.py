@@ -24,13 +24,21 @@ per-chiplet NoC columns appended after the chiplet block (total width
     [noc_col + 2i + 1]  entry_idx      (index into comm.ENTRY_PLACEMENTS)
                         for i < n_chiplets; -1 padding beyond.
 
+Under ``schedule="window"`` (see :mod:`repro.core.schedule`) the row
+grows two whole-design schedule columns appended after every per-chiplet
+block::
+
+    [sched_col]      start_hour (0..23)
+    [sched_col + 1]  shape_idx  (index into the SCHEDULE_SHAPES table)
+
 Legacy vectors round-trip unchanged: the NoC columns exist only when the
-space's ``comm`` resolves to ``mesh_noc``. When the mesh model is forced
-through the ``REPRO_COMM_MODEL`` env var (rather than requested
-explicitly), the axes are *frozen* at the bit-neutral ``(0, 0)`` mesh —
-sampling fills neutral values without consuming RNG draws and move
-generators skip NoC moves — so legacy searches replay identically
-through the mesh program.
+space's ``comm`` resolves to ``mesh_noc``, the schedule columns only
+when ``schedule`` resolves to ``window``. When either model is forced
+through its env var (``REPRO_COMM_MODEL`` / ``REPRO_SCHEDULE``) rather
+than requested explicitly, the axes are *frozen* at their bit-neutral
+``(0, 0)`` values — sampling fills neutral values without consuming RNG
+draws and move generators skip the corresponding moves — so legacy
+searches replay identically through the widened program.
 
 ``encode``/``decode`` round-trip exactly for every valid system (the
 stack tuple is canonicalized to sorted order, which is what the SA move
@@ -44,6 +52,7 @@ from typing import List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core import comm as comm_mod
+from repro.core import schedule as sched_mod
 from repro.core.chiplet import Chiplet
 from repro.core.system import HISystem, is_valid
 from repro.core.techdb import (
@@ -83,6 +92,12 @@ class DesignSpace:
     # the mesh program. Passing comm="mesh_noc" explicitly makes the
     # axes live search dimensions.
     comm: Optional[str] = None
+    # Schedule model ("fixed" | "window"). None resolves through the
+    # REPRO_SCHEDULE env var (default "fixed"). Same freeze semantics as
+    # comm: env-forced window keeps the (start_hour, shape) axes frozen
+    # at the neutral (0, 0) schedule (sched_live False); passing
+    # schedule="window" explicitly makes them live search dimensions.
+    schedule: Optional[str] = None
 
     def __post_init__(self):
         db = self.db
@@ -91,6 +106,10 @@ class DesignSpace:
         set_(self, "comm", comm_mod.resolve_comm(explicit))
         set_(self, "noc_live",
              self.comm == "mesh_noc" and explicit == "mesh_noc")
+        explicit_sched = self.schedule
+        set_(self, "schedule", sched_mod.resolve_schedule(explicit_sched))
+        set_(self, "sched_live",
+             self.schedule == "window" and explicit_sched == "window")
         set_(self, "arrays", tuple(db.array_sizes))
         set_(self, "nodes", tuple(db.tech_nodes))
         set_(self, "memories", tuple(db.memories))
@@ -185,12 +204,24 @@ class DesignSpace:
         w = COL_CHIP + 3 * self.max_chiplets
         if self.comm == "mesh_noc":
             w += 2 * self.max_chiplets
+        if self.schedule == "window":
+            w += 2
         return w
 
     @property
     def noc_col(self) -> int:
         """First NoC column (mesh_noc spaces only)."""
         return COL_CHIP + 3 * self.max_chiplets
+
+    @property
+    def sched_col(self) -> int:
+        """First schedule column (window spaces only) — after every
+        per-chiplet block, so NoC-bearing and legacy layouts both append
+        the schedule pair at the tail."""
+        col = COL_CHIP + 3 * self.max_chiplets
+        if self.comm == "mesh_noc":
+            col += 2 * self.max_chiplets
+        return col
 
     def chip_cols(self, i: int):
         base = COL_CHIP + 3 * i
@@ -242,6 +273,11 @@ class DesignSpace:
                 cm, ce = self.noc_cols(i)
                 hi[cm] = len(comm_mod.MESH_DIMS) - 1
                 hi[ce] = len(comm_mod.ENTRY_PLACEMENTS) - 1
+        if self.schedule == "window":
+            sc = self.sched_col
+            lo[sc] = lo[sc + 1] = 0   # whole-design axes: never padded
+            hi[sc] = sched_mod.HOURS_PER_DAY - 1
+            hi[sc + 1] = sched_mod.n_schedule_shapes() - 1
         return lo, hi
 
     # -- encode / decode ----------------------------------------------------
@@ -279,6 +315,15 @@ class DesignSpace:
             raise ValueError(
                 "system carries NoC assignments but the space is "
                 "comm='legacy'; build the DesignSpace with comm='mesh_noc'")
+        if self.schedule == "window":
+            sched = sys.schedule or sched_mod.SCHED_NEUTRAL
+            sc = self.sched_col
+            vec[sc], vec[sc + 1] = sched
+        elif sys.schedule is not None:
+            raise ValueError(
+                "system carries a schedule but the space is "
+                "schedule='fixed'; build the DesignSpace with "
+                "schedule='window'")
         return vec
 
     def encode_many(self, systems: Sequence[HISystem]) -> np.ndarray:
@@ -309,6 +354,10 @@ class DesignSpace:
             noc = tuple((int(vec[self.noc_col + 2 * i]),
                          int(vec[self.noc_col + 2 * i + 1]))
                         for i in range(n))
+        schedule = None
+        if self.schedule == "window":
+            sc = self.sched_col
+            schedule = (int(vec[sc]), int(vec[sc + 1]))
         return HISystem(
             chiplets=tuple(chips),
             style=style,
@@ -320,6 +369,7 @@ class DesignSpace:
             pkg_3d=pkg3, proto_3d=proto3,
             stack=stack,
             noc=noc,
+            schedule=schedule,
         )
 
     def decode_many(self, batch: np.ndarray) -> List[HISystem]:
@@ -357,6 +407,12 @@ class DesignSpace:
                 noc_ok = ((m >= 0) & (m < len(comm_mod.MESH_DIMS))
                           & (e >= 0) & (e < len(comm_mod.ENTRY_PLACEMENTS)))
                 ok &= np.where(i < n, noc_ok, True)
+
+        if self.schedule == "window":
+            sc = self.sched_col
+            st, sh = v[:, sc], v[:, sc + 1]
+            ok &= ((st >= 0) & (st < sched_mod.HOURS_PER_DAY)
+                   & (sh >= 0) & (sh < sched_mod.n_schedule_shapes()))
 
         popcount = sum((stack >> i) & 1 for i in range(self.max_chiplets))
         no3d, no25d, nostack = p3 == -1, p25 == -1, stack == 0
@@ -450,6 +506,19 @@ class DesignSpace:
                 cm, ce = self.noc_cols(i)
                 v[:, cm] = np.where(active[:, i], m[:, i], -1)
                 v[:, ce] = np.where(active[:, i], e[:, i], -1)
+
+        if self.schedule == "window":
+            sc = self.sched_col
+            if self.sched_live:
+                # live axes: uniform (start_hour, shape) per design
+                v[:, sc] = rng.integers(0, sched_mod.HOURS_PER_DAY, count)
+                v[:, sc + 1] = rng.integers(
+                    0, sched_mod.n_schedule_shapes(), count)
+            else:
+                # frozen (env-forced) axes: neutral always-on schedule,
+                # no RNG draws, so the legacy sampling stream is untouched
+                v[:, sc] = 0
+                v[:, sc + 1] = 0
         return v
 
     @staticmethod

@@ -268,7 +268,13 @@ class SimulatedAnnealing:
     def search(self, space: DesignSpace, objective: Objective,
                budget: Optional[int] = None,
                key: Optional[int] = None) -> SearchResult:
-        from repro.core.sa import SAConfig, propose, random_system, seed_noc
+        from repro.core.sa import (
+            SAConfig,
+            propose,
+            random_system,
+            seed_noc,
+            seed_schedule,
+        )
         from repro.pathfinding.pareto import FrontierFeed
 
         _check_budget(budget)
@@ -282,6 +288,8 @@ class SimulatedAnnealing:
         cur = self.initial or random_system(rng, db, cfg.max_chiplets)
         if space.noc_live:
             cur = seed_noc(cur)
+        if space.sched_live:
+            cur = seed_schedule(cur)
         cur_m = objective.evaluate(cur)
         cur_c = objective.cost(cur_m)
         if collect:
@@ -296,7 +304,8 @@ class SimulatedAnnealing:
                 if budget is not None and evals >= budget:
                     break
                 cand = propose(cur, rng, db, cfg.max_chiplets,
-                               noc_moves=space.noc_live)
+                               noc_moves=space.noc_live,
+                               schedule_moves=space.sched_live)
                 if cand is cur:
                     continue
                 m = objective.evaluate(cand)
@@ -379,6 +388,10 @@ class ParallelTempering:
             from repro.core.sa import seed_noc
 
             chains = [seed_noc(s) for s in chains]
+        if space.sched_live:
+            from repro.core.sa import seed_schedule
+
+            chains = [seed_schedule(s) for s in chains]
         if objective.device:
             return self._search_device(space, objective, budget, key,
                                        chains, temps)
@@ -399,7 +412,8 @@ class ParallelTempering:
             if k <= 0:
                 break
             cands = [propose(chains[i], rng, db, space.max_chiplets,
-                             noc_moves=space.noc_live)
+                             noc_moves=space.noc_live,
+                             schedule_moves=space.sched_live)
                      for i in range(k)]
             enc = space.encode_many(cands)
             mb = objective.evaluate_encoded(enc, space)

@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.regions import Region, as_region
 from repro.core.techdb import HOURS_PER_DAY
 from repro.pathfinding.pareto import ParetoArchive, ScalarizationSweep
 
@@ -89,10 +90,15 @@ class JobSpec:
     # regional lifecycle axes (neutral defaults reproduce the
     # scalar-CI job bit-for-bit): $/kWh electricity price, embodied
     # multiplier, optional 24h grid-intensity profile (None = flat at
-    # carbon_intensity)
+    # carbon_intensity). These loose fields are the historical API;
+    # ``region`` is the unified one — a single
+    # :class:`~repro.core.regions.Region` value carrying all the axes
+    # (including the 24h price curve the loose fields never exposed).
+    # Setting both at once is an error.
     electricity_price: float = 0.0
     emb_factor: float = 1.0
     grid_profile: Optional[Tuple[float, ...]] = None
+    region: Optional[Region] = None
     budget: Optional[int] = None
     key: Optional[int] = None
     # communication model of the searched design space: "legacy" (the
@@ -100,6 +106,13 @@ class JobSpec:
     # NoI-entry axes). Jobs with different comm models never share a
     # bucket — the encoded row width and the fused program differ.
     comm: str = "legacy"
+    # schedule model (repro.core.schedule): "fixed" (the bit-pinned
+    # default) or "window" (adds the per-design start-hour/duty-shape
+    # axes so the search co-optimizes *when* the design runs). Like
+    # ``comm`` it is part of the bucket shape — and it enters the
+    # checkpoint fingerprint only when non-neutral, so pre-scheduling
+    # checkpoints stay byte-identical.
+    schedule: str = "fixed"
     # per-job overrides of the service's adaptive-budget knobs (None =
     # service default); only read when the service runs adaptive=True
     stall_segments: Optional[int] = None
@@ -113,27 +126,77 @@ class JobSpec:
                     f"grid_profile needs {HOURS_PER_DAY} hourly entries, "
                     f"got {len(prof)}")
             object.__setattr__(self, "grid_profile", prof)
+        if self.region is not None:
+            if (self.carbon_intensity != 0.475
+                    or self.electricity_price != 0.0
+                    or self.emb_factor != 1.0
+                    or self.grid_profile is not None):
+                raise ValueError(
+                    "pass the deployment region either as the unified "
+                    "region= value or as the loose carbon_intensity/"
+                    "electricity_price/emb_factor/grid_profile fields, "
+                    "not both")
+            object.__setattr__(self, "region", as_region(self.region))
+        elif (self.carbon_intensity != 0.475
+                or self.electricity_price != 0.0
+                or self.emb_factor != 1.0
+                or self.grid_profile is not None):
+            import warnings
+
+            warnings.warn(
+                "loose JobSpec regional fields (carbon_intensity/"
+                "electricity_price/emb_factor/grid_profile) are "
+                "deprecated: pass the unified region="
+                "repro.core.regions.Region(...) instead (bit-identical, "
+                "and it carries the 24h price curve too)",
+                DeprecationWarning, stacklevel=3)
         from repro.core.comm import COMM_MODELS
 
         if self.comm not in COMM_MODELS:
             raise ValueError(
                 f"unknown comm model {self.comm!r}; "
                 f"options: {sorted(COMM_MODELS)}")
+        from repro.core.schedule import SCHEDULE_MODELS
+
+        if self.schedule not in SCHEDULE_MODELS:
+            raise ValueError(
+                f"unknown schedule model {self.schedule!r}; "
+                f"options: {sorted(SCHEDULE_MODELS)}")
 
     def bucket_key(self) -> tuple:
-        """(total chains, swap cadence, comm model): the static shape of
-        the batched program this job can share."""
+        """(total chains, swap cadence, comm model[, schedule]): the
+        static shape of the batched program this job can share. The
+        schedule model joins the tuple only when non-fixed, so legacy
+        bucket keys are unchanged."""
         k = self.strategy.weight_rows().shape[0]
-        return (k * self.strategy.n_chains, self.strategy.swap_every,
-                self.comm)
+        key = (k * self.strategy.n_chains, self.strategy.swap_every,
+               self.comm)
+        if self.schedule != "fixed":
+            key = key + (self.schedule,)
+        return key
+
+    def resolved_region(self) -> Region:
+        """The job's deployment region: the unified ``region`` value
+        when given, else the loose legacy fields assembled into an
+        equivalent (bit-identical) :class:`Region`."""
+        if self.region is not None:
+            return self.region
+        return Region(carbon_intensity=float(self.carbon_intensity),
+                      electricity_price=float(self.electricity_price),
+                      emb_factor=float(self.emb_factor),
+                      grid_profile=self.grid_profile)
 
     def profile_row(self) -> np.ndarray:
-        """float64[24] grid-intensity row for this job's slot; ``None``
-        synthesizes the flat row at ``carbon_intensity`` (in-program
-        correction exactly +0.0, i.e. the scalar model)."""
-        if self.grid_profile is None:
-            return np.full(HOURS_PER_DAY, np.float64(self.carbon_intensity))
-        return np.asarray(self.grid_profile, dtype=np.float64)
+        """float64[24] grid-intensity row for this job's slot; a region
+        without a profile synthesizes the flat row at its carbon
+        intensity (in-program correction exactly +0.0, i.e. the scalar
+        model)."""
+        return self.resolved_region().profile_array()
+
+    def pprofile_row(self) -> np.ndarray:
+        """float64[24] electricity-price row for this job's slot (flat
+        at the region's scalar price when it carries no curve)."""
+        return self.resolved_region().price_array()
 
 
 @dataclasses.dataclass(frozen=True)

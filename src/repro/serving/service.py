@@ -76,9 +76,11 @@ class _Bucket:
     segments."""
 
     def __init__(self, service: "PathfinderService", nc: int,
-                 swap_every: int, comm: str = "legacy"):
+                 swap_every: int, comm: str = "legacy",
+                 schedule: str = "fixed"):
         self.nc, self.swap_every, self.comm = nc, swap_every, comm
-        self.engine = service._engine_for(comm)
+        self.schedule = schedule
+        self.engine = service._engine_for(comm, schedule)
         self.space = self.engine.space
         S = service.slots
         key_np = service._key_np(0)
@@ -108,12 +110,20 @@ class _Bucket:
         self.price = np.zeros(S, np.float64)
         self.embf = np.ones(S, np.float64)
         self.profile = np.repeat(self.ci[:, None], HOURS_PER_DAY, axis=1)
+        # electricity-price curve of each lane: flat at the lane's
+        # scalar price (zeros here) is the exact neutral element — the
+        # in-program price correction is +0.0
+        self.pprofile = np.repeat(self.price[:, None], HOURS_PER_DAY,
+                                  axis=1)
         self.widx = np.zeros(S, np.int32)
         # per-lane NoC-move gate of mesh_noc buckets: constant 1.0 (every
         # job here asked for the mesh model), so lanes stay independent
         # of co-tenants; legacy buckets never pass the column at all
         self.noc_on = np.full(S, 1.0 if comm == "mesh_noc" else 0.0,
                               np.float64)
+        # same story for the schedule-move gate of window buckets
+        self.sched_on = np.full(S, 1.0 if schedule == "window" else 0.0,
+                                np.float64)
         self.slot_jobs: List[Optional[SearchJob]] = [None] * S
 
     def free_slot(self) -> Optional[int]:
@@ -144,6 +154,7 @@ class _Bucket:
         self.price[s] = 0.0
         self.embf[s] = 1.0
         self.profile[s] = 0.475
+        self.pprofile[s] = 0.0
         self.widx[s] = 0
 
 
@@ -205,9 +216,10 @@ class PathfinderService:
         self.base_key = _resolve_key(key)
         self.engine = get_scenario_engine(self.workloads, db, space=space)
         self.space = self.engine.space
-        #: per-comm warm engines; buckets resolve theirs lazily so a
-        #: service only pays for the comm models its jobs actually use
-        self._engines = {self.space.comm: self.engine}
+        #: per-(comm, schedule) warm engines; buckets resolve theirs
+        #: lazily so a service only pays for the models its jobs use
+        self._engines = {(self.space.comm, self.space.schedule):
+                         self.engine}
         self._widx = {wl.name: i for i, wl in enumerate(self.workloads)}
         self._norms: Dict[Tuple[int, float], object] = {}
         self._buckets: Dict[tuple, _Bucket] = {}
@@ -453,9 +465,11 @@ class PathfinderService:
                 jnp.asarray(b.w), jnp.asarray(b.pair),
                 jnp.asarray(b.ci), jnp.asarray(b.price),
                 jnp.asarray(b.embf), jnp.asarray(b.profile),
-                jnp.asarray(b.widx))
+                jnp.asarray(b.pprofile), jnp.asarray(b.widx))
             if b.comm == "mesh_noc":
                 args = args + (jnp.asarray(b.noc_on),)
+            if b.schedule == "window":
+                args = args + (jnp.asarray(b.sched_on),)
             carry, ys = fn(*args)
             # np.array (not asarray): device outputs view as read-only
             # numpy and the slot state is written in place at boundaries
@@ -595,23 +609,32 @@ class PathfinderService:
         if self.checkpoint_root is not None and job.fingerprint is None:
             from repro.pathfinding.strategies import _checkpointer
 
+            region = self._region_of(spec)
             fp_extra = {}
             if b.comm != "legacy":
                 # comm model enters the envelope (legacy fingerprints
                 # stay byte-identical to pre-NoC checkpoints)
                 fp_extra["comm"] = np.frombuffer(
                     b.comm.encode(), np.uint8)
+            if b.schedule != "fixed":
+                # same convention for the schedule model: only a
+                # non-neutral schedule enters the envelope, so every
+                # pre-scheduling checkpoint stays byte-identical
+                fp_extra["schedule"] = np.frombuffer(
+                    b.schedule.encode(), np.uint8)
+            if region.price_profile is not None:
+                fp_extra["pprofile"] = spec.pprofile_row()
             job.fingerprint = segment_fingerprint(
                 "serve_job", v0=v0, temps=job.temps,
                 swap_every=b.swap_every, seed=job.seed, mins=job.mins,
                 medians=job.medians, weights=job.weights,
                 pair_mask=job.pair_mask, ci=np.float64(
-                    spec.carbon_intensity),
+                    region.carbon_intensity),
                 segment=seg, collect=True,
                 workload=np.frombuffer(spec.workload.encode(), np.uint8),
                 job=np.frombuffer(spec.job_id.encode(), np.uint8),
-                price=np.float64(spec.electricity_price),
-                embf=np.float64(spec.emb_factor),
+                price=np.float64(region.electricity_price),
+                embf=np.float64(region.emb_factor),
                 profile=spec.profile_row(), **fp_extra)
             job.checkpointer = _checkpointer(
                 os.path.join(self.checkpoint_root, spec.job_id))
@@ -621,10 +644,12 @@ class PathfinderService:
         b.med[slot] = job.medians
         b.w[slot] = job.weights
         b.pair[slot] = job.pair_mask
-        b.ci[slot] = float(spec.carbon_intensity)
-        b.price[slot] = float(spec.electricity_price)
-        b.embf[slot] = float(spec.emb_factor)
+        slot_region = self._region_of(spec)
+        b.ci[slot] = float(slot_region.carbon_intensity)
+        b.price[slot] = float(slot_region.electricity_price)
+        b.embf[slot] = float(slot_region.emb_factor)
         b.profile[slot] = spec.profile_row()
+        b.pprofile[slot] = spec.pprofile_row()
         b.widx[slot] = job.widx
 
         if job.carry is None and job.checkpointer is not None:
@@ -658,7 +683,8 @@ class PathfinderService:
                     jnp.asarray(b.med), jnp.asarray(b.w),
                     jnp.asarray(b.ci), jnp.asarray(b.price),
                     jnp.asarray(b.embf), jnp.asarray(b.profile),
-                    jnp.asarray(b.widx), jax.random.PRNGKey(0))
+                    jnp.asarray(b.pprofile), jnp.asarray(b.widx),
+                    jax.random.PRNGKey(0))
                 cost_row = np.asarray(cost0)[slot]
                 vec_row = np.asarray(vec0)[slot]
                 key_row = np.asarray(
@@ -704,22 +730,22 @@ class PathfinderService:
 
     # -- shared warm resources ----------------------------------------------
 
-    def _engine_for(self, comm: str):
-        """Warm :class:`ScenarioEngine` for a bucket's comm model. The
-        default-space engine built in ``__init__`` serves its own comm;
-        any other model gets a lazily-built engine over a same-shape
-        :class:`DesignSpace` (shared process-wide by
+    def _engine_for(self, comm: str, schedule: str = "fixed"):
+        """Warm :class:`ScenarioEngine` for a bucket's (comm, schedule)
+        models. The default-space engine built in ``__init__`` serves
+        its own pair; any other combination gets a lazily-built engine
+        over a same-shape :class:`DesignSpace` (shared process-wide by
         :func:`get_scenario_engine`'s cache)."""
-        eng = self._engines.get(comm)
+        eng = self._engines.get((comm, schedule))
         if eng is None:
             from repro.pathfinding.device import get_scenario_engine
             from repro.pathfinding.space import DesignSpace
 
             sp = DesignSpace(self.db,
                              max_chiplets=self.space.max_chiplets,
-                             comm=comm)
+                             comm=comm, schedule=schedule)
             eng = get_scenario_engine(self.workloads, self.db, space=sp)
-            self._engines[comm] = eng
+            self._engines[(comm, schedule)] = eng
         return eng
 
     def _bucket(self, bkey: tuple) -> _Bucket:
@@ -743,8 +769,8 @@ class PathfinderService:
                 jnp.asarray(b.v), jnp.asarray(b.mins),
                 jnp.asarray(b.med), jnp.asarray(b.w), jnp.asarray(b.ci),
                 jnp.asarray(b.price), jnp.asarray(b.embf),
-                jnp.asarray(b.profile), jnp.asarray(b.widx),
-                jax.random.PRNGKey(0))
+                jnp.asarray(b.profile), jnp.asarray(b.pprofile),
+                jnp.asarray(b.widx), jax.random.PRNGKey(0))
             fn = b.engine.segment_runner(
                 self.slots, b.nc, self.segment, b.swap_every,
                 collect_samples=True)
@@ -756,29 +782,30 @@ class PathfinderService:
                 jnp.asarray(b.w), jnp.asarray(b.pair),
                 jnp.asarray(b.ci), jnp.asarray(b.price),
                 jnp.asarray(b.embf), jnp.asarray(b.profile),
-                jnp.asarray(b.widx))
+                jnp.asarray(b.pprofile), jnp.asarray(b.widx))
             if b.comm == "mesh_noc":
                 args = args + (jnp.asarray(b.noc_on),)
+            if b.schedule == "window":
+                args = args + (jnp.asarray(b.sched_on),)
             carry, _ = fn(*args)
             np.asarray(carry[0])      # block until compiled + run
 
     @staticmethod
     def _region_of(spec: JobSpec) -> Region:
-        """The job's full deployment region (all four axes)."""
-        return Region(carbon_intensity=float(spec.carbon_intensity),
-                      electricity_price=float(spec.electricity_price),
-                      emb_factor=float(spec.emb_factor),
-                      grid_profile=spec.grid_profile)
+        """The job's full deployment region (all axes): the unified
+        ``region`` value when given, else the loose legacy fields."""
+        return spec.resolved_region()
 
     def _norm_rows(self, widx: int, region: Region,
                    space=None) -> Tuple[np.ndarray, np.ndarray]:
         # Region is frozen/hashable, so the cache key distinguishes jobs
         # that share a scalar CI but differ in price/embodied/profile —
         # a profile axis can never alias another job's normalizer rows.
-        # The comm model joins the key: mesh-space normalizers see the
-        # NoC cost terms and must not alias legacy rows.
+        # The comm and schedule models join the key: mesh-space
+        # normalizers see the NoC cost terms, window-space ones the
+        # duty-cycled operational terms; neither may alias legacy rows.
         space = self.space if space is None else space
-        nz = self._norms.get((widx, region, space.comm))
+        nz = self._norms.get((widx, region, space.comm, space.schedule))
         if nz is None:
             from repro.pathfinding.batch import fit_region_normalizers
 
@@ -786,7 +813,7 @@ class PathfinderService:
                 self.workloads[widx], [region], self.db,
                 samples=self.norm_samples, seed=self.norm_seed,
                 space=space)[0]
-            self._norms[(widx, region, space.comm)] = nz
+            self._norms[(widx, region, space.comm, space.schedule)] = nz
         mins, medians = nz.weights_arrays()
         return (np.asarray(mins, np.float64),
                 np.asarray(medians, np.float64))

@@ -1,0 +1,115 @@
+"""Unified ScenarioSpec API tests: normalization + hashability of the
+frozen spec, loose-kwarg conflict detection, and the deprecation shims
+(which must warn exactly once per call site and replay the loose
+spellings bit-identically)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import TEMPLATES, workload
+from repro.core.regions import Region, measured_profile
+from repro.pathfinding import (
+    Pathfinder,
+    ScalarizationSweep,
+    ScenarioSpec,
+    ScenarioSweep,
+)
+from repro.serving.jobs import JobSpec
+
+WL = workload(1)
+
+
+def test_spec_normalizes_and_hashes():
+    """Floats coerce to scalar-CI Regions, a single workload wraps to a
+    tuple, and two equal-content specs hash equal — the spec is usable
+    as a cache key directly."""
+    spec = ScenarioSpec(workloads=WL, regions={"a": 0.1, "b": Region(0.5)})
+    assert spec.workloads == (WL,)
+    assert all(isinstance(r, Region) for _, r in spec.regions)
+    again = ScenarioSpec(workloads=(WL,),
+                         regions=(("a", Region(0.1)), ("b", Region(0.5))))
+    assert spec == again and hash(spec) == hash(again)
+    assert list(spec.region_map()) == ["a", "b"]
+    assert spec.region_map()["b"].carbon_intensity == 0.5
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown comm model"):
+        ScenarioSpec(workloads=WL, regions={"a": 0.1}, comm="torus")
+    with pytest.raises(ValueError, match="unknown schedule model"):
+        ScenarioSpec(workloads=WL, regions={"a": 0.1}, schedule="nightly")
+    with pytest.raises(ValueError, match="1 region"):
+        ScenarioSpec(workloads=WL, regions={})
+    with pytest.raises(ValueError, match="GEMMWorkload"):
+        ScenarioSpec(workloads=(), regions={"a": 0.1})
+
+
+def test_spec_rejects_loose_kwargs_alongside():
+    spec = ScenarioSpec(workloads=WL, regions={"a": 0.1}, budget=100)
+    with pytest.raises(ValueError, match="ride inside"):
+        ScenarioSweep().run(spec, budget=50)
+    pf = Pathfinder(WL, TEMPLATES["T1"])
+    with pytest.raises(ValueError, match="already carries"):
+        pf.run_scenarios(spec, budget=50)
+    with pytest.raises(ValueError, match="already carries"):
+        pf.run_scenarios(spec, regions={"a": 0.1})
+
+
+@pytest.mark.slow
+def test_spec_replays_loose_regions_bits():
+    """The deprecated ``run_scenarios(regions=...)`` spelling warns and
+    produces the bit-exact trajectory of the equivalent ScenarioSpec."""
+    strat = ScalarizationSweep(directions=2, n_chains=2, sweeps=10)
+    pf = Pathfinder(WL, TEMPLATES["T1"])
+    with pytest.warns(DeprecationWarning, match="run_scenarios"):
+        sf_loose = pf.run_scenarios(
+            ScenarioSweep(strategy=strat),
+            regions={"a": 0.1, "b": 0.7}, budget=200, key=5)
+    spec = ScenarioSpec(workloads=(WL,), regions={"a": 0.1, "b": 0.7},
+                        budget=200)
+    sf_spec = pf.run_scenarios(spec, key=5)
+    # the spec path defaults the sweep's strategy; rebuild it to match
+    sf_spec2 = ScenarioSweep(strategy=strat).run(spec, key=5)
+    del sf_spec
+    for s in sf_loose.scenarios:
+        rl = sf_loose.results[s.key]
+        rs = sf_spec2.results[s.key]
+        assert rl.best_cost == rs.best_cost
+        assert np.array_equal(np.asarray(rl.history),
+                              np.asarray(rs.history))
+        assert rl.best == rs.best
+
+
+def test_jobspec_region_unifies_loose_fields():
+    """The loose regional JobSpec fields warn once and collapse into a
+    Region whose slot rows are bit-identical to the unified spelling."""
+    with pytest.warns(DeprecationWarning,
+                      match="loose JobSpec regional fields"):
+        loose = JobSpec(job_id="j", workload="w", carbon_intensity=0.1,
+                        electricity_price=0.05,
+                        grid_profile=measured_profile("hydro"))
+    unified = JobSpec(
+        job_id="j", workload="w",
+        region=Region(carbon_intensity=0.1, electricity_price=0.05,
+                      grid_profile=measured_profile("hydro")))
+    assert loose.resolved_region() == unified.resolved_region()
+    assert np.array_equal(loose.profile_row(), unified.profile_row())
+    assert np.array_equal(loose.pprofile_row(), unified.pprofile_row())
+    # identical search knobs -> identical bucket
+    assert loose.bucket_key() == unified.bucket_key()
+
+
+def test_jobspec_region_conflict_and_clean_path():
+    # the unified spelling raises no deprecation noise
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        spec = JobSpec(job_id="j", workload="w", region=Region(0.2))
+    assert spec.resolved_region().carbon_intensity == 0.2
+    # neutral loose defaults are silent too (nothing to migrate)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        JobSpec(job_id="j", workload="w")
+    with pytest.raises(ValueError, match="not both"):
+        JobSpec(job_id="j", workload="w", region=Region(0.2),
+                carbon_intensity=0.1)

@@ -1,0 +1,274 @@
+"""Carbon-aware temporal-scheduling tests: the windowed effective
+intensity vs a direct convolution reference (property-based), exact
+neutrality of the (0, 0) schedule, scalar-vs-device parity of the
+window model, bit-identity of legacy replay through the env-forced
+window program, compile-count flatness across schedule mixes, and the
+host-side schedule move/seeding satellites."""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import schedule as sched_mod
+from repro.core import workload
+from repro.core.carbon import effective_intensity, effective_price
+from repro.core.evaluate import evaluate
+from repro.core.regions import measured_profile
+from repro.core.sa import propose, random_system, seed_schedule
+from repro.core.scalesim import SimCache
+from repro.core.system import is_valid
+from repro.core.techdb import DEFAULT_DB, HOURS_PER_DAY
+from repro.core.templates import METRIC_FIELDS
+from repro.pathfinding import DesignSpace, get_device_evaluator
+from repro.pathfinding.device import get_scenario_engine, trace_count
+
+WL = workload(1)
+PARITY_FIELDS = METRIC_FIELDS + (
+    "l_compute_rd_s", "l_d2d_s", "l_dram_wr_s", "e_compute_j", "e_d2d_j",
+    "d2d_bits", "macs")
+
+# a db whose grid *and* price curves are non-flat, so the schedule axis
+# actually moves both operational metrics
+PRICE_CURVE = tuple(0.05 + 0.03 * np.sin(2 * np.pi * h / HOURS_PER_DAY)
+                    for h in range(HOURS_PER_DAY))
+PROFILED_DB = dataclasses.replace(
+    DEFAULT_DB, electricity_price=0.07,
+    grid_profile=measured_profile("solar-heavy"),
+    price_profile=PRICE_CURVE)
+
+
+# ---------------------------------------------------------------------------
+# Shape-table structure + the windowed-intensity convolution property
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_tables_structure():
+    """Row 0 *is* the per-db load profile (the neutral gather), every
+    row sums to 1, window rows carry exactly their duty-hour count."""
+    tab = sched_mod.schedule_tables(DEFAULT_DB)
+    assert tab.shape == (sched_mod.n_schedule_shapes(), HOURS_PER_DAY)
+    assert tuple(tab[0]) == tuple(
+        float(x) for x in DEFAULT_DB.load_profile)
+    for r, row_ in enumerate(tab):
+        assert float(np.sum(row_)) == pytest.approx(1.0, abs=1e-12), r
+    for hours, row_ in zip(sched_mod.SCHEDULE_WINDOW_HOURS, tab[1:]):
+        assert np.count_nonzero(row_) == hours
+        assert float(row_.max()) == pytest.approx(1.0 / hours)
+
+
+def test_validate_schedule_errors():
+    with pytest.raises(ValueError, match="start hour"):
+        sched_mod.validate_schedule((HOURS_PER_DAY, 0))
+    with pytest.raises(ValueError, match="shape index"):
+        sched_mod.validate_schedule((0, sched_mod.n_schedule_shapes()))
+    with pytest.raises(ValueError, match="entries"):
+        sched_mod.validate_schedule((1, 2, 3))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=0.01, max_value=2.0),
+       st.lists(st.floats(min_value=0.0, max_value=2.0),
+                min_size=HOURS_PER_DAY, max_size=HOURS_PER_DAY),
+       st.integers(min_value=0, max_value=HOURS_PER_DAY - 1),
+       st.integers(min_value=0,
+                   max_value=sched_mod.n_schedule_shapes() - 1))
+def test_windowed_intensity_matches_direct_convolution(
+        ci, profile, start, shape):
+    """Property: the windowed effective intensity equals the direct
+    convolution reference — the shape row rolled to the start hour,
+    dotted against the 24h profile (plus the base-intensity remainder
+    of any load mass the roll can't move)."""
+    load = sched_mod.schedule_load_row((start, shape), DEFAULT_DB)
+    ref_load = np.roll(sched_mod.schedule_tables(DEFAULT_DB)[shape],
+                       start)
+    assert load == tuple(ref_load)        # the roll identity, exact
+    got = effective_intensity(ci, tuple(profile), load)
+    direct = float(np.dot(profile, ref_load)) \
+        + ci * (1.0 - float(np.sum(ref_load)))
+    assert got == pytest.approx(direct, rel=1e-9, abs=1e-9)
+    # the price twin shares the formulation verbatim
+    assert effective_price(ci, tuple(profile), load) == got
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(min_value=0.0, max_value=2.0),
+       st.integers(min_value=0, max_value=HOURS_PER_DAY - 1),
+       st.integers(min_value=0,
+                   max_value=sched_mod.n_schedule_shapes() - 1))
+def test_flat_profile_neutral_under_any_schedule(ci, start, shape):
+    """A flat grid curve contributes exactly +0.0 no matter *when* the
+    design runs: every (profile[h] - ci) term is exactly zero."""
+    load = sched_mod.schedule_load_row((start, shape), DEFAULT_DB)
+    assert effective_intensity(ci, (ci,) * HOURS_PER_DAY, load) == ci
+
+
+# ---------------------------------------------------------------------------
+# Exact neutrality of the (0, 0) schedule + scalar-vs-device parity
+# ---------------------------------------------------------------------------
+
+
+def test_neutral_schedule_is_bit_invisible():
+    """A system pinned at the neutral (0, 0) schedule evaluates
+    bit-identically to the same system with no schedule at all — under
+    the default db *and* a db with non-flat grid/price curves. This is
+    the invariant that lets the forced window program replay every
+    legacy golden."""
+    rng = random.Random(9)
+    for db in (DEFAULT_DB, PROFILED_DB):
+        cache = SimCache()
+        for _ in range(12):
+            sys = random_system(rng)
+            neutral = dataclasses.replace(
+                sys, schedule=sched_mod.SCHED_NEUTRAL)
+            a = evaluate(sys, WL, db, cache=cache)
+            b = evaluate(neutral, WL, db, cache=cache)
+            for f in PARITY_FIELDS:
+                assert getattr(a, f) == getattr(b, f), f
+    assert sched_mod.schedule_load_row(sched_mod.SCHED_NEUTRAL) == tuple(
+        float(x) for x in DEFAULT_DB.load_profile)
+
+
+def _scheduled_systems(count: int, seed: int):
+    rng = random.Random(seed)
+    out = []
+    for _ in range(count):
+        sys = random_system(rng)
+        out.append(dataclasses.replace(sys, schedule=(
+            rng.randrange(HOURS_PER_DAY),
+            rng.randrange(sched_mod.n_schedule_shapes()))))
+    return out
+
+
+def test_schedule_scalar_device_parity_240():
+    """The fused device program under ``schedule="window"`` matches
+    scalar ``evaluate`` within 1e-6 relative on every metric over >= 200
+    random schedule-carrying systems (2.5D and 3D styles both present),
+    with non-flat grid *and* price curves in play."""
+    systems = _scheduled_systems(240, 20260808)
+    styles = {s.style for s in systems}
+    assert {"2.5D", "3D"} <= styles, f"population too narrow: {styles}"
+    space = DesignSpace(PROFILED_DB, schedule="window")
+    assert space.sched_live
+    dev = get_device_evaluator(WL, PROFILED_DB, space=space)
+    mb = dev.metrics(space.encode_many(systems))
+    cache = SimCache()
+    for i, sys in enumerate(systems):
+        m = evaluate(sys, WL, PROFILED_DB, cache=cache)
+        for f in PARITY_FIELDS:
+            ref = getattr(m, f)
+            got = float(getattr(mb, f)[i])
+            assert got == pytest.approx(ref, rel=1e-6, abs=1e-300), (
+                f"{sys.describe()} schedule={sys.schedule} field {f}: "
+                f"scalar {ref} device {got}")
+
+
+# ---------------------------------------------------------------------------
+# Env-forced window program: legacy replay bit-identity + compile flatness
+# ---------------------------------------------------------------------------
+
+
+def _scenario_args(space, S, n):
+    v0 = np.stack([space.sample(n, 10 + s) for s in range(S)])
+    return v0, dict(
+        temps=np.tile(np.geomspace(2.0, 0.01, n), (S, 1)),
+        sweeps=16, swap_every=2, seed=3, mins=np.zeros((S, 6)),
+        medians=np.ones((S, 6)),
+        weights=np.tile(np.ones(6) / 6, (S, n, 1)),
+        pair_mask=np.ones((S, n - 1), bool), ci=np.full(S, 0.475),
+        widx=np.zeros(S, np.int32))
+
+
+@pytest.mark.slow
+def test_env_forced_window_replays_legacy_bits(monkeypatch):
+    """``REPRO_SCHEDULE=window`` reroutes default DesignSpaces through
+    the windowed program with the schedule axes frozen at the neutral
+    (0, 0); the fused scenario trajectory must stay bit-identical to
+    the fixed-schedule run."""
+    S, n = 2, 6
+    legacy = DesignSpace(DEFAULT_DB, schedule="fixed")
+    v0, kw = _scenario_args(legacy, S, n)
+    eng_l = get_scenario_engine((WL,), DEFAULT_DB, space=legacy)
+    r_l = eng_l.parallel_tempering(v0, **kw)
+
+    monkeypatch.setenv(sched_mod.SCHEDULE_ENV_VAR, "window")
+    forced = DesignSpace(DEFAULT_DB)
+    assert forced.schedule == "window" and not forced.sched_live
+    v0_f, kw_f = _scenario_args(forced, S, n)
+    # same systems, wider rows: the legacy columns must round-trip
+    assert np.array_equal(v0_f[:, :, :legacy.width], v0)
+    eng_f = get_scenario_engine((WL,), DEFAULT_DB, space=forced)
+    r_f = eng_f.parallel_tempering(v0_f, **kw_f)
+
+    assert np.array_equal(r_f.best_cost, r_l.best_cost)
+    assert np.array_equal(r_f.history, r_l.history)
+    assert np.array_equal(r_f.best_enc[:, :legacy.width], r_l.best_enc)
+
+
+@pytest.mark.slow
+def test_schedule_shapes_are_data_not_shape():
+    """One fused compile serves every (start hour, duty shape) mix:
+    re-running the scenario grid with different encoded schedule axes
+    and a different per-cell ``sched_on`` mask must not retrace."""
+    S, n = 2, 6
+    space = DesignSpace(DEFAULT_DB, schedule="window")
+    eng = get_scenario_engine((WL,), DEFAULT_DB, space=space)
+    v0, kw = _scenario_args(space, S, n)
+    eng.parallel_tempering(v0, **kw)
+    c_pt, c_init = trace_count("scenario_pt"), trace_count("scenario_init")
+
+    # move every design to a different start hour and duty shape and
+    # flip one cell's move gate: runtime data only
+    v1 = v0.copy()
+    sc = space.sched_col
+    v1[..., sc] = (v1[..., sc] + 5) % HOURS_PER_DAY
+    v1[..., sc + 1] = (v1[..., sc + 1] + 1) % sched_mod.n_schedule_shapes()
+    r1 = eng.parallel_tempering(v1, sched_on=np.array([1.0, 0.0]), **kw)
+    assert trace_count("scenario_pt") == c_pt
+    assert trace_count("scenario_init") == c_init
+    assert np.isfinite(r1.best_cost).all()
+
+
+# ---------------------------------------------------------------------------
+# Host-side satellites: seeding, schedule moves, spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_seed_schedule_and_schedule_moves():
+    rng = random.Random(11)
+    sys = seed_schedule(random_system(rng))
+    assert sys.schedule == sched_mod.SCHED_NEUTRAL
+    assert seed_schedule(sys) is sys     # idempotent
+    moved = 0
+    cur = sys
+    for _ in range(200):
+        cand = propose(cur, rng, DEFAULT_DB, schedule_moves=True)
+        assert is_valid(cand, DEFAULT_DB)
+        sched_mod.validate_schedule(cand.schedule)
+        if cand.schedule != cur.schedule:
+            moved += 1
+        cur = cand
+    assert moved > 0, "schedule move level never fired in 200 proposals"
+
+
+def test_propose_without_schedule_moves_stays_fixed():
+    rng = random.Random(12)
+    cur = random_system(rng)
+    for _ in range(50):
+        cur = propose(cur, rng, DEFAULT_DB)
+        assert cur.schedule is None
+
+
+def test_jobspec_schedule_validation():
+    from repro.serving.jobs import JobSpec
+
+    spec = JobSpec(job_id="j", workload="w", schedule="window")
+    assert spec.bucket_key()[-1] == "window"
+    fixed = JobSpec(job_id="j", workload="w")
+    # fixed-schedule jobs keep the exact legacy bucket key
+    assert len(fixed.bucket_key()) == 3
+    assert fixed.bucket_key()[-1] == "legacy"
+    with pytest.raises(ValueError, match="unknown schedule model"):
+        JobSpec(job_id="j", workload="w", schedule="nightly")
